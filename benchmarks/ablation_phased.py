@@ -1,0 +1,58 @@
+"""Ablation (beyond-paper finding): Algorithm-1-faithful *phased* selection
+vs the single-pass *index* selection (our default).
+
+The phased variant gives under-explored pairs absolute budget priority;
+when K(t) outpaces the per-cell visit rate, well-learned good pairs are
+crowded out and utility decreases as estimates improve. Measured on a
+stationary network against the expectation oracle."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import FULL, Row, timed
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.core.baselines import BasePolicy
+from repro.core.cocs import COCSConfig, COCSPolicy
+from repro.core.network import HFLNetworkSim
+from repro.core.selection import SelectionProblem, greedy_select
+from repro.core.utility import realized_utility
+
+
+class _OracleP(BasePolicy):
+    def select(self, rd):
+        return greedy_select(SelectionProblem(rd.true_p, rd.costs,
+                                              self._budgets(), rd.eligible))
+
+
+def _run(phased: bool, horizon: int):
+    sim = HFLNetworkSim(MNIST_CONVEX, seed=1, mobility=0.0, jitter=0.05)
+    pol = COCSPolicy(COCSConfig(num_clients=50, num_edge_servers=3,
+                                horizon=horizon, budget=3.5, h_t=5,
+                                phased=phased))
+    oracle = _OracleP(50, 3, 3.5)
+    gaps, util = [], []
+    for t in range(horizon):
+        rd = sim.round(t)
+        a = pol.select(rd)
+        pol.update(rd, a)
+        u = realized_utility(a, rd)
+        util.append(u)
+        gaps.append(realized_utility(oracle.select(rd), rd) - u)
+    r = np.cumsum(gaps)
+    k = horizon // 3
+    return (np.mean(util[:k]), np.mean(util[-k:]),
+            (r[k] - r[0]) / k, (r[-1] - r[-k]) / k)
+
+
+def run() -> List[Row]:
+    horizon = 900 if FULL else 450
+    rows: List[Row] = []
+    for phased in (True, False):
+        us, (u0, u1, s0, s1) = timed(lambda: _run(phased, horizon))
+        name = "phased_alg1" if phased else "index_default"
+        rows.append((f"ablation_cocs_{name}", us,
+                     f"util_early={u0:.2f};util_late={u1:.2f};"
+                     f"regret_slope_early={s0:.2f};regret_slope_late={s1:.2f}"))
+    return rows

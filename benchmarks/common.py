@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: every benchmark returns CSV rows
+(name, us_per_call, derived)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def timed(fn: Callable, repeats: int = 1) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    dt = (time.perf_counter() - t0) / repeats
+    return dt * 1e6, out
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,21 @@
+"""Fig. 4c/4d: impact of the per-ES budget B on COCS utility."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import FULL, Row, timed
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.core.utility import run_bandit_experiment
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    horizon = 200 if FULL else 120
+    for budget in (3.5, 5.0, 10.0):
+        us, res = timed(lambda: run_bandit_experiment(
+            MNIST_CONVEX, horizon=horizon, seed=2, which=["Oracle", "COCS"],
+            budget=budget))
+        rows.append((f"fig4cd_budget_{budget}", us,
+                     f"cocs_cum={res.cumulative('COCS')[-1]:.0f};"
+                     f"oracle_cum={res.cumulative('Oracle')[-1]:.0f}"))
+    return rows

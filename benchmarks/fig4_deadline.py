@@ -1,0 +1,21 @@
+"""Fig. 4e/4f: impact of the deadline tau_dead on COCS utility."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import FULL, Row, timed
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.core.utility import run_bandit_experiment
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    horizon = 200 if FULL else 120
+    for deadline in (2.0, 4.0, 8.0):
+        us, res = timed(lambda: run_bandit_experiment(
+            MNIST_CONVEX, horizon=horizon, seed=2, which=["Oracle", "COCS"],
+            deadline=deadline))
+        rows.append((f"fig4ef_deadline_{deadline}", us,
+                     f"cocs_cum={res.cumulative('COCS')[-1]:.0f};"
+                     f"oracle_cum={res.cumulative('Oracle')[-1]:.0f}"))
+    return rows

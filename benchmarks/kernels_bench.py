@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks (substrate): Pallas interpret-mode correctness is
+tested in tests/; here we time the jnp reference paths (what actually runs
+on this CPU container) and report derived bandwidth/throughput."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, timed
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+from repro.models.layers import chunked_linear_recurrence
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+
+    # masked aggregate: 16 clients x 4M params
+    c, d = 16, 4_000_000
+    p = jnp.zeros((d,), jnp.float32)
+    deltas = jax.random.normal(key, (c, d), jnp.float32)
+    w = jnp.ones((c,))
+    f = jax.jit(masked_aggregate_ref)
+    f(p, deltas, w).block_until_ready()
+    us, _ = timed(lambda: f(p, deltas, w).block_until_ready(), repeats=3)
+    gb = (c * d * 4 + d * 8) / 1e9
+    rows.append(("kernel_masked_aggregate_16x4M", us,
+                 f"GBps={gb / (us / 1e6):.2f}"))
+
+    # attention: b1 h8 kv2 s1024 d64
+    q = jax.random.normal(key, (1, 8, 1024, 64))
+    k = jax.random.normal(key, (1, 2, 1024, 64))
+    v = jax.random.normal(key, (1, 2, 1024, 64))
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    f(q, k, v).block_until_ready()
+    us, _ = timed(lambda: f(q, k, v).block_until_ready(), repeats=3)
+    flops = 4 * 8 * 1024 * 1024 * 64 / 2  # causal half
+    rows.append(("kernel_attention_ref_s1024", us,
+                 f"GFLOPs={flops / (us / 1e6) / 1e9:.1f}"))
+
+    # chunked recurrence: b1 h8 t1024 d64
+    r = jax.random.normal(key, (1, 8, 1024, 64))
+    kk = jax.random.normal(key, (1, 8, 1024, 64))
+    vv = jax.random.normal(key, (1, 8, 1024, 64))
+    lw = -jnp.abs(jax.random.normal(key, (1, 8, 1024, 64))) * 0.1
+    f = jax.jit(lambda r, k, v, w: chunked_linear_recurrence(
+        r, k, v, w, chunk=64)[0])
+    f(r, kk, vv, lw).block_until_ready()
+    us, _ = timed(lambda: f(r, kk, vv, lw).block_until_ready(), repeats=3)
+    rows.append(("kernel_rwkv_chunked_t1024", us, "chunk=64"))
+    return rows

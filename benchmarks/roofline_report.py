@@ -1,0 +1,63 @@
+"""Roofline summary from the dry-run sweep (results/dryrun_all.jsonl).
+
+Prints one row per (arch x shape x mesh) with the three roofline terms and
+the dominant bottleneck; the authoritative table lives in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun_all.jsonl")
+
+
+def load_records(path: str = RESULTS) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = []
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    # de-dup: keep the latest record per key
+    seen = {}
+    for r in recs:
+        seen[(r.get("arch"), r.get("shape"), r.get("multi_pod"),
+              r.get("mode"))] = r
+    return list(seen.values())
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    recs = load_records()
+    if not recs:
+        return [("roofline_report", 0.0,
+                 f"no dry-run results at {RESULTS}; run "
+                 "`python -m repro.launch.dryrun --all --both-meshes "
+                 f"--out {RESULTS}`")]
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    skipped = sum(1 for r in recs if r.get("status") == "skipped")
+    failed = sum(1 for r in recs if r.get("status") == "error")
+    rows.append(("roofline_sweep_status", 0.0,
+                 f"ok={ok};skipped={skipped};failed={failed}"))
+    for r in sorted(recs, key=lambda r: (r.get("arch") or "",
+                                         r.get("shape") or "",
+                                         bool(r.get("multi_pod")))):
+        name = (f"roofline_{r['arch']}_{r['shape']}_"
+                f"{'mp' if r.get('multi_pod') else 'sp'}")
+        if r.get("status") != "ok":
+            rows.append((name, 0.0, f"status={r.get('status')}"))
+            continue
+        ro = r["roofline"]
+        rows.append((name, r.get("elapsed_s", 0) * 1e6,
+                     f"compute_s={ro['compute_s']:.3e};"
+                     f"memory_s={ro['memory_s']:.3e};"
+                     f"collective_s={ro['collective_s']:.3e};"
+                     f"dominant={ro['dominant']};"
+                     f"useful={ro.get('useful_flops_frac', 0):.2f}"))
+    return rows

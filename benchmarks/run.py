@@ -1,0 +1,42 @@
+"""Benchmark runner: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Quick mode by default;
+REPRO_BENCH_FULL=1 restores paper-scale horizons.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "benchmarks.fig2_participation",
+    "benchmarks.fig3_convex_utility",
+    "benchmarks.fig4_training",
+    "benchmarks.fig4_budget",
+    "benchmarks.fig4_deadline",
+    "benchmarks.fig567_nonconvex",
+    "benchmarks.ablation_phased",
+    "benchmarks.kernels_bench",
+    "benchmarks.roofline_report",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:  # noqa: BLE001 — keep the suite going
+            failures += 1
+            print(f"{modname},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

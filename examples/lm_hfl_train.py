@@ -1,0 +1,15 @@
+"""LM-scale HFL: COCS selects which client token-shards participate in each
+edge round while a reduced assigned architecture trains — the integration of
+the paper's policy with the distributed training substrate.
+
+    PYTHONPATH=src python examples/lm_hfl_train.py --arch qwen2-1.5b --rounds 30
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] + (["--arch", "qwen2-1.5b"]
+                                  if not any(a.startswith("--arch")
+                                             or a == "--paper"
+                                             for a in sys.argv[1:]) else [])))

@@ -1,0 +1,11 @@
+"""Serving demo: batched autoregressive decode for any assigned arch
+(reduced variant) — prefill + KV-cache/recurrent-state decode loop.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""repro: COCS (context-aware online client selection) for hierarchical FL,
+reproduced as a production-grade multi-pod JAX framework."""
+
+__version__ = "0.1.0"

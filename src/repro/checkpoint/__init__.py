@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpoint import (latest_checkpoint, restore_pytree,
+                                         save_pytree)
+
+__all__ = ["latest_checkpoint", "restore_pytree", "save_pytree"]

@@ -1,0 +1,81 @@
+"""msgpack-based pytree checkpointing (atomic writes, step-indexed)."""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> dict:
+    a = np.asarray(x)
+    return {b"__nd__": True, b"dtype": a.dtype.name, b"shape": list(a.shape),
+            b"data": a.tobytes()}
+
+
+def _pack(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {k: _pack(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {b"__seq__": type(tree).__name__,
+                b"items": [_pack(v) for v in tree]}
+    return _encode_leaf(tree)
+
+
+def _unpack(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if b"__nd__" in obj:
+            name = obj[b"dtype"]
+            if isinstance(name, bytes):
+                name = name.decode()
+            a = np.frombuffer(obj[b"data"], dtype=np.dtype(name))
+            return a.reshape(obj[b"shape"]).copy()
+        if b"__seq__" in obj:
+            items = [_unpack(v) for v in obj[b"items"]]
+            kind = obj[b"__seq__"]
+            if isinstance(kind, bytes):
+                kind = kind.decode()
+            return tuple(items) if kind == "tuple" else items
+        return {(k.decode() if isinstance(k, bytes) else k): _unpack(v)
+                for k, v in obj.items()}
+    raise ValueError(f"unexpected msgpack node {type(obj)}")
+
+
+def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
+    """Write tree to <path>/ckpt_<step>.msgpack (or path directly if a file
+    name is given). Atomic: temp file + rename."""
+    tree = jax.tree.map(np.asarray, tree)
+    if step is not None:
+        os.makedirs(path, exist_ok=True)
+        final = os.path.join(path, f"ckpt_{step:08d}.msgpack")
+    else:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        final = path
+    payload = msgpack.packb(_pack(tree))
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(final) or ".")
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, final)
+    return final
+
+
+def restore_pytree(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _unpack(msgpack.unpackb(f.read(), strict_map_key=False))
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    pat = re.compile(r"ckpt_(\d+)\.msgpack$")
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        m = pat.match(name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, name), int(m.group(1))
+    return best

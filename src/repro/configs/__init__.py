@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (
+    INPUT_SHAPES, InputShape, ModelConfig, MoEConfig, SSMConfig,
+    active_param_count, param_count,
+)
+
+# arch id -> module (exact ids from the assignment table)
+_ARCH_MODULES = {
+    "kimi-k2-1t-a32b":       "repro.configs.kimi_k2_1t_a32b",
+    "qwen2-1.5b":            "repro.configs.qwen2_1_5b",
+    "rwkv6-1.6b":            "repro.configs.rwkv6_1_6b",
+    "zamba2-1.2b":           "repro.configs.zamba2_1_2b",
+    "qwen2.5-14b":           "repro.configs.qwen2_5_14b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "paligemma-3b":          "repro.configs.paligemma_3b",
+    "granite-8b":            "repro.configs.granite_8b",
+    "granite-20b":           "repro.configs.granite_20b",
+    "mixtral-8x22b":         "repro.configs.mixtral_8x22b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "InputShape", "ModelConfig", "MoEConfig",
+    "SSMConfig", "active_param_count", "all_configs", "get_config",
+    "param_count",
+]

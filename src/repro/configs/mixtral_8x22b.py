@@ -1,0 +1,17 @@
+"""Mixtral-8x22B — 8 experts top-2, sliding-window attention [arXiv:2401.04088]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    arch_type="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    head_dim=128,
+    sliding_window=4096,   # native SWA
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=16384),
+    source="arXiv:2401.04088",
+)

@@ -1,0 +1,16 @@
+from repro.core.cocs import COCSConfig, COCSPolicy, cocs_update_jax
+from repro.core.network import HFLNetworkSim, RoundData
+from repro.core.selection import (SelectionProblem, brute_force_select,
+                                  check_feasible, flgreedy_select,
+                                  greedy_select, max_cardinality_select,
+                                  selection_utility)
+from repro.core.utility import (ExperimentResult, make_policies,
+                                realized_utility, run_bandit_experiment)
+
+__all__ = [
+    "COCSConfig", "COCSPolicy", "ExperimentResult", "HFLNetworkSim",
+    "RoundData", "SelectionProblem", "brute_force_select", "check_feasible",
+    "cocs_update_jax", "flgreedy_select", "greedy_select",
+    "make_policies", "max_cardinality_select", "realized_utility",
+    "run_bandit_experiment", "selection_utility",
+]

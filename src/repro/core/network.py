@@ -1,0 +1,142 @@
+"""HFL wireless network simulator (Section III + VI-A of the paper).
+
+Models, per edge-aggregation round:
+  * client mobility (random waypoint walk) -> time-varying client-ES
+    eligibility (coverage radius) and distances;
+  * per-round available compute y_n ~ U[lo, hi] and bandwidth b_n ~ U[lo, hi];
+  * downlink/uplink channel: path loss 128.1 + 37.6 log10(d_km) with Rayleigh
+    small-scale fading; Shannon rate r = b log2(1 + P g / N0)  (Eq. 4);
+  * training latency tau = a_DT/r_DT + q/y + a_UT/r_UT            (Eq. 5);
+  * deadline outcome X = 1{tau <= tau_dead}                        (Eq. 6);
+  * rental cost c_n(y_n) = price_n * y_n (price ~ U[0.5, 2] per MHz).
+
+Contexts exposed to policies: phi = (normalized downlink rate, normalized
+compute) in [0, 1]^2 — exactly the paper's two observable dimensions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.paper_hfl import HFLExperimentConfig
+
+
+@dataclass
+class RoundData:
+    t: int
+    contexts: np.ndarray    # (N, M, 2) in [0,1]^2 (NaN where ineligible)
+    eligible: np.ndarray    # (N, M) bool
+    costs: np.ndarray       # (N,)
+    outcomes: np.ndarray    # (N, M) realized X (0/1)
+    true_p: np.ndarray      # (N, M) ground-truth participation probability
+    compute: np.ndarray     # (N,) y_n (Hz proxy)
+    bandwidth: np.ndarray   # (N,)
+
+
+def _dbm_to_watt(dbm: float) -> float:
+    return 10 ** (dbm / 10.0) / 1000.0
+
+
+class HFLNetworkSim:
+    """Deterministic given (cfg, seed). One call to ``round(t)`` per round."""
+
+    def __init__(self, cfg: HFLExperimentConfig, seed: int = 0,
+                 mc_true_p: int = 128, mobility: float = 0.15,
+                 jitter: float = 0.30):
+        self.cfg = cfg
+        self.mobility = mobility
+        self.rng = np.random.default_rng(seed)
+        self.mc_true_p = mc_true_p
+        n, m = cfg.num_clients, cfg.num_edge_servers
+        # ES positions on a circle; area = bounding box of coverage discs
+        ang = np.linspace(0, 2 * np.pi, m, endpoint=False)
+        self.es_pos = np.stack([1.5 * np.cos(ang), 1.5 * np.sin(ang)], -1)
+        self.area = 1.5 + cfg.cell_radius_km
+        self.client_pos = self.rng.uniform(-self.area, self.area, (n, 2))
+        self.price = self.rng.uniform(cfg.price_low, cfg.price_high, n)
+        # persistent per-client resource profile (heterogeneous clients);
+        # per-round availability jitters around it — this is what makes
+        # contexts informative (Holder-smooth, recurring) rather than iid
+        self.base_bw = self.rng.uniform(cfg.bandwidth_low, cfg.bandwidth_high, n)
+        self.base_comp = self.rng.uniform(cfg.compute_low, cfg.compute_high, n)
+        self.jitter = jitter
+        self.noise_psd_w = _dbm_to_watt(cfg.noise_dbm_per_hz)
+        self.tx_w = _dbm_to_watt(cfg.tx_power_dbm)
+        # context normalization ranges (min-max feature scaling, Sec. IV)
+        self._rate_hi = float(self._rate(cfg.bandwidth_high, 0.05, 4.0))
+        self._rate_lo = 0.0
+
+    # -- channel helpers ----------------------------------------------------
+
+    def _gain(self, d_km: np.ndarray, fading: np.ndarray) -> np.ndarray:
+        """Linear channel gain: path loss (dB) + Rayleigh |h|^2 ~ Exp(1)."""
+        pl_db = 128.1 + 37.6 * np.log10(np.maximum(d_km, 0.01))
+        return fading * 10 ** (-pl_db / 10.0)
+
+    def _rate(self, bandwidth, d_km, fading) -> np.ndarray:
+        g = self._gain(np.asarray(d_km, float), np.asarray(fading, float))
+        snr = self.tx_w * g / (self.noise_psd_w * np.asarray(bandwidth, float))
+        return bandwidth * np.log2(1.0 + snr)
+
+    def _latency(self, bandwidth, compute, d_km, fad_dt, fad_ut) -> np.ndarray:
+        c = self.cfg
+        r_dt = self._rate(bandwidth, d_km, fad_dt)
+        r_ut = self._rate(bandwidth, d_km, fad_ut)
+        with np.errstate(divide="ignore"):
+            return (c.update_bits / np.maximum(r_dt, 1e-9)
+                    + c.workload / np.maximum(compute, 1e-9)
+                    + c.update_bits / np.maximum(r_ut, 1e-9))
+
+    # -- per-round sampling ---------------------------------------------------
+
+    def _move_clients(self):
+        step = self.rng.normal(0.0, self.mobility, self.client_pos.shape)
+        self.client_pos = np.clip(self.client_pos + step,
+                                  -self.area, self.area)
+
+    def round(self, t: int) -> RoundData:
+        c = self.cfg
+        n, m = c.num_clients, c.num_edge_servers
+        self._move_clients()
+        d = np.linalg.norm(self.client_pos[:, None] - self.es_pos[None],
+                           axis=-1)                           # (N, M) km
+        eligible = d <= c.cell_radius_km
+        # ensure nobody is stranded (paper assumes N_m covers all clients)
+        stranded = ~eligible.any(axis=1)
+        if stranded.any():
+            eligible[stranded, np.argmin(d[stranded], axis=1)] = True
+        bandwidth = np.clip(
+            self.base_bw * (1 + self.jitter * self.rng.standard_normal(n)),
+            c.bandwidth_low, c.bandwidth_high)
+        compute = np.clip(
+            self.base_comp * (1 + self.jitter * self.rng.standard_normal(n)),
+            c.compute_low, c.compute_high)
+        # rental price per MHz of the resources the client brings this round
+        # (pricing b_n(f_n) ~ U[0.5,2] per MHz, Table I). cost_scale is the
+        # free unit constant, chosen so B=3.5 admits ~2-3 clients per ES —
+        # matching the magnitudes of Fig. 4b.
+        costs = 2.0 * self.price * bandwidth / 1e6
+        # realized fading for this round (shared DT/UT draw per pair)
+        fad_dt = self.rng.exponential(1.0, (n, m))
+        fad_ut = self.rng.exponential(1.0, (n, m))
+        tau = self._latency(bandwidth[:, None], compute[:, None], d,
+                            fad_dt, fad_ut)
+        outcomes = (tau <= c.deadline_s).astype(np.float64)
+        # contexts: (normalized mean downlink rate, normalized compute)
+        mean_rate = self._rate(bandwidth[:, None], d, 1.0)    # E[|h|^2] = 1
+        phi_rate = np.clip(mean_rate / self._rate_hi, 0.0, 1.0)
+        phi_comp = (compute - c.compute_low) / (c.compute_high - c.compute_low)
+        contexts = np.stack(
+            [phi_rate, np.broadcast_to(phi_comp[:, None], (n, m))], axis=-1)
+        # ground-truth participation probability via Monte Carlo over fading
+        k = self.mc_true_p
+        f1 = self.rng.exponential(1.0, (k, n, m))
+        f2 = self.rng.exponential(1.0, (k, n, m))
+        tau_mc = self._latency(bandwidth[None, :, None],
+                               compute[None, :, None], d[None], f1, f2)
+        true_p = (tau_mc <= c.deadline_s).mean(axis=0)
+        return RoundData(t=t, contexts=contexts, eligible=eligible,
+                         costs=costs, outcomes=outcomes, true_p=true_p,
+                         compute=compute, bandwidth=bandwidth)

@@ -1,0 +1,195 @@
+"""Client-selection problem (P2/P3) and its solvers.
+
+P2 (strongly convex, linear utility): max Σ_{(n,m)∈s} v[n,m]
+subject to per-ES knapsack (Σ_{n∈s_m} c[n] <= B_m) and a partition matroid
+(each client assigned to at most one ES, only to eligible ESs).
+
+P3 (non-convex): max sqrt((1/M) Σ v) — monotone submodular; solved with a
+lazy greedy (FLGreedy-style cost-benefit) giving the paper's
+1/((1+eps)(2+2M)) guarantee.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SelectionProblem:
+    values: np.ndarray      # (N, M) expected participation per client-ES pair
+    costs: np.ndarray       # (N,)   cost of renting client n this round
+    budgets: np.ndarray     # (M,)   per-ES budget B
+    eligible: np.ndarray    # (N, M) bool, client n can reach ES m
+
+    @property
+    def n(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.values.shape[1]
+
+
+def check_feasible(prob: SelectionProblem, assign: np.ndarray) -> bool:
+    """assign: (N,) int, ES index or -1. Validates matroid + knapsack."""
+    assign = np.asarray(assign)
+    if assign.shape != (prob.n,):
+        return False
+    sel = assign >= 0
+    if sel.any():
+        if not prob.eligible[np.arange(prob.n)[sel], assign[sel]].all():
+            return False
+    for m in range(prob.m):
+        if prob.costs[assign == m].sum() > prob.budgets[m] + 1e-9:
+            return False
+    return True
+
+
+def selection_utility(prob: SelectionProblem, assign: np.ndarray,
+                      outcomes: Optional[np.ndarray] = None,
+                      sqrt_utility: bool = False) -> float:
+    """Utility of a selection under values (or realized outcomes)."""
+    v = prob.values if outcomes is None else outcomes
+    sel = assign >= 0
+    total = float(v[np.arange(prob.n)[sel], assign[sel]].sum())
+    if sqrt_utility:
+        return float(np.sqrt(max(total, 0.0) / prob.m))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# greedy (density) solver for P2 — the scalable oracle approximation
+
+
+def greedy_select(prob: SelectionProblem,
+                  prefer: Optional[np.ndarray] = None) -> np.ndarray:
+    """Greedy by value density v/c over all feasible (n, m) pairs.
+
+    prefer: optional (N, M) bool — restrict to these pairs first, then fill
+    with the rest (used by COCS exploration stage 2). Returns assign (N,).
+    """
+    n, m = prob.n, prob.m
+    assign = np.full(n, -1, np.int64)
+    remaining = prob.budgets.astype(np.float64).copy()
+    density = np.where(prob.eligible,
+                       prob.values / np.maximum(prob.costs[:, None], 1e-12),
+                       -np.inf)
+
+    def run_pass(pair_mask: np.ndarray):
+        d = np.where(pair_mask, density, -np.inf)
+        order = np.argsort(d, axis=None)[::-1]
+        for flat in order:
+            i, j = divmod(int(flat), m)
+            if not np.isfinite(d.flat[flat]) or d.flat[flat] <= 0:
+                break
+            if assign[i] >= 0 or prob.costs[i] > remaining[j] + 1e-12:
+                continue
+            assign[i] = j
+            remaining[j] -= prob.costs[i]
+
+    if prefer is not None:
+        run_pass(prefer & prob.eligible)
+    run_pass(prob.eligible)
+    return assign
+
+
+def max_cardinality_select(prob: SelectionProblem,
+                           pair_mask: np.ndarray) -> np.ndarray:
+    """Maximize |s| over pairs in pair_mask (COCS exploration Eq. 14/15):
+    cheapest-first greedy."""
+    n, m = prob.n, prob.m
+    assign = np.full(n, -1, np.int64)
+    remaining = prob.budgets.astype(np.float64).copy()
+    order = np.argsort(prob.costs)
+    mask = pair_mask & prob.eligible
+    for i in order:
+        if not mask[i].any():
+            continue
+        # choose the eligible ES with most remaining budget (balances load)
+        cands = [j for j in range(m)
+                 if mask[i, j] and prob.costs[i] <= remaining[j] + 1e-12]
+        if not cands:
+            continue
+        j = max(cands, key=lambda jj: remaining[jj])
+        assign[i] = j
+        remaining[j] -= prob.costs[i]
+    return assign
+
+
+# ---------------------------------------------------------------------------
+# brute-force oracle (small instances; tests + paper's Oracle on N<=moderate)
+
+
+def brute_force_select(prob: SelectionProblem,
+                       sqrt_utility: bool = False) -> Tuple[np.ndarray, float]:
+    """Exact P2/P3 solution by enumeration. O((M+1)^N) — tests only."""
+    best_assign = np.full(prob.n, -1, np.int64)
+    best_val = selection_utility(prob, best_assign, sqrt_utility=sqrt_utility)
+    choices = [[-1] + [j for j in range(prob.m) if prob.eligible[i, j]]
+               for i in range(prob.n)]
+    for combo in itertools.product(*choices):
+        assign = np.array(combo, np.int64)
+        ok = True
+        for j in range(prob.m):
+            if prob.costs[assign == j].sum() > prob.budgets[j] + 1e-9:
+                ok = False
+                break
+        if not ok:
+            continue
+        val = selection_utility(prob, assign, sqrt_utility=sqrt_utility)
+        if val > best_val:
+            best_val, best_assign = val, assign.copy()
+    return best_assign, best_val
+
+
+# ---------------------------------------------------------------------------
+# FLGreedy (lazy greedy, cost-benefit) for the submodular P3
+
+
+def flgreedy_select(prob: SelectionProblem, eps: float = 0.3,
+                    utility_fn: Optional[Callable[[float], float]] = None
+                    ) -> np.ndarray:
+    """Lazy greedy for monotone submodular max under M knapsacks + matroid
+    (Badanidiyuru & Vondrak style). utility_fn maps Σv -> utility
+    (default sqrt(total/M), Eq. 19). Lazy evaluation exploits submodularity:
+    stale upper bounds are popped from a max-heap and refreshed.
+    """
+    n, m = prob.n, prob.m
+    if utility_fn is None:
+        def utility_fn(total: float) -> float:
+            return float(np.sqrt(max(total, 0.0) / prob.m))
+
+    assign = np.full(n, -1, np.int64)
+    remaining = prob.budgets.astype(np.float64).copy()
+    total_v = 0.0
+    cur_util = utility_fn(total_v)
+
+    def marginal(i: int, j: int) -> float:
+        return utility_fn(total_v + prob.values[i, j]) - cur_util
+
+    heap = []  # (-gain_per_cost, gain, i, j)
+    for i in range(n):
+        for j in range(m):
+            if prob.eligible[i, j] and prob.costs[i] > 0:
+                g = marginal(i, j)
+                heapq.heappush(heap, (-g / prob.costs[i], g, i, j))
+    while heap:
+        neg_d, g_stale, i, j = heapq.heappop(heap)
+        if assign[i] >= 0 or prob.costs[i] > remaining[j] + 1e-12:
+            continue
+        g = marginal(i, j)
+        if g <= 1e-15:
+            continue
+        d = g / prob.costs[i]
+        if heap and d < -heap[0][0] - 1e-15:     # stale: reinsert
+            heapq.heappush(heap, (-d, g, i, j))
+            continue
+        assign[i] = j
+        remaining[j] -= prob.costs[i]
+        total_v += prob.values[i, j]
+        cur_util = utility_fn(total_v)
+    return assign

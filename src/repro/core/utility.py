@@ -1,0 +1,94 @@
+"""Utility / regret accounting (Eq. 7-8, 11, 19, 21) and the bandit
+experiment driver shared by benchmarks and tests."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.paper_hfl import HFLExperimentConfig
+from repro.core.baselines import (BasePolicy, CUCBPolicy, LinUCBPolicy,
+                                  OraclePolicy, RandomPolicy)
+from repro.core.cocs import COCSConfig, COCSPolicy
+from repro.core.network import HFLNetworkSim, RoundData
+
+
+def realized_utility(assign: np.ndarray, rd: RoundData,
+                     sqrt_utility: bool = False) -> float:
+    """mu(s; X): number of selected clients that arrive in time (Eq. 7-8);
+    sqrt((1/M) sum X) for non-convex HFL (Eq. 19)."""
+    sel = assign >= 0
+    total = float(rd.outcomes[np.nonzero(sel)[0], assign[sel]].sum())
+    if sqrt_utility:
+        return math.sqrt(max(total, 0.0) / rd.contexts.shape[1])
+    return total
+
+
+@dataclass
+class ExperimentResult:
+    policies: List[str]
+    utilities: Dict[str, np.ndarray]        # per-round realized utility
+    participants: Dict[str, np.ndarray]     # per-round successful clients
+    selections: Dict[str, np.ndarray]       # (T, N) assignments
+    explored: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def cumulative(self, name: str) -> np.ndarray:
+        return np.cumsum(self.utilities[name])
+
+    def regret(self, name: str, oracle: str = "Oracle") -> np.ndarray:
+        return np.cumsum(self.utilities[oracle] - self.utilities[name])
+
+
+def make_policies(cfg: HFLExperimentConfig, horizon: int, seed: int = 0,
+                  which: Optional[List[str]] = None,
+                  budget: Optional[float] = None) -> Dict[str, BasePolicy]:
+    b = cfg.budget if budget is None else budget
+    sqrt_u = cfg.utility == "sqrt"
+    n, m = cfg.num_clients, cfg.num_edge_servers
+    all_p = {
+        "Oracle": lambda: OraclePolicy(n, m, b, sqrt_u, seed),
+        "COCS": lambda: COCSPolicy(COCSConfig(
+            num_clients=n, num_edge_servers=m, horizon=horizon, budget=b,
+            alpha=cfg.holder_alpha, h_t=cfg.h_t, sqrt_utility=sqrt_u)),
+        "CUCB": lambda: CUCBPolicy(n, m, b, sqrt_u, seed + 1),
+        "LinUCB": lambda: LinUCBPolicy(n, m, b, sqrt_u, seed + 2),
+        "Random": lambda: RandomPolicy(n, m, b, sqrt_u, seed + 3),
+    }
+    names = which or list(all_p)
+    return {k: all_p[k]() for k in names}
+
+
+def run_bandit_experiment(cfg: HFLExperimentConfig, horizon: int,
+                          seed: int = 0,
+                          which: Optional[List[str]] = None,
+                          budget: Optional[float] = None,
+                          deadline: Optional[float] = None,
+                          ) -> ExperimentResult:
+    """Run all policies against the SAME realized network (shared sim seed)."""
+    import dataclasses as dc
+    if deadline is not None:
+        cfg = dc.replace(cfg, deadline_s=deadline)
+    sim = HFLNetworkSim(cfg, seed=seed)
+    policies = make_policies(cfg, horizon, seed=seed, which=which,
+                             budget=budget)
+    sqrt_u = cfg.utility == "sqrt"
+    utilities = {k: np.zeros(horizon) for k in policies}
+    participants = {k: np.zeros(horizon) for k in policies}
+    selections = {k: np.zeros((horizon, cfg.num_clients), np.int64)
+                  for k in policies}
+    explored = {k: np.zeros(horizon, bool) for k in policies}
+    for t in range(horizon):
+        rd = sim.round(t)
+        for name, pol in policies.items():
+            assign = pol.select(rd)
+            pol.update(rd, assign)
+            utilities[name][t] = realized_utility(assign, rd, sqrt_u)
+            participants[name][t] = realized_utility(assign, rd, False)
+            selections[name][t] = assign
+            if hasattr(pol, "last_explored"):
+                explored[name][t] = pol.last_explored
+    return ExperimentResult(policies=list(policies), utilities=utilities,
+                            participants=participants, selections=selections,
+                            explored=explored)

@@ -1,0 +1,7 @@
+from repro.data.federated import ClientData, FederatedDataset
+from repro.data.synthetic import make_synthetic_classification, non_iid_split
+from repro.data.tokens import TokenStream, client_token_shards
+
+__all__ = ["ClientData", "FederatedDataset", "TokenStream",
+           "client_token_shards", "make_synthetic_classification",
+           "non_iid_split"]

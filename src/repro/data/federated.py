@@ -1,0 +1,46 @@
+"""Federated dataset plumbing: per-client datasets + local batch sampling."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.synthetic import make_synthetic_classification, non_iid_split
+
+
+@dataclass
+class ClientData:
+    x: np.ndarray
+    y: np.ndarray
+
+    def sample_batches(self, rng: np.random.Generator, batch_size: int,
+                       num_batches: int) -> Dict[str, np.ndarray]:
+        """Stacked batches (num_batches, B, ...) for lax.scan local training."""
+        n = len(self.y)
+        idx = rng.integers(0, n, (num_batches, min(batch_size, n)))
+        return {"x": self.x[idx], "y": self.y[idx]}
+
+
+@dataclass
+class FederatedDataset:
+    clients: List[ClientData]
+    test_x: np.ndarray
+    test_y: np.ndarray
+
+    @classmethod
+    def synthetic(cls, num_clients: int, kind: str = "mnist",
+                  samples_per_client: int = 200, test_samples: int = 2000,
+                  labels_per_client: int = 2, seed: int = 0
+                  ) -> "FederatedDataset":
+        shapes = {"mnist": (784,), "cifar": (32, 32, 3),
+                  "cifar_small": (16, 16, 3)}
+        shape = shapes[kind]
+        total = num_clients * samples_per_client + test_samples
+        x, y = make_synthetic_classification(total, shape=shape, seed=seed)
+        test_x, test_y = x[:test_samples], y[:test_samples]
+        train_x, train_y = x[test_samples:], y[test_samples:]
+        splits = non_iid_split(train_y, num_clients,
+                               labels_per_client=labels_per_client, seed=seed)
+        clients = [ClientData(train_x[s], train_y[s]) for s in splits]
+        return cls(clients=clients, test_x=test_x, test_y=test_y)

@@ -1,0 +1,6 @@
+from repro.fed.client import local_sgd
+from repro.fed.edge import deadline_masked_aggregate
+from repro.fed.hfl import HFLSimulation, HFLSimConfig
+
+__all__ = ["HFLSimConfig", "HFLSimulation", "deadline_masked_aggregate",
+           "local_sgd"]

@@ -1,0 +1,37 @@
+"""Client-side local training (Eq. 2): E epochs of SGD from the edge model."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_sgd(params: Any, loss_fn: Callable[[Any, Dict], jax.Array],
+              batches: Dict[str, jax.Array], lr: float) -> Tuple[Any, jax.Array]:
+    """Run one SGD step per stacked batch (leading axis = steps) via scan.
+
+    Returns (delta = w_final - w_init, mean loss). batches leaves have shape
+    (num_steps, B, ...); num_steps = E * batches_per_epoch.
+    """
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(p, batch):
+        loss, g = grad_fn(p, batch)
+        p = jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype), p, g)
+        return p, loss
+
+    final, losses = jax.lax.scan(step, params, batches)
+    delta = jax.tree.map(lambda a, b: a - b, final, params)
+    return delta, jnp.mean(losses)
+
+
+def local_sgd_multi(params: Any, loss_fn, client_batches: Dict[str, jax.Array],
+                    lr: float):
+    """vmap local_sgd over a leading client axis.
+
+    client_batches leaves: (num_clients, num_steps, B, ...). params are shared
+    (the downloaded edge model). Returns per-client deltas + losses.
+    """
+    fn = lambda b: local_sgd(params, loss_fn, b, lr)
+    return jax.vmap(fn)(client_batches)

@@ -1,0 +1,132 @@
+"""Device-level HFL building blocks for the production meshes.
+
+Two step functions are lowered in the dry-run:
+
+* ``make_train_step``  — one deadline-masked training step: client cohorts
+  are data shards, COCS's selection enters as per-example participation
+  weights (dropped cohorts contribute zero to the aggregate — exactly the
+  Eq. (6) masked mean when local_steps=1). This is the per-(arch x shape)
+  baseline on both meshes.
+
+* ``make_hfl_round`` — the paper's full hierarchy on the multi-pod mesh:
+  each pod is an edge server holding its own edge model (leading dim
+  ``n_edge`` sharded over the ``pod`` axis). A round does a masked local
+  update per edge and, every ``t_es`` rounds, a cross-pod global aggregation
+  (Eq. (3)/(4) of the training procedure) via an all-reduce over ``pod``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as R
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 1e-3, remat: bool = False,
+                    unroll: bool = False, microbatch: int = 1):
+    """(params, batch, weights) -> (params, loss). weights: (B,) cohort
+    participation (1 = arrived before deadline, 0 = dropped).
+
+    microbatch > 1 processes the global batch in k sequential slices inside
+    the step (grad accumulation in f32): identical update semantics at 1/k
+    the live-activation footprint — how the 1T-param config fits HBM.
+    """
+
+    def grad_of(params, batch, weights):
+        return jax.value_and_grad(R.train_loss)(
+            params, cfg, batch, remat=remat, weights=weights, unroll=unroll)
+
+    def step(params, batch, weights):
+        if microbatch > 1:
+            mb = jax.tree.map(
+                lambda a: a.reshape((microbatch, a.shape[0] // microbatch)
+                                    + a.shape[1:]), batch)
+            wb = weights.reshape(microbatch, -1)
+
+            def acc(gacc, xs):
+                b, w = xs
+                loss, g = grad_of(params, b, w)
+                gacc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), gacc, g)
+                return gacc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(acc, zeros, (mb, wb))
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = grad_of(params, batch, weights)
+        params = jax.tree.map(
+            lambda p, g: (p - jnp.asarray(lr, jnp.float32)
+                          * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, loss
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, window: int = 0, unroll: bool = False):
+    def step(params, tokens, state):
+        return R.serve_step(params, cfg, tokens, state, window=window,
+                            unroll=unroll)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# full HFL round with per-pod edge models
+
+
+def stack_edge_params(params: Any, n_edge: int) -> Any:
+    """Replicate initial params into per-edge copies (leading dim n_edge)."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_edge,) + p.shape), params)
+
+
+def abstract_edge_params(cfg: ModelConfig, n_edge: int) -> Any:
+    ap = R.abstract_params(cfg)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_edge,) + s.shape, s.dtype), ap)
+
+
+def make_hfl_round(cfg: ModelConfig, n_edge: int, t_es: int,
+                   lr: float = 1e-3, remat: bool = False,
+                   unroll: bool = False, microbatch: int = 1):
+    """(edge_params (E,...), batch (E,B_e,...), weights (E,B_e), step)
+    -> (edge_params, mean loss).
+
+    Edge aggregation: the weighted loss mean over a pod's cohorts makes one
+    backward pass equal to the deadline-masked mean of per-cohort deltas.
+    Global aggregation: lax.cond'd mean over the edge axis (cross-pod
+    all-reduce) every t_es rounds.
+    """
+
+    edge_step = make_train_step(cfg, lr=lr, remat=remat, unroll=unroll,
+                                microbatch=microbatch)
+
+    def one_edge(params, batch, weights):
+        return edge_step(params, batch, weights)
+
+    def round_fn(edge_params, batch, weights, step):
+        edge_params, losses = jax.vmap(one_edge)(edge_params, batch, weights)
+
+        def global_sync(ps):
+            # mean in the param dtype: upcasting first puts f32 on the
+            # cross-pod wire and doubles the sync bytes (HFL's dominant
+            # collective at MoE scale; see EXPERIMENTS.md it-11). With
+            # n_edge=2 the bf16 mean is exact up to 1 ulp.
+            def f(a):
+                g = jnp.mean(a, axis=0, dtype=a.dtype)
+                return jnp.broadcast_to(g[None], a.shape)
+            return jax.tree.map(f, ps)
+
+        edge_params = jax.lax.cond((step + 1) % t_es == 0,
+                                   global_sync, lambda ps: ps, edge_params)
+        return edge_params, jnp.mean(losses)
+
+    return round_fn

@@ -1,0 +1,50 @@
+"""Edge aggregation with deadline-based straggler dropping (Eq. 3 / Eq. 6)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def effective_mask(arrived: jax.Array, tau: jax.Array, z_min: int) -> jax.Array:
+    """Eq. (6): use clients that arrived before the deadline; if fewer than Z
+    arrived, wait for the Z fastest instead. arrived/tau: (C,). Returns fp32
+    weights (C,)."""
+    arrived = arrived.astype(jnp.float32)
+    count = jnp.sum(arrived)
+    # Z fastest by training time (selected clients only participate; callers
+    # pass tau=+inf for unselected slots)
+    z = min(int(z_min), arrived.shape[0])
+    _, idx = jax.lax.top_k(-tau, z)
+    fallback = jnp.zeros_like(arrived).at[idx].set(1.0)
+    return jnp.where(count >= z, arrived, fallback)
+
+
+def deadline_masked_aggregate(edge_params: Any, deltas: Any,
+                              arrived: jax.Array, tau: jax.Array,
+                              z_min: int = 1) -> Tuple[Any, jax.Array]:
+    """deltas: pytree with leading client axis (C, ...). Returns updated edge
+    params (Eq. 3 restricted to the effective mask) + number of contributors."""
+    w = effective_mask(arrived, tau, z_min)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+
+    def agg(p, d):
+        wd = w.reshape((-1,) + (1,) * (d.ndim - 1)).astype(d.dtype)
+        return (p + jnp.sum(wd * d, axis=0) / denom.astype(d.dtype)).astype(p.dtype)
+
+    return jax.tree.map(agg, edge_params, deltas), jnp.sum(w)
+
+
+def cloud_aggregate(edge_params_stacked: Any) -> Any:
+    """Global aggregation: mean over the leading edge-server axis."""
+    return jax.tree.map(lambda a: jnp.mean(a, axis=0, dtype=a.dtype),
+                        edge_params_stacked)
+
+
+def broadcast_global(edge_params_stacked: Any) -> Any:
+    """Every T_ES rounds each ES resets its edge model to the global mean."""
+    def f(a):
+        g = jnp.mean(a, axis=0, dtype=jnp.float32).astype(a.dtype)
+        return jnp.broadcast_to(g[None], a.shape)
+    return jax.tree.map(f, edge_params_stacked)

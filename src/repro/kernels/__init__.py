@@ -1,0 +1,7 @@
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.masked_aggregate import (masked_aggregate,
+                                            masked_aggregate_ref)
+from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
+
+__all__ = ["attention_ref", "flash_attention", "masked_aggregate",
+           "masked_aggregate_ref", "rwkv6_scan", "rwkv6_scan_ref"]

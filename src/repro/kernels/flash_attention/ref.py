@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  sm_scale: float = 0.0) -> jax.Array:
+    """q: (B, H, S, D); k, v: (B, KV, S, D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    groups = h // kv
+    if sm_scale == 0.0:
+        sm_scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, kv, groups, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * sm_scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    scores = jnp.where(ok, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.masked_aggregate.ops import masked_aggregate
+from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+
+__all__ = ["masked_aggregate", "masked_aggregate_ref"]

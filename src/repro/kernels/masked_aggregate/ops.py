@@ -1,0 +1,37 @@
+"""jit'd public wrapper: pytree-level deadline-masked aggregation.
+
+On TPU the Pallas kernel is used (interpret=False); this container is
+CPU-only so the default runs the same kernel body in interpret mode. The
+wrapper flattens a parameter pytree, aggregates, and unflattens.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
+from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+
+
+def masked_aggregate(edge_params: Any, deltas: Any, weights: jax.Array,
+                     use_kernel: bool = False, tile: int = 512,
+                     interpret: bool = True) -> Any:
+    """edge_params: pytree; deltas: same pytree with leading client axis (C,);
+    weights: (C,) participation mask/weights."""
+    leaves_p, treedef = jax.tree.flatten(edge_params)
+    leaves_d = treedef.flatten_up_to(deltas)
+    out = []
+    for p, d in zip(leaves_p, leaves_d):
+        c = d.shape[0]
+        flat_p = p.reshape(-1)
+        flat_d = d.reshape(c, -1)
+        if use_kernel:
+            out.append(masked_aggregate_kernel(
+                flat_p, flat_d, weights, tile=tile,
+                interpret=interpret).reshape(p.shape))
+        else:
+            out.append(masked_aggregate_ref(flat_p, flat_d,
+                                            weights).reshape(p.shape))
+    return jax.tree.unflatten(treedef, out)

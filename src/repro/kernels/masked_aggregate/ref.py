@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the masked_aggregate kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_aggregate_ref(param: jax.Array, deltas: jax.Array,
+                         weights: jax.Array) -> jax.Array:
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    agg = jnp.einsum("c,cd->d", w, deltas.astype(jnp.float32)) / denom
+    return (param.astype(jnp.float32) + agg).astype(param.dtype)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the MoE router kernel (matches moe.route)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_router_ref(logits: jax.Array, top_k: int):
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, idx.astype(jnp.int32)

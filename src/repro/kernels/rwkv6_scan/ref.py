@@ -1,0 +1,12 @@
+"""Exact per-step oracle for the RWKV6 WKV kernel (lax.scan)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import linear_recurrence_ref
+
+
+def rwkv6_scan_ref(r, k, v, log_w, u):
+    """Same contract as rwkv6_scan_kernel (exclusive convention + u bonus)."""
+    y, fin = linear_recurrence_ref(r, k, v, log_w, u=u)
+    return y, fin

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The dry-run entrypoint
+sets XLA_FLAGS --xla_force_host_platform_device_count=512 before any jax
+import; smoke tests and benchmarks see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) over ("data", "model") = 256 chips (TPU v5e pod
+    slice). Multi-pod: (2, 16, 16) over ("pod", "data", "model") = 512 chips;
+    the "pod" axis carries HFL's cloud tier (edge servers = pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_num_devices(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,214 @@
+"""Sharding rules for params, batches and serve state on the production mesh.
+
+Policy ("2D FSDP x tensor", MaxText-style):
+  * pattern rules put the contraction-friendly axis on ``model`` (attention
+    heads / ffn hidden / experts / vocab) and FSDP-shard the other large axis
+    over ``data``;
+  * anything unmatched falls back to a greedy largest-divisible-dim rule;
+  * batches shard their leading (global batch) dim over ("pod","data") as far
+    as divisibility allows;
+  * serve caches shard batch over ``data`` and KV-heads over ``model`` when
+    divisible, else the sequence axis.
+
+Params are replicated across ``pod`` (HFL semantics: edge models within a
+pod, cloud sync across pods); the hfl_round entry instead shards its leading
+edge dim over ``pod``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, spec builder taking shape -> tuple of axis names / None)
+_PATTERN_RULES = [
+    # attention projections (stacked: leading layer dim)
+    (r"attn.*/w[qkv]$", ("data", "model")),
+    (r"attn.*/wo$", ("model", "data")),
+    (r"xattn.*/w[qkv]$", ("data", "model")),
+    (r"xattn.*/wo$", ("model", "data")),
+    (r"attn.*/b[qkv]$", ("model",)),
+    # dense mlp
+    (r"mlp/w_(gate|up)$", ("data", "model")),
+    (r"mlp/w_down$", ("model", "data")),
+    # moe: experts over model (expert parallelism), d_model over data
+    (r"moe/router$", ("data", None)),
+    (r"moe/w_(gate|up)$", ("model", "data", None)),
+    (r"moe/w_down$", ("model", None, "data")),
+    (r"moe/shared/w_(gate|up)$", ("data", "model")),
+    (r"moe/shared/w_down$", ("model", "data")),
+    # embeddings / unembedding
+    (r"embed$", ("model", "data")),
+    (r"lm_head$", ("data", "model")),
+    (r"patch_proj$", ("data", "model")),
+    (r"frame_proj$", ("data", "model")),
+    # rwkv6 time-mix / channel-mix
+    (r"tm/w[rkvgo]$", ("data", "model")),
+    (r"tm/lora_a$", ("data", "model")),
+    (r"tm/lora_b$", (None, None, "model")),
+    (r"tm/w_lora_a$", ("data", None)),
+    (r"tm/w_lora_b$", (None, "model")),
+    (r"cm/w[kr]$", ("data", "model")),
+    (r"cm/wv$", ("model", "data")),
+    # mamba2: megatron-style column/row parallel, no FSDP on the small
+    # projections (FSDP here makes GSPMD reshard f32 activations instead of
+    # gathering the 34 MB weights — measured 52 GiB/step of activation
+    # all-gathers; see EXPERIMENTS.md perf log)
+    (r"mamba/in_proj$", (None, "model")),
+    (r"mamba/out_proj$", ("model", None)),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/conv_b$", ("model",)),
+    (r"mamba/norm_w$", ("model",)),
+]
+
+
+def _leading_dims(path_str: str) -> int:
+    """Stacked-layer leading axes to skip when applying a pattern rule."""
+    return 1 if re.search(r"(layers|mamba_layers|encoder|decoder)/", path_str) \
+        else 0
+
+
+def _fits(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> bool:
+    for dim, axis in zip(shape, spec):
+        if axis is None:
+            continue
+        if dim % mesh.shape[axis] != 0:
+            return False
+    return True
+
+
+def _greedy_spec(shape: Tuple[int, ...], mesh: Mesh) -> Tuple:
+    """Fallback: 'model' on the largest divisible dim, then 'data'."""
+    spec = [None] * len(shape)
+    order = np.argsort(shape)[::-1]
+    remaining = [a for a in ("model", "data") if a in mesh.shape]
+    for d in order:
+        if not remaining:
+            break
+        axis = remaining[0]
+        if shape[d] % mesh.shape[axis] == 0 and shape[d] >= mesh.shape[axis]:
+            spec[d] = axis
+            remaining.pop(0)
+    return tuple(spec)
+
+
+def param_spec(path_str: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    lead = _leading_dims(path_str)
+    body = shape[lead:]
+    for pat, axes in _PATTERN_RULES:
+        if re.search(pat, path_str):
+            if len(axes) == len(body) and _fits(body, axes, mesh):
+                return P(*((None,) * lead + tuple(axes)))
+            break
+    return P(*((None,) * lead + _greedy_spec(body, mesh)))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_shardings(params_abs: Any, mesh: Mesh, edge_stacked: bool = False
+                    ) -> Any:
+    """NamedShardings for a param pytree. edge_stacked: leading edge-server
+    dim sharded over 'pod' (hfl_round entry)."""
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if edge_stacked:
+            inner = param_spec(ps, shape[1:], mesh)
+            pod = "pod" if ("pod" in mesh.shape
+                            and shape[0] % mesh.shape["pod"] == 0) else None
+            return NamedSharding(mesh, P(pod, *inner))
+        return NamedSharding(mesh, param_spec(ps, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, params_abs)
+
+
+def _batch_axes(mesh: Mesh, dim: int) -> Optional[Tuple[str, ...]]:
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    chosen = []
+    size = 1
+    for a in axes:
+        if dim % (size * mesh.shape[a]) == 0:
+            chosen.append(a)
+            size *= mesh.shape[a]
+    return tuple(chosen) if chosen else None
+
+
+def batch_shardings(specs: Any, mesh: Mesh, edge_stacked: bool = False) -> Any:
+    """Shard leading batch dim over ('pod','data') as divisibility allows."""
+
+    def rule(leaf):
+        shape = leaf.shape
+        if edge_stacked:
+            pod = "pod" if ("pod" in mesh.shape
+                            and shape[0] % mesh.shape["pod"] == 0) else None
+            inner = None
+            if len(shape) > 1 and "data" in mesh.shape \
+                    and shape[1] % mesh.shape["data"] == 0:
+                inner = "data"
+            spec = [pod, inner] + [None] * (len(shape) - 2)
+            return NamedSharding(mesh, P(*spec))
+        spec = [_batch_axes(mesh, shape[0])] + [None] * (len(shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(rule, specs)
+
+
+def serve_state_shardings(state_abs: Any, mesh: Mesh) -> Any:
+    """KV caches (L, B, S, KV, hd): batch->data; KV->model if divisible else
+    S->model. Recurrent states (L, B, H, ...): H->model if divisible."""
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        last = ps.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        msz = mesh.shape["model"]
+        if last in ("k", "v"):
+            l, b, s, kv, hd = shape
+            spec = [None,
+                    _batch_axes(mesh, b),
+                    None, None, None]
+            if kv % msz == 0:
+                spec[3] = "model"
+            elif s % msz == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if last == "kpos":
+            b = shape[0]
+            return NamedSharding(mesh, P(_batch_axes(mesh, b), None))
+        if last == "pos":
+            return NamedSharding(mesh, P(_batch_axes(mesh, shape[0])))
+        if last in ("wkv", "ssm"):
+            # (L, B, H, dk, dv)
+            spec = [None, _batch_axes(mesh, shape[1])] + [None] * (len(shape) - 2)
+            if shape[2] % msz == 0:
+                spec[2] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if last in ("conv", "tm_x", "cm_x"):
+            spec = [None, _batch_axes(mesh, shape[1])] + [None] * (len(shape) - 2)
+            if shape[-1] % msz == 0:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if last == "enc_out":
+            b = shape[0]
+            spec = [_batch_axes(mesh, b), None, None]
+            if shape[-1] % msz == 0:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+        # fallback: batch over data if leading dim divisible
+        return NamedSharding(mesh,
+                             P(_batch_axes(mesh, shape[0]),
+                               *([None] * (len(shape) - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, state_abs)

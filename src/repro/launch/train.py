@@ -1,0 +1,106 @@
+"""Training launcher.
+
+Two modes:
+  * ``--paper``: the paper's HFL experiment (N=50 clients, M=3 ESs, COCS
+    in the loop) on CPU — real training, real selection, real deadlines.
+  * ``--arch <id>``: LM-scale HFL training of an assigned architecture's
+    REDUCED variant on the local device(s): client cohorts = token shards,
+    COCS decides which cohorts' deltas enter each edge aggregation.
+
+The full-size configs are exercised via ``repro.launch.dryrun`` (this
+container has one CPU device; the production mesh is compile-only).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.paper_hfl import CIFAR10_NONCONVEX, MNIST_CONVEX
+from repro.core.cocs import COCSConfig, COCSPolicy
+from repro.core.network import HFLNetworkSim
+from repro.data.tokens import client_token_shards
+from repro.fed.distributed import make_train_step
+from repro.fed.hfl import HFLSimConfig, HFLSimulation
+from repro.models import registry as R
+
+
+def run_paper(args) -> int:
+    exp = CIFAR10_NONCONVEX if args.nonconvex else MNIST_CONVEX
+    cfg = HFLSimConfig(exp=exp,
+                       model_kind="cnn" if args.nonconvex else "logreg",
+                       rounds=args.rounds, seed=args.seed,
+                       eval_every=args.eval_every)
+    policy = COCSPolicy(COCSConfig(
+        num_clients=exp.num_clients, num_edge_servers=exp.num_edge_servers,
+        horizon=args.rounds, budget=exp.budget, h_t=exp.h_t))
+    sim = HFLSimulation(cfg, policy)
+    hist = sim.run(progress=lambda r, a: print(
+        f"round {r:4d}  test_acc {a:.4f}", flush=True))
+    print(f"final accuracy: {hist.accuracy[-1]:.4f}")
+    return 0
+
+
+def run_lm(args) -> int:
+    cfg = get_config(args.arch).reduced()
+    n_clients = args.clients
+    horizon = args.rounds
+    exp = MNIST_CONVEX
+    policy = COCSPolicy(COCSConfig(
+        num_clients=n_clients, num_edge_servers=exp.num_edge_servers,
+        horizon=horizon, budget=exp.budget, h_t=exp.h_t))
+    import dataclasses as dc
+    sim = HFLNetworkSim(dc.replace(exp, num_clients=n_clients),
+                        seed=args.seed)
+    shards = client_token_shards(n_clients, cfg.vocab_size, args.seq_len,
+                                 args.batch, seed=args.seed)
+    rngs = [np.random.default_rng(args.seed + c) for c in range(n_clients)]
+    params = R.init_params(cfg, jax.random.PRNGKey(args.seed))
+    step = jax.jit(make_train_step(cfg, lr=args.lr))
+    t0 = time.time()
+    for t in range(horizon):
+        rd = sim.round(t)
+        assign = policy.select(rd)
+        policy.update(rd, assign)
+        sel = np.nonzero(assign >= 0)[0]
+        losses = []
+        for c in sel:
+            batch = shards[c].sample(rngs[c])
+            w = jnp.full((args.batch,), float(rd.outcomes[c, assign[c]]))
+            params, loss = step(params, jax.tree.map(jnp.asarray, batch), w)
+            losses.append(float(loss))
+        if (t + 1) % 10 == 0 or t == 0:
+            print(f"round {t+1:4d}  clients {len(sel):2d}  "
+                  f"mean_loss {np.mean(losses) if losses else float('nan'):.4f}  "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true")
+    ap.add_argument("--nonconvex", action="store_true")
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=5)
+    args = ap.parse_args(argv)
+    if args.paper:
+        return run_paper(args)
+    if args.arch:
+        return run_lm(args)
+    ap.error("choose --paper or --arch <id>")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+from repro.models import (encdec, layers, logistic, mamba2, moe, registry,
+                          rwkv6, transformer, zamba2)
+
+__all__ = ["encdec", "layers", "logistic", "mamba2", "moe", "registry",
+           "rwkv6", "transformer", "zamba2"]

@@ -1,0 +1,211 @@
+"""Encoder-decoder transformer (SeamlessM4T backbone [arXiv:2308.11596]).
+
+The audio frontend (mel-spectrogram + conv feature extractor) is a STUB per
+the assignment carve-out: the encoder consumes precomputed frame embeddings
+(batch, num_frames, d_model). The decoder is a standard causal stack with
+cross-attention; serving precomputes cross K/V once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.shard_hints import BATCH, hint
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 cfg.qkv_bias, dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_dec_layer(key, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln_x": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 cfg.qkv_bias, dt),
+        "xattn": L.init_attention(k3, cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.resolved_head_dim,
+                                  cfg.qkv_bias, dt),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, cfg.encoder_layers + cfg.num_layers + 3)
+    enc = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[init_enc_layer(ks[i], cfg)
+                         for i in range(cfg.encoder_layers)])
+    dec = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[init_dec_layer(ks[cfg.encoder_layers + i], cfg)
+                         for i in range(cfg.num_layers)])
+    return {
+        "frame_proj": L.dense_init(ks[-3], (cfg.d_model, cfg.d_model), dtype=dt),
+        "embed": L.embed_init(ks[-2], (cfg.vocab_size, cfg.d_model), dt),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[-1], (cfg.d_model, cfg.vocab_size), dtype=dt),
+    }
+
+
+def abstract_model(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(functools.partial(init_model, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
+           unroll: bool = False) -> jax.Array:
+    """frames: (B, F, d_model) stubbed frontend embeddings."""
+    x = frames.astype(_dtype(cfg)) @ params["frame_proj"]
+    b, f, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+    mask = None  # bidirectional
+
+    def body(h, lp):
+        h = hint(h, BATCH, None, None)
+        a, _ = L.attention_block(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            positions=positions, mask=mask)
+        h = h + a
+        h = h + L.mlp_block(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"],
+                        unroll=cfg.encoder_layers if unroll else 1)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(lp, cfg, x, enc_out, enc_positions):
+    """Cross-attention: queries from x, K/V from encoder output."""
+    b, s, _ = x.shape
+    f = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    y = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    p = lp["xattn"]
+    q = (y @ p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    k = (enc_out @ p["wk"]).reshape(b, f, cfg.num_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(b, f, cfg.num_kv_heads, hd)
+    out = L.gqa_attention(q, k, v, None)
+    return x + out.reshape(b, s, cfg.num_heads * hd) @ p["wo"]
+
+
+def forward(params: dict, cfg: ModelConfig, frames: jax.Array,
+            tokens: jax.Array,
+            unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Training forward: (logits over target tokens, aux=0)."""
+    enc_out = encode(params, cfg, frames, unroll=unroll)
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    pos1d = jnp.arange(s, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos1d, (b, s))
+    mask = L.attention_scores_mask(pos1d, pos1d)
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), enc_out.shape[:2])
+
+    def body(h, lp):
+        h = hint(h, BATCH, None, None)
+        a, _ = L.attention_block(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            positions=positions, mask=mask)
+        h = h + a
+        h = _cross_attend(lp, cfg, h, enc_out, enc_positions)
+        h = h + L.mlp_block(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"],
+                        unroll=cfg.num_layers if unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hint(x @ params["lm_head"], BATCH, None, "model"), \
+        jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd), dt),
+        "kpos": jnp.full((batch, max_len), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        # encoder output kept for cross-attention
+        "enc_out": jnp.zeros((batch, cfg.num_frames, cfg.d_model), dt),
+    }
+
+
+def start_serving(params: dict, cfg: ModelConfig, frames: jax.Array,
+                  cache: Dict[str, Any]) -> Dict[str, Any]:
+    cache = dict(cache)
+    cache["enc_out"] = encode(params, cfg, frames)
+    return cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict[str, Any],
+                unroll: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B,1). One target-side decode step with cross-attention."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = cache["pos"][:, None]
+    size = cache["k"].shape[2]
+    cache_positions = positions % size
+    bidx = jnp.arange(b)[:, None]
+    kpos = cache["kpos"].at[bidx, cache_positions].set(positions)
+    mask = L.attention_scores_mask(positions, kpos, k_valid=kpos >= 0)
+    enc_out = cache["enc_out"]
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(enc_out.shape[1], dtype=jnp.int32), enc_out.shape[:2])
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        a, kv = L.attention_block(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+            positions=positions, mask=mask, kv_cache=(ck, cv),
+            cache_positions=cache_positions)
+        h = h + a
+        h = _cross_attend(lp, cfg, h, enc_out, enc_positions)
+        h = h + L.mlp_block(lp["mlp"], L.rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["decoder"], cache["k"],
+                                         cache["v"]),
+                               unroll=cfg.num_layers if unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = ks, vs
+    new_cache["kpos"] = kpos
+    new_cache["pos"] = cache["pos"] + 1
+    return x @ params["lm_head"], new_cache

@@ -1,0 +1,309 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * per-layer params are stacked on a leading axis and applied with lax.scan;
+  * norms/softmax run in float32, matmuls in the config dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm_heads(x: jax.Array, weight, bias, num_heads: int,
+                     eps: float = 64e-5) -> jax.Array:
+    """GroupNorm over per-head channels; x: (..., H*hd)."""
+    dtype = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, num_heads, d // num_heads)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*lead, d)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional bias / sliding window / prefix-LM, KV cache)
+
+
+def attention_scores_mask(q_pos: jax.Array, k_pos: jax.Array,
+                          k_valid: Optional[jax.Array] = None,
+                          sliding_window: int = 0,
+                          prefix_len: int = 0) -> jax.Array:
+    """Build an additive mask from position vectors.
+
+    q_pos/k_pos may be 1D (shared across the batch — training/prefill, giving
+    a batch-free (Sq, Sk) mask that XLA can broadcast instead of materializing
+    a B x S x S tensor) or 2D (B, S) (decode over a ring-buffer cache, giving
+    (B, Sq, Sk)). Causal by default; optionally limited to a sliding window
+    and/or fully-visible prefix (prefix-LM, used by the VLM).
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    ok = k <= q
+    if sliding_window:
+        ok &= k > (q - sliding_window)
+    if prefix_len:
+        ok |= k < prefix_len
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: Optional[jax.Array]) -> jax.Array:
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd); mask additive fp32 of shape
+    (Sq,Sk) (batch-free) or (B,Sq,Sk), or None (no masking).
+
+    Matmuls keep bf16 operands with f32 accumulation
+    (preferred_element_type) — an explicit astype(f32) on K/V materializes
+    an f32 copy of the whole KV cache every decode step."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, sq, kv, groups, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if mask is not None:
+        if mask.ndim == 2:
+            scores = scores + mask[None, None, None, :, :]
+        else:
+            scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, num_kv_heads * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (num_heads * head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def attention_block(p: dict, x: jax.Array, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int, rope_theta: float,
+                    positions: jax.Array, mask: jax.Array,
+                    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    cache_positions: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Self-attention. If kv_cache=(ck, cv) is given, new K/V are written at
+    ``cache_positions`` (ring-buffer semantics) and attention runs over the
+    whole cache; otherwise attention runs over the sequence itself.
+    """
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        # scatter new kv at cache_positions (B, S)
+        bidx = jnp.arange(b)[:, None]
+        ck = ck.at[bidx, cache_positions].set(k.astype(ck.dtype))
+        cv = cv.at[bidx, cache_positions].set(v.astype(cv.dtype))
+        k, v = ck, cv
+        new_cache = (ck, cv)
+    out = gqa_attention(q, k, v, mask)
+    out = out.reshape(b, s, num_heads * head_dim) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_block(p: dict, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# chunked linear recurrence (shared by RWKV6 WKV and Mamba2 SSD)
+#
+# State C in R^{dk x dv} with recurrence  C_t = diag(w_t) C_{t-1} + k_t v_t^T,
+# w_t in (0, 1]^{dk} (scalar decay broadcasts). Two query conventions:
+#   * inclusive (Mamba2/SSD):   y_t = r_t . C_t
+#   * exclusive (RWKV6):        y_t = r_t . C_{t-1} + (r_t . (u o k_t)) v_t
+# Vectorized over chunks; inter-chunk state via log-depth associative scan so
+# the full FLOPs stay visible to XLA cost analysis (no opaque while loop).
+
+
+def chunked_linear_recurrence(r, k, v, log_w, chunk: int,
+                              u: Optional[jax.Array] = None,
+                              init_state: Optional[jax.Array] = None):
+    """r,k,log_w: (B,H,T,dk); v: (B,H,T,dv); log_w <= 0.
+
+    u: optional (H, dk) current-token bonus -> RWKV exclusive convention;
+    u=None -> Mamba inclusive convention.
+    Returns y: (B,H,T,dv), final_state: (B,H,dk,dv).
+    """
+    exclusive = u is not None
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    f32 = jnp.float32
+    r_, k_, v_, lw = (a.astype(f32).reshape(b, h, nc, chunk, -1)
+                      for a in (r, k, v, log_w))
+    # inclusive within-chunk cumulative log decay
+    lcum = jnp.cumsum(lw, axis=3)                       # (b,h,nc,C,dk)
+    ltot = lcum[..., -1:, :]                            # (b,h,nc,1,dk)
+    # Contribution of source step s to query step t (within a chunk):
+    #   inclusive: s <= t, decay exp(lcum_t - lcum_s)
+    #   exclusive: s <  t, decay exp(lcum_{t-1} - lcum_s) = exp(lcum_t-lw_t-lcum_s)
+    q_decay = lcum - lw if exclusive else lcum
+    q_t = r_ * jnp.exp(q_decay)                         # (b,h,nc,C,dk)
+    k_s = k_ * jnp.exp(-lcum)
+    scores = jnp.einsum("bhntd,bhnsd->bhnts", q_t, k_s)
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1 if exclusive else 0)
+    scores = scores * tri
+    y = jnp.einsum("bhnts,bhnsv->bhntv", scores, v_)
+    # chunk summaries: M_n = sum_s exp(ltot - lcum_s) k_s v_s^T ; D_n = exp(ltot)
+    ksum = k_ * jnp.exp(ltot - lcum)                    # (b,h,nc,C,dk)
+    m = jnp.einsum("bhnsd,bhnsv->bhndv", ksum, v_)      # (b,h,nc,dk,dv)
+    d = jnp.exp(ltot[..., 0, :])                        # (b,h,nc,dk)
+
+    # associative affine scan over chunks: state after chunk n
+    def combine(a, b_):
+        d1, m1 = a
+        d2, m2 = b_
+        return d1 * d2, m1 * d2[..., None] + m2
+
+    d_sc, m_sc = jax.lax.associative_scan(combine, (d, m), axis=2)
+    if init_state is not None:
+        s0 = init_state.astype(f32)
+        m_sc = m_sc + s0[:, :, None] * d_sc[..., None]
+    # state entering chunk n = state after chunk n-1 (or s0)
+    zero = (jnp.zeros((b, h, 1, dk, dv), f32) if init_state is None
+            else (init_state.astype(f32))[:, :, None])
+    s_in = jnp.concatenate([zero, m_sc[:, :, :-1]], axis=2)  # (b,h,nc,dk,dv)
+    y = y + jnp.einsum("bhntd,bhndv->bhntv", q_t, s_in)
+    if exclusive:
+        bonus = jnp.einsum("bhntd,hd,bhntd->bhnt", r_, u.astype(f32), k_)
+        y = y + bonus[..., None] * v_
+    final_state = m_sc[:, :, -1]
+    return y.reshape(b, h, t, dv), final_state
+
+
+def linear_recurrence_step(r, k, v, log_w, state,
+                           u: Optional[jax.Array] = None):
+    """Single-token recurrence step (decode). r,k,log_w: (B,H,dk); v: (B,H,dv);
+    state: (B,H,dk,dv). Returns y (B,H,dv), new state."""
+    f32 = jnp.float32
+    r_, k_, v_, lw = (a.astype(f32) for a in (r, k, v, log_w))
+    st = state.astype(f32)
+    new_state = st * jnp.exp(lw)[..., None] + k_[..., None] * v_[..., None, :]
+    if u is not None:  # exclusive (RWKV): query old state + u bonus
+        y = jnp.einsum("bhd,bhdv->bhv", r_, st)
+        y = y + jnp.einsum("bhd,hd,bhd->bh", r_, u.astype(f32),
+                           k_)[..., None] * v_
+    else:              # inclusive (Mamba): query new state
+        y = jnp.einsum("bhd,bhdv->bhv", r_, new_state)
+    return y, new_state
+
+
+def linear_recurrence_ref(r, k, v, log_w, u=None, init_state=None):
+    """Exact per-step lax.scan oracle for the chunked form (tests only)."""
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp
+        y, s = linear_recurrence_step(r_t, k_t, v_t, lw_t, s, u=u)
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0)
+               for a in (r, k, v, log_w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), s_fin

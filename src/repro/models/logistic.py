@@ -1,0 +1,97 @@
+"""The paper's own training models: logistic regression (strongly convex,
+"MNIST" setting) and a small CNN/MLP (non-convex, "CIFAR-10" setting).
+
+The container is offline so datasets are generated synthetically with the
+same structure (784-dim / 32x32x3 inputs, 10 classes, non-IID 2 labels per
+client); see repro.data.synthetic.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_logreg(key, num_features: int = 784, num_classes: int = 10) -> dict:
+    return {
+        "w": jnp.zeros((num_features, num_classes), jnp.float32),
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def logreg_logits(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["w"] + params["b"]
+
+
+def init_cnn(key, height: int = 32, width: int = 32, channels: int = 3,
+             num_classes: int = 10) -> dict:
+    """Paper's CIFAR CNN: 2x [5x5 conv(64) + 2x2 maxpool], FC 384, FC 192."""
+    ks = jax.random.split(key, 5)
+    flat = (height // 4) * (width // 4) * 64
+
+    def conv_init(k, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(k, shape) / jnp.sqrt(fan_in)
+
+    return {
+        "c1": conv_init(ks[0], (5, 5, channels, 64)),
+        "b1": jnp.zeros((64,)),
+        "c2": conv_init(ks[1], (5, 5, 64, 64)),
+        "b2": jnp.zeros((64,)),
+        "f1": jax.random.normal(ks[2], (flat, 384)) / jnp.sqrt(flat),
+        "fb1": jnp.zeros((384,)),
+        "f2": jax.random.normal(ks[3], (384, 192)) / jnp.sqrt(384.0),
+        "fb2": jnp.zeros((192,)),
+        "out": jax.random.normal(ks[4], (192, num_classes)) / jnp.sqrt(192.0),
+        "outb": jnp.zeros((num_classes,)),
+    }
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_logits(params: dict, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C)."""
+    h = jax.lax.conv_general_dilated(x, params["c1"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = _maxpool2(jax.nn.relu(h + params["b1"]))
+    h = jax.lax.conv_general_dilated(h, params["c2"], (1, 1), "SAME",
+                                     dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = _maxpool2(jax.nn.relu(h + params["b2"]))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["f1"] + params["fb1"])
+    h = jax.nn.relu(h @ params["f2"] + params["fb2"])
+    return h @ params["out"] + params["outb"]
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def make_loss_fn(kind: str):
+    """kind: 'logreg' | 'cnn'. Returns loss(params, batch) -> scalar."""
+    logits_fn = logreg_logits if kind == "logreg" else cnn_logits
+
+    def loss(params, batch) -> jax.Array:
+        return softmax_xent(logits_fn(params, batch["x"]), batch["y"])
+
+    return loss
+
+
+def make_model(kind: str, key, input_shape: Tuple[int, ...] = None
+               ) -> Tuple[dict, callable]:
+    if kind == "logreg":
+        nf = int(input_shape[0]) if input_shape else 784
+        return init_logreg(key, num_features=nf), logreg_logits
+    if kind == "cnn":
+        h, w, c = input_shape if input_shape else (32, 32, 3)
+        return init_cnn(key, height=h, width=w, channels=c), cnn_logits
+    raise ValueError(kind)

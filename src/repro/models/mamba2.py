@@ -1,0 +1,106 @@
+"""Mamba2 SSD block (scalar-per-head decay, chunked state-space dual form).
+
+Used standalone and inside the Zamba2 hybrid. Shares the chunked linear
+recurrence with RWKV6 (inclusive convention, scalar decay broadcast over the
+state dimension).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    d_in = cfg.d_model * s.expand
+    heads = d_in // s.head_dim
+    return s, d_in, heads
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    s, d_in, heads = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * s.state_dim
+    return {
+        # fused in_proj: [z, x, B, C, dt]
+        "in_proj": L.dense_init(
+            ks[0], (d, 2 * d_in + 2 * s.state_dim + heads), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm_w": jnp.zeros((d_in,), dtype),
+        "out_proj": L.dense_init(ks[2], (d_in, d), dtype=dtype),
+    }
+
+
+def _split(cfg: ModelConfig, proj: jax.Array):
+    s, d_in, heads = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * s.state_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: Optional[jax.Array] = None):
+    """xbc: (B,T,C); w: (W,C) depthwise. Returns (out, new_carry (B,W-1,C))."""
+    width = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    padded = jnp.concatenate([carry, xbc], axis=1)
+    out = sum(padded[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    out = jax.nn.silu(out + b)
+    new_carry = padded[:, -(width - 1):]
+    return out, new_carry
+
+
+def mamba_mix(p: dict, x: jax.Array, cfg: ModelConfig,
+              ssm_state: Optional[jax.Array] = None,
+              conv_state: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,T,d) -> (out (B,T,d), ssm_state, conv_state)."""
+    s, d_in, heads = _dims(cfg)
+    b, t, _ = x.shape
+    z, xbc, dt = _split(cfg, x @ p["in_proj"])
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+    log_w = -dt * jnp.exp(p["a_log"])                              # (B,T,H)
+    # recurrence per head: state (state_dim x head_dim)
+    xh = xs.reshape(b, t, heads, s.head_dim).transpose(0, 2, 1, 3)  # v
+    bh = jnp.broadcast_to(bmat[:, :, None, :], (b, t, heads, s.state_dim))
+    kh = (bh * dt[..., None]).transpose(0, 2, 1, 3)                 # k
+    rh = jnp.broadcast_to(cmat[:, :, None, :],
+                          (b, t, heads, s.state_dim)).transpose(0, 2, 1, 3)
+    lw = jnp.broadcast_to(log_w.transpose(0, 2, 1)[..., None],
+                          (b, heads, t, s.state_dim))
+    chunk = min(s.chunk_size, t)
+    y, fin = L.chunked_linear_recurrence(rh, kh, xh, lw, chunk=chunk,
+                                         init_state=ssm_state)
+    y = y.transpose(0, 2, 1, 3)                                     # (B,T,H,hd)
+    y = y + xh.transpose(0, 2, 1, 3) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], fin, conv_state
+
+
+def mamba_mix_step(p: dict, x: jax.Array, cfg: ModelConfig,
+                   ssm_state: jax.Array, conv_state: jax.Array):
+    """Single-token decode. x: (B,d)."""
+    out, fin, conv = mamba_mix(p, x[:, None], cfg, ssm_state=ssm_state,
+                               conv_state=conv_state)
+    return out[:, 0], fin, conv
+
+
+def ssm_state_shapes(cfg: ModelConfig, batch: int):
+    s, d_in, heads = _dims(cfg)
+    return ((batch, heads, s.state_dim, s.head_dim),   # ssm state
+            (batch, s.conv_width - 1, d_in + 2 * s.state_dim))  # conv carry

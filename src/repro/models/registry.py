@@ -1,0 +1,217 @@
+"""Uniform per-architecture API used by smoke tests, the dry-run, the HFL
+runtime and the serving driver.
+
+Every assigned architecture supports:
+  * ``init_params(cfg, key)`` / ``abstract_params(cfg)``
+  * ``train_loss(params, cfg, batch)``  (next-token xent; MoE adds aux loss)
+  * ``init_serve_state(cfg, batch, seq_len, window)`` + ``serve_step``
+  * ``input_specs(cfg, shape)`` / ``serve_specs(cfg, shape)`` — ShapeDtypeStruct
+    stand-ins for the dry-run (no allocation).
+
+Decode shapes lower ``serve_step`` (ONE token against a seq_len KV cache /
+recurrent state); long_500k uses the sub-quadratic path (ring-buffer sliding
+window for dense/MoE/VLM, native SWA for mixtral, recurrent state for
+SSM/hybrid) and is skipped for the encoder-decoder audio arch (DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import encdec, rwkv6, transformer, zamba2
+
+# sliding window used by the long-context serving mode of full-attention archs
+LONG_CONTEXT_WINDOW = 8192
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def serve_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring-buffer window for attention KV caches under this input shape."""
+    if shape.name != "long_500k":
+        return 0
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    return LONG_CONTEXT_WINDOW
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+# ---------------------------------------------------------------------------
+# params
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    if cfg.arch_type == "ssm":
+        return rwkv6.init_lm(cfg, key)
+    if cfg.arch_type == "hybrid":
+        return zamba2.init_lm(cfg, key)
+    if cfg.arch_type == "audio":
+        return encdec.init_model(cfg, key)
+    return transformer.init_lm(cfg, key)  # dense / moe / vlm
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# training
+
+
+def _xent(logits: jax.Array, labels: jax.Array,
+          weights: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token xent; weights (B,) reweight examples (HFL
+    participation masking: dropped cohorts contribute zero)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    per_ex = jnp.mean(logz - gold, axis=-1)            # (B,)
+    if weights is None:
+        return jnp.mean(per_ex)
+    w = weights.astype(jnp.float32)
+    return jnp.sum(per_ex * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               remat: bool = False,
+               weights: Optional[jax.Array] = None,
+               unroll: bool = False) -> jax.Array:
+    """batch: tokens (B,S), labels (B,S) [+ frames / patches for audio/vlm]."""
+    if cfg.arch_type == "ssm":
+        logits, aux = rwkv6.forward_lm(params, cfg, batch["tokens"],
+                                       remat=remat, unroll=unroll)
+    elif cfg.arch_type == "hybrid":
+        logits, aux = zamba2.forward_lm(params, cfg, batch["tokens"],
+                                        remat=remat, unroll=unroll)
+    elif cfg.arch_type == "audio":
+        logits, aux = encdec.forward(params, cfg, batch["frames"],
+                                     batch["tokens"], unroll=unroll)
+    elif cfg.arch_type == "vlm":
+        logits, aux = transformer.forward_lm(params, cfg, batch["tokens"],
+                                             patch_embeds=batch["patches"],
+                                             remat=remat, unroll=unroll)
+        logits = logits[:, cfg.num_patches:]   # loss on text positions only
+    else:
+        logits, aux = transformer.forward_lm(params, cfg, batch["tokens"],
+                                             remat=remat, unroll=unroll)
+    return _xent(logits, batch["labels"], weights) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+
+
+def serve_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Context capacity: VLM caches also hold the image-patch prefix."""
+    return seq_len + (cfg.num_patches if cfg.arch_type == "vlm" else 0)
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, seq_len: int,
+                     window: int = 0) -> Dict[str, Any]:
+    seq_len = serve_cache_len(cfg, seq_len)
+    if cfg.arch_type == "ssm":
+        return rwkv6.init_state(cfg, batch)
+    if cfg.arch_type == "hybrid":
+        return zamba2.init_state(cfg, batch, seq_len, window=window)
+    if cfg.arch_type == "audio":
+        return encdec.init_cache(cfg, batch, seq_len)
+    return transformer.init_cache(cfg, batch, seq_len, window=window)
+
+
+def abstract_serve_state(cfg: ModelConfig, batch: int, seq_len: int,
+                         window: int = 0) -> Dict[str, Any]:
+    return jax.eval_shape(
+        functools.partial(init_serve_state, cfg, batch, seq_len,
+                          window=window))
+
+
+def serve_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               state: Dict[str, Any], window: int = 0,
+               unroll: bool = False):
+    """One decode step: tokens (B,1) -> (logits (B,1,V), new state)."""
+    if cfg.arch_type == "ssm":
+        return rwkv6.decode_step(params, cfg, tokens, state, unroll=unroll)
+    if cfg.arch_type == "hybrid":
+        return zamba2.decode_step(params, cfg, tokens, state, window=window,
+                                  unroll=unroll)
+    if cfg.arch_type == "audio":
+        return encdec.decode_step(params, cfg, tokens, state, unroll=unroll)
+    return transformer.decode_step(params, cfg, tokens, state,
+                                   window=window or None, unroll=unroll)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            state: Dict[str, Any], window: int = 0, unroll: bool = False):
+    """Prompt processing (used by prefill_32k)."""
+    if cfg.arch_type in ("ssm", "hybrid"):
+        # recurrent prefill = training-mode forward; state is rebuilt by
+        # running the chunked scan (returned states omitted in this driver)
+        loss_logits = (rwkv6 if cfg.arch_type == "ssm" else zamba2).forward_lm(
+            params, cfg, batch["tokens"], unroll=unroll)[0]
+        return loss_logits[:, -1:], state
+    if cfg.arch_type == "audio":
+        state = encdec.start_serving(params, cfg, batch["frames"], state)
+        logits, _ = encdec.forward(params, cfg, batch["frames"],
+                                   batch["tokens"], unroll=unroll)
+        return logits[:, -1:], state
+    return transformer.prefill(params, cfg, batch["tokens"], state,
+                               patch_embeds=batch.get("patches"),
+                               window=window or None, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; the dry-run never allocates)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Training / prefill batch specs."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = {"tokens": tok}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.arch_type == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_frames, cfg.d_model), _dtype(cfg))
+    if cfg.arch_type == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), _dtype(cfg))
+    return specs
+
+
+def serve_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Decode-step specs: one token + a seq_len cache/state."""
+    b = shape.global_batch
+    window = serve_window(cfg, shape)
+    state = abstract_serve_state(cfg, b, shape.seq_len, window=window)
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "state": state,
+    }
+
+
+def make_concrete_batch(cfg: ModelConfig, shape: InputShape, key,
+                        vocab_cap: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Materialize a real batch (smoke tests / examples; small shapes only)."""
+    specs = input_specs(cfg, shape)
+    v = vocab_cap or cfg.vocab_size
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            out[name] = jax.random.randint(sub, spec.shape, 0, v)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+    return out

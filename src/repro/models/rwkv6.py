@@ -1,0 +1,230 @@
+"""RWKV6 "Finch": attention-free LM with data-dependent decay
+[arXiv:2404.05892].
+
+Time-mix uses the shared chunked linear recurrence (exclusive/RWKV
+convention, u bonus). Data-dependence: token-shift DDLerp with a low-rank
+adapter, and the per-channel decay w_t = exp(-exp(w0 + lora_w(x_mix))).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.shard_hints import BATCH, hint
+
+LORA_RANK = 32
+MIX_NAMES = ("r", "k", "v", "w", "g")
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_time_mix(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim if cfg.head_dim else 64
+    h = d // hd
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift DDLerp
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": jnp.zeros((len(MIX_NAMES), d), dt),
+        "lora_a": L.dense_init(ks[0], (d, LORA_RANK * len(MIX_NAMES)), dtype=dt),
+        "lora_b": L.dense_init(ks[1], (len(MIX_NAMES), LORA_RANK, d), dtype=dt),
+        # projections
+        "wr": L.dense_init(ks[2], (d, d), dtype=dt),
+        "wk": L.dense_init(ks[3], (d, d), dtype=dt),
+        "wv": L.dense_init(ks[4], (d, d), dtype=dt),
+        "wg": L.dense_init(ks[5], (d, d), dtype=dt),
+        "wo": L.dense_init(ks[6], (d, d), dtype=dt),
+        # decay
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": L.dense_init(ks[7], (d, 64), dtype=dt),
+        "w_lora_b": L.dense_init(ks[8], (64, d), dtype=dt),
+        # per-head current-token bonus
+        "u": (jax.random.normal(ks[9], (h, hd)) * 0.1).astype(jnp.float32),
+        # output group-norm
+        "gn_w": jnp.ones((d,), jnp.float32),
+        "gn_b": jnp.zeros((d,), jnp.float32),
+    }
+    return p
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dt),
+        "mu_r": jnp.zeros((d,), dt),
+        "wk": L.dense_init(ks[0], (d, f), dtype=dt),
+        "wv": L.dense_init(ks[1], (f, d), dtype=dt),
+        "wr": L.dense_init(ks[2], (d, d), dtype=dt),
+    }
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "ln2": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "tm": init_time_mix(k1, cfg),
+        "cm": init_channel_mix(k2, cfg),
+    }
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_layer(ks[i], cfg) for i in range(cfg.num_layers)])
+    return {
+        "embed": L.embed_init(ks[-2], (cfg.vocab_size, cfg.d_model), _dtype(cfg)),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "lm_head": L.dense_init(ks[-1], (cfg.d_model, cfg.vocab_size),
+                                dtype=_dtype(cfg)),
+    }
+
+
+def abstract_lm(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(functools.partial(init_lm, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _ddlerp(p: dict, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift interpolation -> 5 mixed streams."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_x"]
+    lo = jnp.tanh(xx @ p["lora_a"])                    # (..., 5*R)
+    lo = lo.reshape(*lo.shape[:-1], len(MIX_NAMES), LORA_RANK)
+    adj = jnp.einsum("...nr,nrd->...nd", lo, p["lora_b"])
+    mixed = x[..., None, :] + dx[..., None, :] * (p["mu"] + adj)
+    return tuple(mixed[..., i, :] for i in range(len(MIX_NAMES)))
+
+
+def time_mix(p: dict, x: jax.Array, x_prev: jax.Array, cfg: ModelConfig,
+             state: Optional[jax.Array] = None, chunk: int = 64):
+    """x: (B,T,d); x_prev: x shifted right by one (last token of prior
+    context). Returns (out, final_wkv_state)."""
+    b, t, d = x.shape
+    hd = cfg.resolved_head_dim if cfg.head_dim else 64
+    h = d // hd
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_raw = p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+                       ).astype(jnp.float32)
+    log_w = -jnp.exp(w_raw)                            # <= 0 (decay in (0,1])
+    log_w = log_w.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    y, fin = L.chunked_linear_recurrence(r, k, v, log_w, chunk=min(chunk, t),
+                                         u=p["u"], init_state=state)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    y = L.group_norm_heads(y.astype(x.dtype), p["gn_w"], p["gn_b"], h)
+    return (y * g) @ p["wo"], fin
+
+
+def time_mix_step(p: dict, x: jax.Array, x_prev: jax.Array,
+                  cfg: ModelConfig, state: jax.Array):
+    """Single-token decode. x, x_prev: (B, d). state: (B,H,hd,hd)."""
+    b, d = x.shape
+    hd = cfg.resolved_head_dim if cfg.head_dim else 64
+    h = d // hd
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(b, h, hd)
+    k = (xk @ p["wk"]).reshape(b, h, hd)
+    v = (xv @ p["wv"]).reshape(b, h, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_raw = p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+                       ).astype(jnp.float32)
+    log_w = -jnp.exp(w_raw).reshape(b, h, hd)
+    y, new_state = L.linear_recurrence_step(r, k, v, log_w, state, u=p["u"])
+    y = y.reshape(b, d)
+    y = L.group_norm_heads(y.astype(x.dtype), p["gn_w"], p["gn_b"], h)
+    return (y * g) @ p["wo"], new_state
+
+
+def channel_mix(p: dict, x: jax.Array, x_prev: jax.Array):
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+
+
+def _shift(x: jax.Array) -> jax.Array:
+    """(B,T,d) -> x shifted right one step, zero-padded."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def forward_lm(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               remat: bool = False,
+               unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens]
+
+    def body(h, lp):
+        h = hint(h, BATCH, None, None)
+        z = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        tm_out, _ = time_mix(lp["tm"], z, _shift(z), cfg)
+        h = h + tm_out
+        z = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + channel_mix(lp["cm"], z, _shift(z))
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"],
+                        unroll=cfg.num_layers if unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hint(x @ params["lm_head"], BATCH, None, "model"), \
+        jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent O(1) state; long_500k runs natively)
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim if cfg.head_dim else 64
+    h = d // hd
+    dt = _dtype(cfg)
+    return {
+        "tm_x": jnp.zeros((cfg.num_layers, batch, d), dt),
+        "cm_x": jnp.zeros((cfg.num_layers, batch, d), dt),
+        "wkv": jnp.zeros((cfg.num_layers, batch, h, hd, hd), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                state: Dict[str, Any],
+                unroll: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B,1). Returns (logits (B,1,V), new state)."""
+    x = params["embed"][tokens[:, 0]]
+
+    def body(h, xs):
+        lp, tm_x, cm_x, wkv = xs
+        z = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        tm_out, wkv = time_mix_step(lp["tm"], z, tm_x, cfg, wkv)
+        new_tm_x = z
+        h = h + tm_out
+        z = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + channel_mix(lp["cm"], z, cm_x)
+        return h, (new_tm_x, z, wkv)
+
+    x, (tm_x, cm_x, wkv) = jax.lax.scan(
+        body, x, (params["layers"], state["tm_x"], state["cm_x"],
+                  state["wkv"]), unroll=cfg.num_layers if unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, None]
+    new_state = {"tm_x": tm_x, "cm_x": cm_x, "wkv": wkv,
+                 "pos": state["pos"] + 1}
+    return logits, new_state

@@ -1,0 +1,251 @@
+"""Decoder-only transformer LM (dense, MoE, VLM-backbone variants).
+
+Layers are stacked on a leading axis and applied with ``lax.scan`` to keep the
+HLO size independent of depth. Supports training forward, prefill (builds a KV
+cache) and single-token decode with either a full-length KV cache or a
+sliding-window ring buffer (used by ``long_500k`` for dense archs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_block
+from repro.models.shard_hints import BATCH, hint
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_layer(key, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, hd, cfg.qkv_bias, dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.moe, dt)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, cfg.num_layers + 2)
+    dt = _dtype(cfg)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_layer(ks[i], cfg) for i in range(cfg.num_layers)])
+    p = {
+        "embed": L.embed_init(ks[-2], (cfg.vocab_size, cfg.d_model), dt),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[-1], (cfg.d_model, cfg.vocab_size),
+                                    dtype=dt)
+    if cfg.num_patches:   # VLM patch-projector stub (frontend supplies embeds)
+        p["patch_proj"] = L.dense_init(ks[-1], (cfg.d_model, cfg.d_model),
+                                       dtype=dt)
+    return p
+
+
+def abstract_lm(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(
+        functools.partial(init_lm, cfg), jax.random.PRNGKey(0))
+
+
+def _layer_apply(cfg: ModelConfig, lp: dict, x, positions, mask,
+                 kv_cache=None, cache_positions=None):
+    hd = cfg.resolved_head_dim
+    # pin activations batch-sharded; for dense layers additionally
+    # sequence-sharded over 'model' (sequence parallelism) so the
+    # remat-saved residual stream lives sharded. MoE layers keep the seq
+    # axis unsharded: their dispatch is a global token sort/scatter and
+    # seq-sharding it measurably *doubles* memory + collectives
+    # (kimi-k2: 242 -> 548 GiB/dev; see EXPERIMENTS.md it-7).
+    if cfg.moe is None:
+        x = hint(x, BATCH, "model", None)
+    else:
+        x = hint(x, BATCH, None, None)
+    h, new_cache = L.attention_block(
+        lp["attn"], L.rms_norm(x, lp["ln1"], cfg.norm_eps),
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads, head_dim=hd,
+        rope_theta=cfg.rope_theta, positions=positions, mask=mask,
+        kv_cache=kv_cache, cache_positions=cache_positions)
+    x = x + h
+    y = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        b, s, d = y.shape
+        out, aux = moe_block(lp["moe"], y.reshape(b * s, d), cfg.moe)
+        x = x + out.reshape(b, s, d)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        x = x + L.mlp_block(lp["mlp"], y)
+    return x, aux, new_cache
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                 patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if patch_embeds is not None:
+        proj = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([proj, x], axis=1)
+    return x
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    # keep the vocab axis model-sharded and batch data-sharded: the fp32
+    # softmax/xent over a replicated (B,S,V) tensor would dominate HBM
+    return hint(logits, BATCH, None, "model")
+
+
+def forward_lm(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               patch_embeds: Optional[jax.Array] = None,
+               sliding_window: Optional[int] = None,
+               remat: bool = False,
+               unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Training/prefill forward. Returns (logits, aux_loss)."""
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    b, s, _ = x.shape
+    prefix = patch_embeds.shape[1] if patch_embeds is not None else 0
+    pos1d = jnp.arange(s, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos1d, (b, s))
+    window = cfg.sliding_window if sliding_window is None else sliding_window
+    # batch-free (S, S) mask: broadcast in attention, never materialized per-B
+    mask = L.attention_scores_mask(pos1d, pos1d,
+                                   sliding_window=window, prefix_len=prefix)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a, _ = _layer_apply(cfg, lp, h, positions, mask)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"],
+                               unroll=cfg.num_layers if unroll else 1)
+    return unembed(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window: int = 0) -> Dict[str, Any]:
+    """window > 0 -> ring buffer of that size (sliding-window serving)."""
+    size = min(max_len, window) if window else max_len
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    shape = (cfg.num_layers, batch, size, cfg.num_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        # actual sequence position held in each slot (-1 = empty)
+        "kpos": jnp.full((batch, size), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            cache: Dict[str, Any],
+            patch_embeds: Optional[jax.Array] = None,
+            window: Optional[int] = None,
+            unroll: bool = False,
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the prompt through the model, writing the KV cache.
+
+    ``window`` (static) overrides ``cfg.sliding_window`` for the sliding-window
+    serving mode. The prompt must fit the cache (ring wrap during a single
+    prefill is not supported; long-context serving decodes step-by-step).
+    """
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    b, s, _ = x.shape
+    prefix = patch_embeds.shape[1] if patch_embeds is not None else 0
+    pos1d = jnp.arange(s, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos1d, (b, s))
+    size = cache["k"].shape[2]
+    assert s <= size, "prefill longer than cache; decode incrementally instead"
+    cache_positions = positions % size
+    window = cfg.sliding_window if window is None else window
+    # attention runs over the whole cache: mask by slot positions, with
+    # not-yet-written slots invalid
+    slot = jnp.arange(size, dtype=jnp.int32)
+    mask = L.attention_scores_mask(pos1d, slot, k_valid=slot < s,
+                                   sliding_window=window, prefix_len=prefix)
+
+    def body2(carry, xs):
+        h = carry
+        lp, ck, cv = xs
+        h, _, new_kv = _layer_apply(cfg, lp, h, positions, mask,
+                                    kv_cache=(ck, cv),
+                                    cache_positions=cache_positions)
+        return h, new_kv
+
+    x, (ks, vs) = jax.lax.scan(body2, x, (params["layers"], cache["k"],
+                                          cache["v"]),
+                               unroll=cfg.num_layers if unroll else 1)
+    cache = dict(cache)
+    cache["k"], cache["v"] = ks, vs
+    bidx = jnp.arange(b)[:, None]
+    cache["kpos"] = cache["kpos"].at[bidx, cache_positions].set(positions)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    logits = unembed(params, cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict[str, Any],
+                window: Optional[int] = None,
+                unroll: bool = False,
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B, 1) next-token ids. One autoregressive step.
+
+    ``window`` (static) overrides ``cfg.sliding_window`` (sliding-window
+    serving over a ring-buffer cache)."""
+    b = tokens.shape[0]
+    x = embed_inputs(params, cfg, tokens)
+    positions = cache["pos"][:, None]                      # (B,1)
+    size = cache["k"].shape[2]
+    cache_positions = positions % size
+    eff_window = cfg.sliding_window if window is None else window
+    # mask over cache slots: valid slots, causal, window
+    kpos = cache["kpos"]
+    bidx = jnp.arange(b)[:, None]
+    kpos = kpos.at[bidx, cache_positions].set(positions)   # slot being written
+    mask = L.attention_scores_mask(positions, kpos, k_valid=kpos >= 0,
+                                   sliding_window=eff_window)
+
+    def body(h, xs):
+        lp, ck, cv = xs
+        h, _, new_kv = _layer_apply(cfg, lp, h, positions, mask,
+                                    kv_cache=(ck, cv),
+                                    cache_positions=cache_positions)
+        return h, new_kv
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]),
+                               unroll=cfg.num_layers if unroll else 1)
+    cache = dict(cache)
+    cache["k"], cache["v"] = ks, vs
+    cache["kpos"] = kpos
+    cache["pos"] = cache["pos"] + 1
+    return unembed(params, cfg, x), cache

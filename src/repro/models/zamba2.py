@@ -1,0 +1,193 @@
+"""Zamba2 hybrid: Mamba2 backbone + one *shared* attention block applied
+every `hybrid_attn_every` core blocks [arXiv:2411.15242].
+
+The shared block (attention + MLP, single weight set) is reused at each
+application point — the defining Zamba trick. Mamba core blocks are stacked
+and scanned in groups between shared-block applications.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.shard_hints import BATCH, hint
+from repro.models.mamba2 import (init_mamba, mamba_mix, mamba_mix_step,
+                                 ssm_state_shapes)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _group_sizes(cfg: ModelConfig):
+    """Split num_layers mamba blocks into groups; a shared attention block is
+    applied after every group except possibly the unpadded tail."""
+    k = max(cfg.hybrid_attn_every, 1)
+    n = cfg.num_layers
+    sizes = [k] * (n // k)
+    if n % k:
+        sizes.append(n % k)
+    return sizes
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> dict:
+    return {
+        "ln": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "mamba": init_mamba(key, cfg, _dtype(cfg)),
+    }
+
+
+def init_lm(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, cfg.num_layers + 4)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_mamba_block(ks[i], cfg) for i in range(cfg.num_layers)])
+    shared = {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attention(ks[-4], cfg.d_model, cfg.num_heads,
+                                 cfg.num_kv_heads, cfg.resolved_head_dim,
+                                 cfg.qkv_bias, dt),
+        "mlp": L.init_mlp(ks[-3], cfg.d_model, cfg.d_ff, dt),
+    }
+    return {
+        "embed": L.embed_init(ks[-2], (cfg.vocab_size, cfg.d_model), dt),
+        "mamba_layers": stacked,
+        "shared": shared,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": L.dense_init(ks[-1], (cfg.d_model, cfg.vocab_size), dtype=dt),
+    }
+
+
+def abstract_lm(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(functools.partial(init_lm, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def _take_group(stacked, start: int, size: int):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + size),
+                        stacked)
+
+
+def _shared_attn(params, cfg: ModelConfig, x, positions, mask,
+                 kv_cache=None, cache_positions=None):
+    sp = params["shared"]
+    x = hint(x, BATCH, None, None)
+    h, new_cache = L.attention_block(
+        sp["attn"], L.rms_norm(x, sp["ln1"], cfg.norm_eps),
+        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        positions=positions, mask=mask, kv_cache=kv_cache,
+        cache_positions=cache_positions)
+    x = x + h
+    x = x + L.mlp_block(sp["mlp"], L.rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return x, new_cache
+
+
+def forward_lm(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               sliding_window: int = 0, remat: bool = False,
+               unroll: bool = False) -> Tuple[jax.Array, jax.Array]:
+    x = params["embed"][tokens]
+    b, s, _ = x.shape
+    pos1d = jnp.arange(s, dtype=jnp.int32)
+    positions = jnp.broadcast_to(pos1d, (b, s))
+    mask = L.attention_scores_mask(pos1d, pos1d,
+                                   sliding_window=sliding_window)
+
+    def mamba_body(h, lp):
+        # sequence parallelism: between blocks the residual stream stays
+        # sharded over ('model' x sequence) so layer boundaries move
+        # (B, S/16, d) shards instead of bouncing f32 cotangents through a
+        # replicated layout (52 GiB/step measured; see EXPERIMENTS.md)
+        h = hint(h, BATCH, "model", None)
+        out, _, _ = mamba_mix(lp["mamba"],
+                              L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+        return h + out, None
+
+    body_fn = jax.checkpoint(mamba_body) if remat else mamba_body
+    start = 0
+    for gsize in _group_sizes(cfg):
+        group = _take_group(params["mamba_layers"], start, gsize)
+        x, _ = jax.lax.scan(body_fn, x, group,
+                            unroll=gsize if unroll else 1)
+        x, _ = _shared_attn(params, cfg, x, positions, mask)
+        start += gsize
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return hint(x @ params["lm_head"], BATCH, None, "model"), \
+        jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode: mamba states per layer + a KV cache per shared-attention site
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               window: int = 0) -> Dict[str, Any]:
+    ssm_shape, conv_shape = ssm_state_shapes(cfg, batch)
+    n_sites = len(_group_sizes(cfg))
+    size = min(max_len, window) if window else max_len
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.num_layers,) + ssm_shape, jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers,) + conv_shape, dt),
+        "k": jnp.zeros((n_sites, batch, size, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((n_sites, batch, size, cfg.num_kv_heads, hd), dt),
+        "kpos": jnp.full((batch, size), -1, jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                state: Dict[str, Any], window: int = 0,
+                unroll: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B,1) -> (logits (B,1,V), new state)."""
+    b = tokens.shape[0]
+    x = params["embed"][tokens[:, 0]]
+    positions = state["pos"][:, None]
+    size = state["k"].shape[2]
+    cache_positions = positions % size
+    bidx = jnp.arange(b)[:, None]
+    kpos = state["kpos"].at[bidx, cache_positions].set(positions)
+    mask = L.attention_scores_mask(positions, kpos, k_valid=kpos >= 0,
+                                   sliding_window=window)
+
+    def mamba_body(h, xs):
+        lp, ssm, conv = xs
+        out, ssm, conv = mamba_mix_step(
+            lp["mamba"], L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg, ssm, conv)
+        return h + out, (ssm, conv)
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    start = 0
+    for site, gsize in enumerate(_group_sizes(cfg)):
+        group = _take_group(params["mamba_layers"], start, gsize)
+        ssm_g = jax.lax.slice_in_dim(state["ssm"], start, start + gsize)
+        conv_g = jax.lax.slice_in_dim(state["conv"], start, start + gsize)
+        x, (ssm_g, conv_g) = jax.lax.scan(mamba_body, x,
+                                          (group, ssm_g, conv_g),
+                                          unroll=gsize if unroll else 1)
+        new_ssm.append(ssm_g)
+        new_conv.append(conv_g)
+        x3 = x[:, None]
+        x3, kv = _shared_attn(params, cfg, x3, positions, mask,
+                              kv_cache=(state["k"][site], state["v"][site]),
+                              cache_positions=cache_positions)
+        x = x3[:, 0]
+        new_k.append(kv[0])
+        new_v.append(kv[1])
+        start += gsize
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"])[:, None]
+    new_state = {
+        "ssm": jnp.concatenate(new_ssm), "conv": jnp.concatenate(new_conv),
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+        "kpos": kpos, "pos": state["pos"] + 1,
+    }
+    return logits, new_state

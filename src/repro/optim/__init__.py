@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OptState, adamw, apply_updates, momentum,
+                                    sgd)
+from repro.optim.schedule import constant, cosine_decay, warmup_cosine
+
+__all__ = ["OptState", "adamw", "apply_updates", "constant", "cosine_decay",
+           "momentum", "sgd", "warmup_cosine"]

@@ -1,0 +1,28 @@
+"""Learning-rate schedules as step -> lr callables (jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, final_frac: float = 0.1):
+    def f(step):
+        frac = jnp.clip(step / max(decay_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * cos),
+                           jnp.float32)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        warm = lr * jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        return jnp.where(step < warmup_steps, warm,
+                         cos(step - warmup_steps)).astype(jnp.float32)
+    return f

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (HW, collective_bytes_from_hlo,
+                                     roofline_report)
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_report"]

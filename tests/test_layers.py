@@ -1,0 +1,109 @@
+"""Shared-layer math: chunked recurrence (hypothesis sweep), GQA attention,
+norms, rope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 2), h=st.integers(1, 3),
+    nc=st.integers(1, 4), chunk=st.sampled_from([8, 16]),
+    dk=st.sampled_from([4, 16]), dv=st.sampled_from([4, 24]),
+    exclusive=st.booleans(), with_init=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_chunked_recurrence_matches_scan(b, h, nc, chunk, dk, dv, exclusive,
+                                         with_init, seed):
+    t = nc * chunk
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, h, t, dk))
+    k = jax.random.normal(ks[1], (b, h, t, dk))
+    v = jax.random.normal(ks[2], (b, h, t, dv))
+    lw = -jnp.abs(jax.random.normal(ks[3], (b, h, t, dk))) * 0.2
+    u = jax.random.normal(ks[4], (h, dk)) * 0.3 if exclusive else None
+    s0 = (jax.random.normal(ks[5], (b, h, dk, dv)) * 0.2
+          if with_init else None)
+    y1, f1 = L.chunked_linear_recurrence(r, k, v, lw, chunk=chunk, u=u,
+                                         init_state=s0)
+    y2, f2 = L.linear_recurrence_ref(r, k, v, lw, u=u, init_state=s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_recurrence_step_composes_with_chunked():
+    """Running decode steps after a chunked prefix == chunked on the whole."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    b, h, t, dk, dv = 1, 2, 32, 8, 8
+    r = jax.random.normal(ks[0], (b, h, t, dk))
+    k = jax.random.normal(ks[1], (b, h, t, dk))
+    v = jax.random.normal(ks[2], (b, h, t, dv))
+    lw = -jnp.abs(jax.random.normal(ks[3], (b, h, t, dk))) * 0.2
+    u = jax.random.normal(ks[4], (h, dk)) * 0.3
+    y_all, _ = L.chunked_linear_recurrence(r, k, v, lw, chunk=8, u=u)
+    half = t // 2
+    _, s_half = L.chunked_linear_recurrence(
+        r[:, :, :half], k[:, :, :half], v[:, :, :half], lw[:, :, :half],
+        chunk=8, u=u)
+    s = s_half
+    for i in range(half, t):
+        y_i, s = L.linear_recurrence_step(r[:, :, i], k[:, :, i],
+                                          v[:, :, i], lw[:, :, i], s, u=u)
+        np.testing.assert_allclose(np.asarray(y_i), np.asarray(y_all[:, :, i]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_gqa_attention_equals_mha_when_kv_equals_h():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    b, s, h, d = 2, 16, 4, 8
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, h, d))
+    v = jax.random.normal(ks[2], (b, s, h, d))
+    pos = jnp.arange(s)
+    mask = L.attention_scores_mask(pos, pos)
+    out = L.gqa_attention(q, k, v, mask)
+    # naive reference
+    import math
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k) / math.sqrt(d)
+    scores = scores + mask[None, None]
+    ref = jnp.einsum("bhqs,bshd->bqhd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_mask_semantics():
+    pos = jnp.arange(6)
+    m = L.attention_scores_mask(pos, pos)
+    assert m.shape == (6, 6)
+    assert (np.asarray(m)[np.triu_indices(6, 1)] < -1e29).all()
+    m2 = L.attention_scores_mask(pos, pos, sliding_window=2)
+    assert m2[3, 1] < -1e29 and m2[3, 2] == 0.0
+    m3 = L.attention_scores_mask(pos, pos, prefix_len=3)
+    assert m3[0, 2] == 0.0  # prefix fully visible
+
+
+def test_rope_orthogonality():
+    """RoPE preserves norms and relative-position property."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rms_norm_zero_mean_scale():
+    x = jnp.array([[3.0, -4.0]])
+    w = jnp.zeros(2)
+    y = L.rms_norm(x, w)
+    np.testing.assert_allclose(np.mean(np.square(np.asarray(y))), 1.0,
+                               rtol=1e-4)

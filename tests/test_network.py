@@ -1,0 +1,49 @@
+"""HFL wireless network simulator invariants."""
+import numpy as np
+
+from repro.configs.paper_hfl import CIFAR10_NONCONVEX, MNIST_CONVEX
+from repro.core.network import HFLNetworkSim
+
+
+def test_deterministic_given_seed():
+    a = HFLNetworkSim(MNIST_CONVEX, seed=7).round(0)
+    b = HFLNetworkSim(MNIST_CONVEX, seed=7).round(0)
+    np.testing.assert_array_equal(a.outcomes, b.outcomes)
+    np.testing.assert_array_equal(a.contexts, b.contexts)
+    c = HFLNetworkSim(MNIST_CONVEX, seed=8).round(0)
+    assert not np.array_equal(a.contexts, c.contexts)
+
+
+def test_context_bounds_and_shapes():
+    sim = HFLNetworkSim(MNIST_CONVEX, seed=0)
+    for t in range(5):
+        rd = sim.round(t)
+        n, m = MNIST_CONVEX.num_clients, MNIST_CONVEX.num_edge_servers
+        assert rd.contexts.shape == (n, m, 2)
+        assert np.all(rd.contexts >= 0) and np.all(rd.contexts <= 1)
+        assert rd.eligible.any(axis=1).all(), "every client reaches some ES"
+        assert (rd.costs > 0).all()
+        assert set(np.unique(rd.outcomes)) <= {0.0, 1.0}
+        assert np.all((rd.true_p >= 0) & (rd.true_p <= 1))
+
+
+def test_deadline_monotonicity():
+    """A longer deadline can only increase participation probability."""
+    import dataclasses as dc
+    tight = HFLNetworkSim(MNIST_CONVEX, seed=1).round(0)
+    loose = HFLNetworkSim(dc.replace(MNIST_CONVEX, deadline_s=30.0),
+                          seed=1).round(0)
+    assert loose.true_p.mean() >= tight.true_p.mean()
+    assert loose.outcomes.sum() >= tight.outcomes.sum()
+
+
+def test_better_compute_higher_success():
+    """true_p should correlate positively with the compute context."""
+    sim = HFLNetworkSim(CIFAR10_NONCONVEX, seed=2)
+    rd = sim.round(0)
+    phi_comp = rd.contexts[:, 0, 1]
+    p = rd.true_p[:, 0]
+    mask = rd.eligible[:, 0]
+    if mask.sum() > 10:
+        corr = np.corrcoef(phi_comp[mask], p[mask])[0, 1]
+        assert corr > -0.2  # weak check: no inverse relationship

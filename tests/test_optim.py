@@ -1,0 +1,42 @@
+"""Optimizers + schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, apply_updates, momentum, sgd, warmup_cosine
+from repro.optim.schedule import constant, cosine_decay
+
+
+@pytest.mark.parametrize("opt", [sgd(), momentum(0.9), adamw()])
+def test_optimizers_minimize_quadratic(opt):
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params, 0.05)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_schedules():
+    assert float(constant(0.1)(50)) == pytest.approx(0.1)
+    cd = cosine_decay(1.0, 100, final_frac=0.1)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.1, abs=1e-6)
+    wc = warmup_cosine(1.0, 10, 100)
+    assert float(wc(5)) == pytest.approx(0.5)
+    assert float(wc(10)) == pytest.approx(1.0)
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(weight_decay=0.1)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"w": jnp.array([0.0])}
+    upd, state = opt.update(g, state, params, 0.1)
+    assert float(apply_updates(params, upd)["w"][0]) < 1.0

@@ -1,0 +1,84 @@
+"""P2/P3 solvers: feasibility invariants (hypothesis) + optimality vs
+brute force on small instances."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.selection import (SelectionProblem, brute_force_select,
+                                  check_feasible, flgreedy_select,
+                                  greedy_select, max_cardinality_select,
+                                  selection_utility)
+
+
+def random_problem(rng, n, m, budget=None):
+    values = rng.uniform(0, 1, (n, m))
+    costs = rng.uniform(0.2, 1.0, n)
+    budgets = np.full(m, budget if budget is not None
+                      else rng.uniform(0.5, 2.0))
+    eligible = rng.uniform(size=(n, m)) < 0.7
+    return SelectionProblem(values, costs, budgets, eligible)
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12),
+       m=st.integers(1, 4))
+def test_greedy_always_feasible(seed, n, m):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n, m)
+    assert check_feasible(prob, greedy_select(prob))
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 12),
+       m=st.integers(1, 4))
+def test_flgreedy_always_feasible(seed, n, m):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n, m)
+    assert check_feasible(prob, flgreedy_select(prob))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 10),
+       m=st.integers(1, 3))
+def test_max_cardinality_feasible(seed, n, m):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, n, m)
+    mask = rng.uniform(size=(n, m)) < 0.5
+    assert check_feasible(prob, max_cardinality_select(prob, mask))
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_greedy_near_optimal_small(seed):
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, 7, 2)
+    opt_assign, opt = brute_force_select(prob)
+    g = selection_utility(prob, greedy_select(prob))
+    assert g >= 0.5 * opt - 1e-9, (g, opt)
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_flgreedy_approximation_guarantee(seed):
+    """Lemma 3: FLGreedy >= opt / ((1+eps)(2+2M)) for the sqrt utility."""
+    rng = np.random.default_rng(seed)
+    prob = random_problem(rng, 7, 2)
+    _, opt = brute_force_select(prob, sqrt_utility=True)
+    v = selection_utility(prob, flgreedy_select(prob), sqrt_utility=True)
+    m = prob.m
+    assert v >= opt / ((1 + 0.3) * (2 + 2 * m)) - 1e-9
+
+
+def test_brute_force_respects_budget():
+    rng = np.random.default_rng(3)
+    prob = random_problem(rng, 6, 2, budget=0.5)
+    assign, _ = brute_force_select(prob)
+    assert check_feasible(prob, assign)
+
+
+def test_utility_counts_selected_outcomes():
+    values = np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]])
+    prob = SelectionProblem(values, np.ones(3), np.array([10.0, 10.0]),
+                            np.ones((3, 2), bool))
+    assign = np.array([0, 1, -1])
+    assert selection_utility(prob, assign) == 2.0
+    outcomes = np.zeros((3, 2))
+    assert selection_utility(prob, assign, outcomes=outcomes) == 0.0

@@ -1,0 +1,70 @@
+"""Sharding rules + roofline HLO parsing (no multi-device compile here; the
+512-device lowering is exercised by repro.launch.dryrun)."""
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (_shape_bytes, collective_bytes_from_hlo,
+                                     roofline_report)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_collective_parsing():
+    hlo = """
+  %ag = f32[32,128]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = bf16[64]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[16]{0} reduce-scatter(%z), dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(%w)
+  %a2a = f32[4]{0} all-to-all(%v)
+  %ags = f32[2,2]{1,0} all-gather-start(%q)
+  %agd = f32[2,2]{1,0} all-gather-done(%ags)
+  %not_a_coll = f32[999,999]{1,0} add(%a, %b)
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 32 * 128 * 4 + 2 * 2 * 4  # incl -start only
+    assert out["all-reduce"] == 64 * 2
+    assert out["reduce-scatter"] == 16 * 4
+    assert out["collective-permute"] == 8 * 8 * 4
+    assert out["all-to-all"] == 16
+
+
+def test_roofline_dominant_term():
+    r = roofline_report(flops_per_device=197e12, bytes_per_device=0.0,
+                        collective_bytes_per_device=0.0, chips=4)
+    assert r["dominant"] == "compute_s"
+    assert r["compute_s"] == pytest.approx(1.0)
+    r2 = roofline_report(1.0, 819e9, 0.0, chips=4, model_flops=2.0)
+    assert r2["dominant"] == "memory_s"
+    assert r2["useful_flops_frac"] == pytest.approx(0.5)
+
+
+def test_param_spec_rules():
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import param_spec
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # pattern rule hits with divisibility (mesh axes of size 1 divide all)
+    assert param_spec("layers/attn/wq", (28, 64, 64), mesh) == \
+        P(None, "data", "model")
+    assert param_spec("layers/moe/w_gate", (28, 8, 64, 32), mesh) == \
+        P(None, "model", "data", None)
+    assert param_spec("embed", (100, 64), mesh) == P("model", "data")
+
+
+def test_param_spec_divisibility_fallback():
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import param_spec
+    # fake a (1, 2)-ish logical mesh using a reshaped single device is not
+    # possible; instead check the pure helper on a mesh dict via monkeypatch
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = param_spec("layers/attn/wq", (28, 100, 96), FakeMesh())
+    # 100 % 16 != 0 -> pattern fails -> greedy: 96 divisible -> model
+    assert spec == P(None, None, "model")

@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests for the paper's system: COCS in the HFL loop
+reproduces the paper's qualitative claims on the simulated network.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.paper_hfl import CIFAR10_NONCONVEX, MNIST_CONVEX
+from repro.core.utility import run_bandit_experiment
+
+
+@pytest.fixture(scope="module")
+def convex_result():
+    return run_bandit_experiment(MNIST_CONVEX, horizon=600, seed=1)
+
+
+def test_policy_ordering_matches_paper(convex_result):
+    """Fig. 3a: Oracle > COCS > {LinUCB, CUCB, Random}."""
+    res = convex_result
+    cum = {k: res.cumulative(k)[-1] for k in res.policies}
+    assert cum["Oracle"] >= cum["COCS"]
+    assert cum["COCS"] > cum["LinUCB"]
+    assert cum["COCS"] > cum["CUCB"]
+    assert cum["COCS"] > cum["Random"]
+
+
+def test_cocs_regret_vs_realized_oracle_bounded(convex_result):
+    """Fig. 3b analogue: regret vs the realized-X oracle stays well below the
+    Random policy's (the oracle knows per-round fading luck, so this regret
+    cannot vanish; sublinearity proper is checked against the expectation
+    oracle in test_cocs.py)."""
+    assert convex_result.regret("COCS")[-1] < \
+        convex_result.regret("Random")[-1] * 0.75
+
+
+def test_participation_dominates_random(convex_result):
+    """Fig. 4b analogue: COCS sustains more successful participants than
+    Random in every window and does not collapse over time. (The paper's
+    phased COCS *rises* from a poor start; our index-mode default starts
+    strong thanks to optimistic initialization — see EXPERIMENTS.md.)"""
+    cocs = convex_result.participants["COCS"]
+    rand = convex_result.participants["Random"]
+    for lo in range(0, 600, 150):
+        assert cocs[lo:lo + 150].mean() > rand[lo:lo + 150].mean()
+    assert cocs[-150:].mean() >= 0.85 * cocs[:150].mean()
+
+
+def test_budget_monotonicity():
+    """Fig. 4c/4d: larger budget -> more cumulative utility for COCS."""
+    lo = run_bandit_experiment(MNIST_CONVEX, horizon=250, seed=2,
+                               which=["COCS"], budget=2.0)
+    hi = run_bandit_experiment(MNIST_CONVEX, horizon=250, seed=2,
+                               which=["COCS"], budget=5.0)
+    assert hi.cumulative("COCS")[-1] > lo.cumulative("COCS")[-1]
+
+
+def test_deadline_monotonicity():
+    """Fig. 4e/4f: longer deadline -> more cumulative utility."""
+    lo = run_bandit_experiment(MNIST_CONVEX, horizon=250, seed=2,
+                               which=["COCS"], deadline=2.0)
+    hi = run_bandit_experiment(MNIST_CONVEX, horizon=250, seed=2,
+                               which=["COCS"], deadline=8.0)
+    assert hi.cumulative("COCS")[-1] > lo.cumulative("COCS")[-1]
+
+
+def test_nonconvex_sqrt_utility_ordering():
+    """Fig. 5: same ordering under the non-convex sqrt utility (FLGreedy)."""
+    res = run_bandit_experiment(CIFAR10_NONCONVEX, horizon=300, seed=4,
+                                which=["Oracle", "COCS", "Random"])
+    cum = {k: res.cumulative(k)[-1] for k in res.policies}
+    assert cum["Oracle"] >= cum["COCS"] > cum["Random"]
