@@ -12,9 +12,9 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import FULL, Row, timed
+from repro import policies
 from repro.configs.paper_hfl import MNIST_CONVEX
 from repro.core.baselines import BasePolicy
-from repro.core.cocs import COCSConfig, COCSPolicy
 from repro.core.network import HFLNetworkSim
 from repro.core.selection import SelectionProblem, greedy_select
 from repro.core.utility import realized_utility
@@ -28,9 +28,9 @@ class _OracleP(BasePolicy):
 
 def _run(phased: bool, horizon: int):
     sim = HFLNetworkSim(MNIST_CONVEX, seed=1, mobility=0.0, jitter=0.05)
-    pol = COCSPolicy(COCSConfig(num_clients=50, num_edge_servers=3,
-                                horizon=horizon, budget=3.5, h_t=5,
-                                phased=phased))
+    spec = policies.PolicySpec.from_experiment(MNIST_CONVEX, horizon)
+    pol = policies.make_legacy("cocs-phased" if phased else "cocs",
+                               spec, h_t=5)
     oracle = _OracleP(50, 3, 3.5)
     gaps, util = [], []
     for t in range(horizon):

@@ -1,0 +1,67 @@
+"""Jitted multi-seed bandit engine vs the sequential Python driver.
+
+Both drivers consume the SAME precomputed realized rounds (8 seeds x 300
+rounds of the paper network), isolating the bandit hot path: COCS
+select+update per round. The legacy driver is the per-round Python loop
+(argsort greedy + numpy estimator update); the engine is one jitted
+lax.scan over rounds vmapped over seeds. The engine is warmed once so the
+row reports steady-state throughput; compile time is reported separately.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro import envs, policies
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.core.cocs import COCSConfig, COCSPolicy
+
+
+def run() -> List[Row]:
+    # deliberately NOT scaled down in quick mode: 8 seeds x 300 rounds is
+    # the reference sweep the speedup row is defined over (~15 s total)
+    seeds = list(range(8))
+    horizon = 300
+    env = envs.make("paper", MNIST_CONVEX)
+    rounds = [env.rollout(s, horizon) for s in seeds]
+    spec = policies.PolicySpec.from_experiment(MNIST_CONVEX, horizon)
+    pol = policies.make("cocs", spec, h_t=MNIST_CONVEX.h_t)
+    batch = policies.stack_rounds_multi(rounds)   # stacked once, like any
+    # other consumer of the engine; both drivers see identical rounds
+
+    t0 = time.perf_counter()
+    jit_out = policies.run_rounds_multi_seed(pol, batch, seeds)  # compile
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jit_out = policies.run_rounds_multi_seed(pol, batch, seeds)
+    jit_s = time.perf_counter() - t0
+
+    # baseline: the legacy numpy per-round Python driver on the same rounds
+    t0 = time.perf_counter()
+    legacy_sel = []
+    for s in seeds:
+        leg = COCSPolicy(COCSConfig(
+            num_clients=spec.num_clients,
+            num_edge_servers=spec.num_edge_servers, horizon=horizon,
+            budget=spec.budget, h_t=MNIST_CONVEX.h_t))
+        sel = []
+        for rd in rounds[s]:
+            a = leg.select(rd)
+            leg.update(rd, a)
+            sel.append(a)
+        legacy_sel.append(sel)
+    host_s = time.perf_counter() - t0
+
+    match = float(np.mean(jit_out["selections"] == np.array(legacy_sel)))
+    speedup = host_s / max(jit_s, 1e-9)
+    rows = [
+        ("engine_sweep_python_loop", host_s * 1e6,
+         f"seeds={len(seeds)};rounds={horizon}"),
+        ("engine_sweep_jit_scan_vmap", jit_s * 1e6,
+         f"speedup={speedup:.1f}x;selection_match={match:.4f};"
+         f"compile_s={compile_s:.2f}"),
+    ]
+    return rows

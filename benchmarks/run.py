@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.fig4_deadline",
     "benchmarks.fig567_nonconvex",
     "benchmarks.ablation_phased",
+    "benchmarks.engine_sweep",
     "benchmarks.kernels_bench",
     "benchmarks.roofline_report",
 ]

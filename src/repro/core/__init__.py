@@ -5,12 +5,13 @@ from repro.core.selection import (SelectionProblem, brute_force_select,
                                   greedy_select, max_cardinality_select,
                                   selection_utility)
 from repro.core.utility import (ExperimentResult, make_policies,
-                                realized_utility, run_bandit_experiment)
+                                realized_utility, run_bandit_experiment,
+                                run_bandit_sweep)
 
 __all__ = [
     "COCSConfig", "COCSPolicy", "ExperimentResult", "HFLNetworkSim",
     "RoundData", "SelectionProblem", "brute_force_select", "check_feasible",
     "cocs_update_jax", "flgreedy_select", "greedy_select",
     "make_policies", "max_cardinality_select", "realized_utility",
-    "run_bandit_experiment", "selection_utility",
+    "run_bandit_experiment", "run_bandit_sweep", "selection_utility",
 ]

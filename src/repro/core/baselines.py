@@ -138,6 +138,7 @@ class LinUCBPolicy(CUCBPolicy):
     def __init__(self, *args, lam: float = 1.0, beta: float = 0.8, **kwargs):
         super().__init__(*args, **kwargs)
         self.d = 5
+        self.beta = beta
         self.A = np.eye(self.d) * lam
         self.bvec = np.zeros(self.d)
 
@@ -164,7 +165,7 @@ class LinUCBPolicy(CUCBPolicy):
             x = self._arm_features(assign, rd)
             feats.append((assign, x))
             score = float(theta @ x
-                          + 0.8 * np.sqrt(max(x @ a_inv @ x, 0.0)))
+                          + self.beta * np.sqrt(max(x @ a_inv @ x, 0.0)))
             if score > best_score:
                 best, best_score = p_idx, score
         self._last_arm = best

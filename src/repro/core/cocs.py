@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.network import RoundData
 from repro.core.selection import (SelectionProblem, flgreedy_select,
-                                  greedy_select, max_cardinality_select)
+                                  greedy_select)
 
 
 def theorem2_params(horizon: int, alpha: float = 1.0) -> Tuple[float, int]:

@@ -33,6 +33,7 @@ class RoundData:
     true_p: np.ndarray      # (N, M) ground-truth participation probability
     compute: np.ndarray     # (N,) y_n (Hz proxy)
     bandwidth: np.ndarray   # (N,)
+    latency: Optional[np.ndarray] = None    # (N, M) realized tau (Eq. 5), s
 
 
 def _dbm_to_watt(dbm: float) -> float:
@@ -139,4 +140,4 @@ class HFLNetworkSim:
         true_p = (tau_mc <= c.deadline_s).mean(axis=0)
         return RoundData(t=t, contexts=contexts, eligible=eligible,
                          costs=costs, outcomes=outcomes, true_p=true_p,
-                         compute=compute, bandwidth=bandwidth)
+                         compute=compute, bandwidth=bandwidth, latency=tau)

@@ -65,35 +65,28 @@ def selection_utility(prob: SelectionProblem, assign: np.ndarray,
 # greedy (density) solver for P2 — the scalable oracle approximation
 
 
-def greedy_select(prob: SelectionProblem,
-                  prefer: Optional[np.ndarray] = None) -> np.ndarray:
+def greedy_select(prob: SelectionProblem) -> np.ndarray:
     """Greedy by value density v/c over all feasible (n, m) pairs.
 
-    prefer: optional (N, M) bool — restrict to these pairs first, then fill
-    with the rest (used by COCS exploration stage 2). Returns assign (N,).
+    Returns assign (N,): ES index per client, -1 = unselected.
     """
     n, m = prob.n, prob.m
     assign = np.full(n, -1, np.int64)
     remaining = prob.budgets.astype(np.float64).copy()
-    density = np.where(prob.eligible,
-                       prob.values / np.maximum(prob.costs[:, None], 1e-12),
-                       -np.inf)
-
-    def run_pass(pair_mask: np.ndarray):
-        d = np.where(pair_mask, density, -np.inf)
-        order = np.argsort(d, axis=None)[::-1]
-        for flat in order:
-            i, j = divmod(int(flat), m)
-            if not np.isfinite(d.flat[flat]) or d.flat[flat] <= 0:
-                break
-            if assign[i] >= 0 or prob.costs[i] > remaining[j] + 1e-12:
-                continue
-            assign[i] = j
-            remaining[j] -= prob.costs[i]
-
-    if prefer is not None:
-        run_pass(prefer & prob.eligible)
-    run_pass(prob.eligible)
+    d = np.where(prob.eligible,
+                 prob.values / np.maximum(prob.costs[:, None], 1e-12),
+                 -np.inf)
+    # stable sort so exact ties break deterministically (toward the larger
+    # flat index after reversal) — the vectorized JAX solver matches this
+    order = np.argsort(d, axis=None, kind="stable")[::-1]
+    for flat in order:
+        i, j = divmod(int(flat), m)
+        if not np.isfinite(d.flat[flat]) or d.flat[flat] <= 0:
+            break
+        if assign[i] >= 0 or prob.costs[i] > remaining[j] + 1e-12:
+            continue
+        assign[i] = j
+        remaining[j] -= prob.costs[i]
     return assign
 
 

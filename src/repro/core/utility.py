@@ -1,18 +1,34 @@
 """Utility / regret accounting (Eq. 7-8, 11, 19, 21) and the bandit
-experiment driver shared by benchmarks and tests."""
+experiment drivers shared by benchmarks and tests.
+
+``run_bandit_experiment`` keeps its historical signature but now runs on
+the unified policy/environment API: rounds are realized once by a
+``repro.envs`` environment and jax-capable policies (COCS, Oracle,
+Random) execute as a single jitted ``lax.scan`` over the round batch;
+host policies (CUCB, LinUCB, phased COCS) fall back to the sequential
+driver on the same rounds. ``run_bandit_sweep`` vmaps the scan over many
+seeds for batched regret curves.
+"""
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.configs.paper_hfl import HFLExperimentConfig
-from repro.core.baselines import (BasePolicy, CUCBPolicy, LinUCBPolicy,
-                                  OraclePolicy, RandomPolicy)
-from repro.core.cocs import COCSConfig, COCSPolicy
-from repro.core.network import HFLNetworkSim, RoundData
+from repro.core.network import RoundData
+
+# display name -> (registry name, seed offset) — offsets preserve the
+# legacy per-policy seeding so host baselines reproduce the seed runs
+POLICY_TABLE = {
+    "Oracle": ("oracle", 0),
+    "COCS": ("cocs", 0),
+    "CUCB": ("cucb", 1),
+    "LinUCB": ("linucb", 2),
+    "Random": ("random", 3),
+}
 
 
 def realized_utility(assign: np.ndarray, rd: RoundData,
@@ -41,23 +57,27 @@ class ExperimentResult:
         return np.cumsum(self.utilities[oracle] - self.utilities[name])
 
 
+def _policy_kwargs(cfg: HFLExperimentConfig, reg_name: str) -> dict:
+    if reg_name in ("cocs", "cocs-phased"):
+        return {"alpha": cfg.holder_alpha, "h_t": cfg.h_t}
+    return {}
+
+
 def make_policies(cfg: HFLExperimentConfig, horizon: int, seed: int = 0,
                   which: Optional[List[str]] = None,
-                  budget: Optional[float] = None) -> Dict[str, BasePolicy]:
-    b = cfg.budget if budget is None else budget
-    sqrt_u = cfg.utility == "sqrt"
-    n, m = cfg.num_clients, cfg.num_edge_servers
-    all_p = {
-        "Oracle": lambda: OraclePolicy(n, m, b, sqrt_u, seed),
-        "COCS": lambda: COCSPolicy(COCSConfig(
-            num_clients=n, num_edge_servers=m, horizon=horizon, budget=b,
-            alpha=cfg.holder_alpha, h_t=cfg.h_t, sqrt_utility=sqrt_u)),
-        "CUCB": lambda: CUCBPolicy(n, m, b, sqrt_u, seed + 1),
-        "LinUCB": lambda: LinUCBPolicy(n, m, b, sqrt_u, seed + 2),
-        "Random": lambda: RandomPolicy(n, m, b, sqrt_u, seed + 3),
-    }
-    names = which or list(all_p)
-    return {k: all_p[k]() for k in names}
+                  budget: Optional[float] = None) -> Dict[str, object]:
+    """Registry-constructed policies behind the legacy class interface."""
+    from repro import policies
+
+    spec = policies.PolicySpec.from_experiment(cfg, horizon, budget=budget)
+    names = which or list(POLICY_TABLE)
+    out = {}
+    for name in names:
+        reg_name, offset = POLICY_TABLE[name]
+        out[name] = policies.make_legacy(
+            reg_name, spec, seed=seed + offset, display_name=name,
+            **_policy_kwargs(cfg, reg_name))
+    return out
 
 
 def run_bandit_experiment(cfg: HFLExperimentConfig, horizon: int,
@@ -65,30 +85,60 @@ def run_bandit_experiment(cfg: HFLExperimentConfig, horizon: int,
                           which: Optional[List[str]] = None,
                           budget: Optional[float] = None,
                           deadline: Optional[float] = None,
+                          scenario: str = "paper",
                           ) -> ExperimentResult:
     """Run all policies against the SAME realized network (shared sim seed)."""
     import dataclasses as dc
+
+    from repro import envs, policies
+
     if deadline is not None:
         cfg = dc.replace(cfg, deadline_s=deadline)
-    sim = HFLNetworkSim(cfg, seed=seed)
-    policies = make_policies(cfg, horizon, seed=seed, which=which,
-                             budget=budget)
-    sqrt_u = cfg.utility == "sqrt"
-    utilities = {k: np.zeros(horizon) for k in policies}
-    participants = {k: np.zeros(horizon) for k in policies}
-    selections = {k: np.zeros((horizon, cfg.num_clients), np.int64)
-                  for k in policies}
-    explored = {k: np.zeros(horizon, bool) for k in policies}
-    for t in range(horizon):
-        rd = sim.round(t)
-        for name, pol in policies.items():
-            assign = pol.select(rd)
-            pol.update(rd, assign)
-            utilities[name][t] = realized_utility(assign, rd, sqrt_u)
-            participants[name][t] = realized_utility(assign, rd, False)
-            selections[name][t] = assign
-            if hasattr(pol, "last_explored"):
-                explored[name][t] = pol.last_explored
-    return ExperimentResult(policies=list(policies), utilities=utilities,
+    rounds = envs.make(scenario, cfg).rollout(seed, horizon)
+    spec = policies.PolicySpec.from_experiment(cfg, horizon, budget=budget)
+    names = which or list(POLICY_TABLE)
+    utilities, participants, selections, explored = {}, {}, {}, {}
+    for name in names:
+        reg_name, offset = POLICY_TABLE[name]
+        pol = policies.make(reg_name, spec, **_policy_kwargs(cfg, reg_name))
+        out = policies.run_rounds(pol, rounds, seed=seed + offset)
+        utilities[name] = np.asarray(out["utilities"], np.float64)
+        participants[name] = np.asarray(out["participants"], np.float64)
+        selections[name] = np.asarray(out["selections"], np.int64)
+        explored[name] = np.asarray(out["explored"], bool)
+    return ExperimentResult(policies=list(names), utilities=utilities,
                             participants=participants, selections=selections,
                             explored=explored)
+
+
+def run_bandit_sweep(cfg: HFLExperimentConfig, horizon: int,
+                     seeds: Sequence[int],
+                     which: Optional[List[str]] = None,
+                     budget: Optional[float] = None,
+                     scenario: str = "paper",
+                     ) -> Dict[str, np.ndarray]:
+    """Multi-seed regret sweep: one env rollout per seed, then each
+    jax-capable policy runs as scan-over-rounds vmapped over seeds.
+    Returns {display_name: (S, T) utilities}."""
+    from repro import envs, policies
+
+    env = envs.make(scenario, cfg)
+    rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
+    batch = policies.stack_rounds_multi(rounds_per_seed)  # stacked once
+    spec = policies.PolicySpec.from_experiment(cfg, horizon, budget=budget)
+    names = which or ["Oracle", "COCS", "Random"]
+    out: Dict[str, np.ndarray] = {}
+    for name in names:
+        reg_name, offset = POLICY_TABLE[name]
+        pol = policies.make(reg_name, spec, **_policy_kwargs(cfg, reg_name))
+        pol_seeds = [s + offset for s in seeds]
+        if pol.jax_capable:
+            res = policies.run_rounds_multi_seed(pol, batch, pol_seeds)
+            out[name] = np.asarray(res["utilities"], np.float64)
+        else:
+            out[name] = np.stack([
+                np.asarray(policies.run_rounds_host(
+                    pol, rounds_per_seed[i], seed=ps)["utilities"],
+                    np.float64)
+                for i, ps in enumerate(pol_seeds)])
+    return out

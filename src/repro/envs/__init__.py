@@ -1,0 +1,34 @@
+"""Environment registry: scenario-preset HFL network environments.
+
+    from repro import envs
+    env = envs.make("flash-crowd")             # paper cfg, surge pricing
+    env = envs.make("paper", CIFAR10_NONCONVEX)
+    env = envs.make("high-mobility", mobility=0.8)   # knob override
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Optional, Tuple
+
+from repro.configs.paper_hfl import HFLExperimentConfig, MNIST_CONVEX
+from repro.envs.base import EnvState, HFLEnv
+from repro.envs.scenarios import SCENARIOS, ScenarioSim, ScenarioSpec
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(SCENARIOS))
+
+
+def make(name: str = "paper", cfg: Optional[HFLExperimentConfig] = None,
+         **overrides) -> HFLEnv:
+    key = name.lower()
+    if key not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; available: {available()}")
+    spec = SCENARIOS[key]
+    if overrides:
+        spec = replace(spec, **overrides)
+    return HFLEnv(cfg=cfg or MNIST_CONVEX, spec=spec)
+
+
+__all__ = ["EnvState", "HFLEnv", "SCENARIOS", "ScenarioSim", "ScenarioSpec",
+           "available", "make"]

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_hfl import HFLExperimentConfig
-from repro.core.baselines import BasePolicy
 from repro.core.network import HFLNetworkSim
 from repro.data.federated import FederatedDataset
 from repro.fed.client import local_sgd
@@ -49,12 +48,24 @@ class HFLHistory:
 
 
 class HFLSimulation:
-    """Runs HFL with a pluggable client-selection policy."""
+    """Runs HFL with a pluggable client-selection policy.
 
-    def __init__(self, cfg: HFLSimConfig, policy: BasePolicy,
+    ``policy`` accepts the legacy class interface (``BasePolicy`` or a
+    ``repro.policies.PolicyAdapter``) or a registry name string
+    (e.g. ``"cocs"``), so every entry point constructs policies one way.
+    """
+
+    def __init__(self, cfg: HFLSimConfig, policy,
                  data: Optional[FederatedDataset] = None,
                  sim: Optional[HFLNetworkSim] = None):
         self.cfg = cfg
+        if isinstance(policy, str):
+            from repro import policies as _policies
+            from repro.core.utility import _policy_kwargs
+            spec = _policies.PolicySpec.from_experiment(cfg.exp, cfg.rounds)
+            policy = _policies.make_legacy(
+                policy, spec, seed=cfg.seed,
+                **_policy_kwargs(cfg.exp, policy.lower()))
         self.policy = policy
         e = cfg.exp
         kind = "mnist" if cfg.model_kind == "logreg" else "cifar"
@@ -74,6 +85,8 @@ class HFLSimulation:
         self._local = jax.jit(lambda p, b: local_sgd(p, self.loss_fn, b,
                                                      e.lr))
         self._eval = jax.jit(lambda p, x, y: accuracy(self.logits_fn(p, x), y))
+        self._eval_loss = jax.jit(
+            lambda p, x, y: self.loss_fn(p, {"x": x, "y": y}))
 
     # -- single HFL round ----------------------------------------------------
 
@@ -98,8 +111,8 @@ class HFLSimulation:
                 delta, _ = self._local(edge_p, batches)
                 deltas.append(delta)
                 arrived.append(rd.outcomes[c, m])
-                # recover realized latency rank from outcomes/true_p noise
-                taus.append(1.0 - rd.true_p[c, m])
+                taus.append(rd.latency[c, m] if rd.latency is not None
+                            else 1.0 - rd.true_p[c, m])
             deltas = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
             agg, k = deadline_masked_aggregate(
                 edge_p, deltas, jnp.asarray(arrived), jnp.asarray(taus),
@@ -121,6 +134,11 @@ class HFLSimulation:
         return float(self._eval(p, jnp.asarray(self.data.test_x),
                                 jnp.asarray(self.data.test_y)))
 
+    def evaluate_loss(self) -> float:
+        p = self.global_params()
+        return float(self._eval_loss(p, jnp.asarray(self.data.test_x),
+                                     jnp.asarray(self.data.test_y)))
+
     def run(self, progress: Optional[Callable[[int, float], None]] = None
             ) -> HFLHistory:
         hist = HFLHistory()
@@ -130,6 +148,7 @@ class HFLSimulation:
                 acc = self.evaluate()
                 hist.rounds.append(t + 1)
                 hist.accuracy.append(acc)
+                hist.loss.append(self.evaluate_loss())
                 hist.participants.append(info["participants"])
                 if progress:
                     progress(t + 1, acc)

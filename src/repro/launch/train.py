@@ -20,10 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import envs, policies
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.paper_hfl import CIFAR10_NONCONVEX, MNIST_CONVEX
-from repro.core.cocs import COCSConfig, COCSPolicy
-from repro.core.network import HFLNetworkSim
 from repro.data.tokens import client_token_shards
 from repro.fed.distributed import make_train_step
 from repro.fed.hfl import HFLSimConfig, HFLSimulation
@@ -36,9 +35,8 @@ def run_paper(args) -> int:
                        model_kind="cnn" if args.nonconvex else "logreg",
                        rounds=args.rounds, seed=args.seed,
                        eval_every=args.eval_every)
-    policy = COCSPolicy(COCSConfig(
-        num_clients=exp.num_clients, num_edge_servers=exp.num_edge_servers,
-        horizon=args.rounds, budget=exp.budget, h_t=exp.h_t))
+    spec = policies.PolicySpec.from_experiment(exp, args.rounds)
+    policy = policies.make_legacy("cocs", spec, seed=args.seed, h_t=exp.h_t)
     sim = HFLSimulation(cfg, policy)
     hist = sim.run(progress=lambda r, a: print(
         f"round {r:4d}  test_acc {a:.4f}", flush=True))
@@ -51,12 +49,11 @@ def run_lm(args) -> int:
     n_clients = args.clients
     horizon = args.rounds
     exp = MNIST_CONVEX
-    policy = COCSPolicy(COCSConfig(
-        num_clients=n_clients, num_edge_servers=exp.num_edge_servers,
-        horizon=horizon, budget=exp.budget, h_t=exp.h_t))
     import dataclasses as dc
-    sim = HFLNetworkSim(dc.replace(exp, num_clients=n_clients),
-                        seed=args.seed)
+    exp_n = dc.replace(exp, num_clients=n_clients)
+    spec = policies.PolicySpec.from_experiment(exp_n, horizon)
+    policy = policies.make_legacy("cocs", spec, seed=args.seed, h_t=exp.h_t)
+    sim = envs.make(args.scenario, exp_n).make_sim(args.seed)
     shards = client_token_shards(n_clients, cfg.vocab_size, args.seq_len,
                                  args.batch, seed=args.seed)
     rngs = [np.random.default_rng(args.seed + c) for c in range(n_clients)]
@@ -93,6 +90,8 @@ def main(argv=None) -> int:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--scenario", default="paper",
+                    choices=sorted(envs.SCENARIOS))
     args = ap.parse_args(argv)
     if args.paper:
         return run_paper(args)

@@ -1,0 +1,66 @@
+"""Unified policy registry: every selection policy is constructed one way.
+
+    from repro import policies
+    spec = policies.PolicySpec.from_experiment(cfg, horizon=300)
+    pol = policies.make("cocs", spec, h_t=5)        # functional policy
+    shim = policies.make_legacy("cocs", spec, seed=0)  # old class interface
+
+Registered names (case-insensitive): oracle, random, cucb, linucb, cocs,
+cocs-phased. ``make`` returns a :class:`FunctionalPolicy` (pure
+init/select/update, pytree state, ``jax_capable`` flag); ``make_legacy``
+wraps it in :class:`PolicyAdapter`, the thin class shim that keeps the
+historical ``pol.select(rd)/pol.update(rd, assign)`` call sites working.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.policies.base import (FunctionalPolicy, PolicyAdapter, PolicySpec,
+                                 Round, round_from_data, stack_rounds)
+from repro.policies.baselines import CUCB, HostCOCS, LinUCB, Oracle, Random
+from repro.policies.cocs import COCS, COCSState
+from repro.policies.engine import (run_rounds, run_rounds_host,
+                                   run_rounds_multi_seed, stack_rounds_multi)
+from repro.policies.solvers import (flgreedy_assign, greedy_assign,
+                                    random_assign)
+
+_REGISTRY: Dict[str, Callable[..., FunctionalPolicy]] = {}
+
+
+def register(name: str, factory: Callable[..., FunctionalPolicy]) -> None:
+    _REGISTRY[name.lower()] = factory
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make(name: str, spec: PolicySpec, **overrides) -> FunctionalPolicy:
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; available: {available()}")
+    return _REGISTRY[key](spec=spec, **overrides)
+
+
+def make_legacy(name: str, spec: PolicySpec, seed: int = 0,
+                display_name: Optional[str] = None,
+                **overrides) -> PolicyAdapter:
+    return PolicyAdapter(make(name, spec, **overrides), seed=seed,
+                         display_name=display_name)
+
+
+register("oracle", Oracle)
+register("random", Random)
+register("cucb", CUCB)
+register("linucb", LinUCB)
+register("cocs", COCS)
+register("cocs-phased", lambda spec, **kw: HostCOCS(spec=spec, phased=True,
+                                                    **kw))
+
+__all__ = [
+    "COCS", "COCSState", "CUCB", "FunctionalPolicy", "HostCOCS", "LinUCB",
+    "Oracle", "PolicyAdapter", "PolicySpec", "Random", "Round", "available",
+    "flgreedy_assign", "greedy_assign", "make", "make_legacy", "random_assign",
+    "register", "round_from_data", "run_rounds", "run_rounds_host",
+    "run_rounds_multi_seed", "stack_rounds", "stack_rounds_multi",
+]

@@ -1,0 +1,147 @@
+"""Functional policy API: config dataclass + pure init/select/update.
+
+Every policy is a frozen dataclass exposing
+
+    state          = policy.init(key_or_seed, rd0=None)
+    assign, aux    = policy.select(state, rd)
+    state          = policy.update(state, rd, assign, aux)
+
+where ``state`` is a JAX pytree (a NamedTuple of arrays for device
+policies, or an opaque host object for numpy-backed baselines). Policies
+with ``jax_capable = True`` have select/update that are pure jax-traceable
+functions of pytree inputs, so a whole bandit run can be ``lax.scan``-ed
+over rounds and ``vmap``-ed over seeds (see ``repro.policies.engine``).
+
+``PolicyAdapter`` is the thin class shim that preserves the legacy
+stateful ``pol.select(rd) / pol.update(rd, assign)`` interface used by
+``HFLSimulation``, benchmarks and the examples during migration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.paper_hfl import HFLExperimentConfig
+from repro.core.network import RoundData
+
+
+class Round(NamedTuple):
+    """Pytree view of one round's observables (jnp or np arrays).
+
+    Identical fields to ``RoundData`` minus per-client resource vectors;
+    with a leading axis it doubles as a stacked batch of T rounds.
+    """
+    t: Any            # () int32   round index
+    contexts: Any     # (N, M, 2)
+    eligible: Any     # (N, M) bool
+    costs: Any        # (N,)
+    outcomes: Any     # (N, M)
+    true_p: Any       # (N, M)
+    latency: Any      # (N, M) realized tau
+
+
+def round_from_data(rd: RoundData) -> Round:
+    lat = rd.latency if rd.latency is not None else 1.0 - rd.true_p
+    return Round(t=np.int32(rd.t),
+                 contexts=np.nan_to_num(rd.contexts).astype(np.float32),
+                 eligible=np.asarray(rd.eligible, bool),
+                 costs=rd.costs.astype(np.float32),
+                 outcomes=rd.outcomes.astype(np.float32),
+                 true_p=rd.true_p.astype(np.float32),
+                 latency=np.asarray(lat, np.float32))
+
+
+def stack_rounds(rounds) -> Round:
+    """List of RoundData -> Round of arrays with a leading T axis."""
+    views = [round_from_data(rd) for rd in rounds]
+    return Round(*(np.stack([getattr(v, f) for v in views])
+                   for f in Round._fields))
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """Problem dimensions shared by every policy (the one ctor signature)."""
+    num_clients: int
+    num_edge_servers: int
+    budget: float
+    horizon: int
+    sqrt_utility: bool = False
+
+    @classmethod
+    def from_experiment(cls, cfg: HFLExperimentConfig, horizon: int,
+                        budget: Optional[float] = None) -> "PolicySpec":
+        return cls(num_clients=cfg.num_clients,
+                   num_edge_servers=cfg.num_edge_servers,
+                   budget=float(cfg.budget if budget is None else budget),
+                   horizon=horizon,
+                   sqrt_utility=cfg.utility == "sqrt")
+
+    def budgets(self) -> np.ndarray:
+        return np.full(self.num_edge_servers, self.budget, np.float32)
+
+
+def as_key(key_or_seed) -> jax.Array:
+    if isinstance(key_or_seed, (int, np.integer)):
+        return jax.random.PRNGKey(int(key_or_seed))
+    return key_or_seed
+
+
+@dataclass(frozen=True)
+class FunctionalPolicy:
+    """Base for registry policies. Subclasses are frozen dataclasses so a
+    policy object is hashable and can be a jit static argument."""
+    spec: PolicySpec
+
+    name: str = "base"
+    jax_capable: bool = False
+
+    def init(self, key_or_seed, rd0: Optional[RoundData] = None):
+        raise NotImplementedError
+
+    def select(self, state, rd) -> Tuple[Any, Any]:
+        raise NotImplementedError
+
+    def update(self, state, rd, assign, aux):
+        return state
+
+
+class PolicyAdapter:
+    """Legacy-interface shim over a functional policy.
+
+    Holds the state internally and exposes the historical
+    ``select(rd) -> assign`` / ``update(rd, assign) -> None`` contract plus
+    ``name`` and ``last_explored`` attributes.
+    """
+
+    def __init__(self, policy: FunctionalPolicy, seed: int = 0,
+                 display_name: Optional[str] = None):
+        self.policy = policy
+        self.name = display_name or policy.name
+        self._seed = seed
+        self._state = None
+        self._aux = None
+        self.last_explored = False
+
+    def _ensure_state(self, rd: RoundData) -> None:
+        if self._state is None:
+            self._state = self.policy.init(self._seed, rd0=rd)
+
+    def select(self, rd: RoundData) -> np.ndarray:
+        self._ensure_state(rd)
+        assign, aux = self.policy.select(self._state, rd)
+        self._aux = aux
+        if isinstance(aux, dict) and "explored" in aux:
+            self.last_explored = bool(aux["explored"])
+        return np.asarray(assign, np.int64)
+
+    def update(self, rd: RoundData, assign: np.ndarray) -> None:
+        self._ensure_state(rd)
+        self._state = self.policy.update(self._state, rd,
+                                         np.asarray(assign), self._aux)
+
+    @property
+    def state(self):
+        return self._state

@@ -1,0 +1,149 @@
+"""Functional wrappers for the Section VI-B benchmark policies.
+
+``Oracle`` and ``Random`` are pure-JAX (pytree state, scan/vmap-able).
+``CUCB`` and ``LinUCB`` keep their whole-decision-arm numpy engines
+(pool-based host state, not traceable) behind the same functional
+interface, and ``HostCOCS`` exposes the Algorithm-1-faithful *phased*
+COCS variant the same way.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as legacy
+from repro.core.cocs import COCSConfig, COCSPolicy
+from repro.core.network import RoundData
+from repro.policies.base import FunctionalPolicy, as_key
+from repro.policies.solvers import (flgreedy_assign, greedy_assign,
+                                    random_assign)
+
+
+class KeyState(NamedTuple):
+    key: jax.Array
+
+
+@dataclass(frozen=True)
+class Oracle(FunctionalPolicy):
+    """Knows the realized per-round outcomes X (upper bound)."""
+    name: str = field(default="Oracle")
+    jax_capable: bool = field(default=True)
+
+    def init(self, key_or_seed=0, rd0=None) -> KeyState:
+        return KeyState(key=as_key(key_or_seed))
+
+    def select(self, state, rd):
+        values = jnp.asarray(rd.outcomes, jnp.float32)
+        costs = jnp.asarray(rd.costs, jnp.float32)
+        eligible = jnp.asarray(rd.eligible, bool)
+        budgets = jnp.full(self.spec.num_edge_servers, self.spec.budget,
+                           jnp.float32)
+        if self.spec.sqrt_utility:
+            return flgreedy_assign(values, costs, budgets, eligible), {}
+        return greedy_assign(values, costs, budgets, eligible), {}
+
+
+@dataclass(frozen=True)
+class Random(FunctionalPolicy):
+    """Feasible random assignment; per-round key folds in the round index
+    so select stays pure (state never changes)."""
+    name: str = field(default="Random")
+    jax_capable: bool = field(default=True)
+
+    def init(self, key_or_seed=0, rd0=None) -> KeyState:
+        return KeyState(key=as_key(key_or_seed))
+
+    def select(self, state, rd):
+        key = jax.random.fold_in(state.key, jnp.asarray(rd.t, jnp.int32))
+        assign = random_assign(key, jnp.asarray(rd.costs, jnp.float32),
+                               jnp.full(self.spec.num_edge_servers,
+                                        self.spec.budget, jnp.float32),
+                               jnp.asarray(rd.eligible, bool))
+        return assign, {}
+
+
+# ---------------------------------------------------------------------------
+# host-state policies: the state is the legacy class instance (opaque)
+
+
+@dataclass(frozen=True)
+class _HostPolicy(FunctionalPolicy):
+    """Functional facade over a legacy stateful numpy policy."""
+
+    def _make(self, seed: int):
+        raise NotImplementedError
+
+    def init(self, key_or_seed=0, rd0=None):
+        del rd0
+        return self._make(int(np.asarray(key_or_seed).reshape(-1)[0])
+                          if not isinstance(key_or_seed, (int, np.integer))
+                          else int(key_or_seed))
+
+    def select(self, state, rd):
+        if not isinstance(rd, RoundData):
+            raise TypeError(f"{self.name} is a host policy and needs "
+                            "RoundData rounds (jax_capable=False)")
+        aux = {}
+        assign = state.select(rd)
+        if hasattr(state, "last_explored"):
+            aux["explored"] = bool(state.last_explored)
+        return assign, aux
+
+    def update(self, state, rd, assign, aux=None):
+        state.update(rd, np.asarray(assign, np.int64))
+        return state
+
+
+@dataclass(frozen=True)
+class CUCB(_HostPolicy):
+    pool_size: int = 200
+    name: str = field(default="CUCB")
+
+    def _make(self, seed: int):
+        s = self.spec
+        return legacy.CUCBPolicy(s.num_clients, s.num_edge_servers, s.budget,
+                                 s.sqrt_utility, seed,
+                                 pool_size=self.pool_size)
+
+
+@dataclass(frozen=True)
+class LinUCB(_HostPolicy):
+    pool_size: int = 200
+    lam: float = 1.0
+    beta: float = 0.8
+    name: str = field(default="LinUCB")
+
+    def _make(self, seed: int):
+        s = self.spec
+        return legacy.LinUCBPolicy(s.num_clients, s.num_edge_servers,
+                                   s.budget, s.sqrt_utility, seed,
+                                   pool_size=self.pool_size, lam=self.lam,
+                                   beta=self.beta)
+
+
+@dataclass(frozen=True)
+class HostCOCS(_HostPolicy):
+    """Legacy numpy COCS — supports the phased (Algorithm-1-faithful)
+    selection mode that the jitted index-mode policy does not."""
+    alpha: float = 1.0
+    h_t: Optional[int] = None
+    z: Optional[float] = None
+    k_scale: float = 1.0
+    bonus_scale: float = 0.35
+    phased: bool = False
+    flgreedy_eps: float = 0.3
+    name: str = field(default="COCS")
+
+    def _make(self, seed: int):
+        del seed
+        s = self.spec
+        return COCSPolicy(COCSConfig(
+            num_clients=s.num_clients, num_edge_servers=s.num_edge_servers,
+            horizon=s.horizon, budget=s.budget, alpha=self.alpha,
+            h_t=self.h_t, z=self.z, sqrt_utility=s.sqrt_utility,
+            flgreedy_eps=self.flgreedy_eps, k_scale=self.k_scale,
+            bonus_scale=self.bonus_scale, phased=self.phased))

@@ -1,0 +1,111 @@
+"""Functional COCS: the paper's CC-MAB policy as pure jax select/update.
+
+State is a pytree of two arrays — per-(client, ES, hypercube) visit
+counters and participation estimates — so one round's select+update is a
+single jitted function and whole horizons scan/vmap on device. The logic
+mirrors ``repro.core.cocs.COCSPolicy`` in index mode (the default): one
+density-greedy solve over all eligible pairs with under-explored pairs
+valued optimistically. The Algorithm-1-faithful *phased* variant keeps a
+host implementation (see ``repro.policies.baselines.HostCOCS``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cocs import theorem2_params
+from repro.policies.base import FunctionalPolicy, PolicySpec, as_key
+from repro.policies.solvers import flgreedy_assign, greedy_assign
+
+
+class COCSState(NamedTuple):
+    counters: jax.Array     # (N, M, h, h) int32
+    p_hat: jax.Array        # (N, M, h, h) float32
+
+
+@dataclass(frozen=True)
+class COCS(FunctionalPolicy):
+    """Index-mode COCS with pytree state (jax_capable)."""
+    alpha: float = 1.0
+    h_t: Optional[int] = None
+    z: Optional[float] = None
+    k_scale: float = 1.0
+    bonus_scale: float = 0.35
+
+    name: str = field(default="COCS")
+    jax_capable: bool = field(default=True)
+
+    def _params(self):
+        z_thm, h_thm = theorem2_params(self.spec.horizon, self.alpha)
+        return (self.z if self.z is not None else z_thm,
+                self.h_t if self.h_t is not None else h_thm)
+
+    # -- pure functions -------------------------------------------------------
+
+    def init(self, key_or_seed=0, rd0=None) -> COCSState:
+        del key_or_seed, rd0     # deterministic init
+        n, m = self.spec.num_clients, self.spec.num_edge_servers
+        _, h = self._params()
+        return COCSState(counters=jnp.zeros((n, m, h, h), jnp.int32),
+                         p_hat=jnp.zeros((n, m, h, h), jnp.float32))
+
+    def _cubes(self, contexts) -> jax.Array:
+        _, h = self._params()
+        idx = jnp.floor(jnp.nan_to_num(contexts) * h).astype(jnp.int32)
+        return jnp.clip(idx, 0, h - 1)
+
+    def _gather(self, arr, cubes):
+        n, m = arr.shape[:2]
+        ii, jj = jnp.meshgrid(jnp.arange(n), jnp.arange(m), indexing="ij")
+        return arr[ii, jj, cubes[..., 0], cubes[..., 1]]
+
+    def k_of_t(self, t):
+        z, _ = self._params()
+        tf = jnp.maximum(jnp.asarray(t, jnp.float32), 1.0)
+        return self.k_scale * tf ** z * jnp.log(jnp.maximum(tf, 2.0))
+
+    def select(self, state: COCSState, rd):
+        cubes = self._cubes(rd.contexts)
+        counts = self._gather(state.counters, cubes)           # (N, M)
+        est = self._gather(state.p_hat, cubes)                 # (N, M)
+        eligible = jnp.asarray(rd.eligible, bool)
+        t1 = jnp.asarray(rd.t, jnp.int32) + 1
+        under = eligible & (counts <= self.k_of_t(t1))
+        tf = jnp.maximum(t1.astype(jnp.float32), 2.0)
+        bonus = self.bonus_scale * jnp.sqrt(
+            2.0 * jnp.log(tf) / jnp.maximum(counts, 1))
+        optimistic = jnp.where(counts == 0, 1.0,
+                               jnp.minimum(est + bonus, 1.0))
+        values = jnp.where(under, optimistic, est)
+        costs = jnp.asarray(rd.costs, values.dtype)
+        budgets = jnp.full(self.spec.num_edge_servers, self.spec.budget,
+                           values.dtype)
+        if self.spec.sqrt_utility:
+            assign = flgreedy_assign(values, costs, budgets, eligible)
+        else:
+            assign = greedy_assign(values, costs, budgets, eligible)
+        return assign, {"explored": under.any()}
+
+    def update(self, state: COCSState, rd, assign, aux=None) -> COCSState:
+        del aux
+        counters, p_hat = state
+        n, m = counters.shape[:2]
+        cubes = self._cubes(rd.contexts)
+        assign = jnp.asarray(assign, jnp.int32)
+        ii = jnp.arange(n)
+        sel = assign >= 0
+        j = jnp.clip(assign, 0, m - 1)
+        a = cubes[ii, j, 0]
+        b = cubes[ii, j, 1]
+        x = jnp.asarray(rd.outcomes, p_hat.dtype)[ii, j]
+        c_old = counters[ii, j, a, b]
+        p_old = p_hat[ii, j, a, b]
+        p_new = (p_old * c_old + x) / (c_old + 1)
+        p_hat = p_hat.at[ii, j, a, b].set(jnp.where(sel, p_new, p_old))
+        counters = counters.at[ii, j, a, b].set(
+            jnp.where(sel, c_old + 1, c_old))
+        return COCSState(counters=counters, p_hat=p_hat)

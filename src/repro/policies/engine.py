@@ -1,0 +1,125 @@
+"""Jitted bandit engine: lax.scan over rounds x vmap over seeds.
+
+The environment realizes each round's observables on host (numpy — see
+``repro.envs``); the engine stacks them into a ``Round`` pytree with a
+leading T (and optionally S, for seeds) axis and runs the whole
+policy loop — select, update, utility accounting — as one compiled
+program per (policy config, horizon) pair. For jax-capable policies this
+replaces the sequential Python per-round driver; host policies fall back
+to the legacy loop via ``PolicyAdapter``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import RoundData
+from repro.core.utility import realized_utility
+from repro.policies.base import (FunctionalPolicy, PolicyAdapter, Round,
+                                 stack_rounds)
+
+
+def _scan_fn(policy: FunctionalPolicy):
+    """One compiled scan over a (T, ...) Round batch for one policy."""
+
+    def step(state, rd: Round):
+        assign, aux = policy.select(state, rd)
+        new_state = policy.update(state, rd, assign, aux)
+        n = assign.shape[0]
+        sel = assign >= 0
+        j = jnp.clip(assign, 0, policy.spec.num_edge_servers - 1)
+        arrived = jnp.where(sel, rd.outcomes[jnp.arange(n), j], 0.0)
+        part = jnp.sum(arrived)
+        if policy.spec.sqrt_utility:
+            util = jnp.sqrt(jnp.maximum(part, 0.0)
+                            / policy.spec.num_edge_servers)
+        else:
+            util = part
+        explored = aux.get("explored", jnp.zeros((), bool))
+        return new_state, (assign, util, part, explored)
+
+    def run(state0, batch: Round):
+        final, (assigns, utils, parts, explored) = jax.lax.scan(
+            step, state0, batch)
+        return {"selections": assigns, "utilities": utils,
+                "participants": parts, "explored": explored,
+                "final_state": final}
+
+    return run
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled(policy: FunctionalPolicy, multi_seed: bool):
+    run = _scan_fn(policy)
+    if multi_seed:
+        run = jax.vmap(run)
+    return jax.jit(run)
+
+
+def run_rounds(policy: FunctionalPolicy, rounds: Sequence[RoundData],
+               seed: int = 0) -> Dict[str, np.ndarray]:
+    """Single-seed scan over precomputed rounds. Returns host arrays."""
+    if not policy.jax_capable:
+        return run_rounds_host(policy, rounds, seed)
+    batch = stack_rounds(rounds)
+    state0 = policy.init(seed, rd0=rounds[0])
+    out = _compiled(policy, False)(state0, batch)
+    return {k: np.asarray(v) if k != "final_state" else v
+            for k, v in out.items()}
+
+
+def stack_rounds_multi(rounds_per_seed: Sequence[Sequence[RoundData]]
+                       ) -> Round:
+    """S lists of T RoundData -> one Round batch with (S, T, ...) arrays.
+
+    Stack once and reuse across policies: the stacking is host-side data
+    preparation, the engine proper is the compiled scan/vmap program.
+    """
+    batches = [stack_rounds(r) for r in rounds_per_seed]
+    return Round(*(np.stack([getattr(b, f) for b in batches])
+                   for f in Round._fields))
+
+
+def run_rounds_multi_seed(policy: FunctionalPolicy,
+                          rounds_per_seed,
+                          seeds: Sequence[int]) -> Dict[str, np.ndarray]:
+    """vmap over seeds: rounds_per_seed is S lists of T rounds (or an
+    already-stacked ``Round`` batch from ``stack_rounds_multi``); returns
+    arrays with a leading S axis. jax-capable policies only."""
+    if not policy.jax_capable:
+        raise ValueError(f"{policy.name} is a host policy; vmap over seeds "
+                         "requires jax_capable select/update")
+    batch = (rounds_per_seed if isinstance(rounds_per_seed, Round)
+             else stack_rounds_multi(rounds_per_seed))
+    assert batch.costs.shape[0] == len(seeds)
+    states = [policy.init(s) for s in seeds]
+    state0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    out = _compiled(policy, True)(state0, batch)
+    return {k: np.asarray(v) if k != "final_state" else v
+            for k, v in out.items()}
+
+
+def run_rounds_host(policy: FunctionalPolicy, rounds: Sequence[RoundData],
+                    seed: int = 0) -> Dict[str, np.ndarray]:
+    """Reference sequential driver (legacy semantics) for any policy."""
+    adapter = PolicyAdapter(policy, seed=seed)
+    t_len = len(rounds)
+    n = policy.spec.num_clients
+    selections = np.zeros((t_len, n), np.int64)
+    utils = np.zeros(t_len)
+    parts = np.zeros(t_len)
+    explored = np.zeros(t_len, bool)
+    for t, rd in enumerate(rounds):
+        assign = adapter.select(rd)
+        adapter.update(rd, assign)
+        utils[t] = realized_utility(assign, rd, policy.spec.sqrt_utility)
+        parts[t] = realized_utility(assign, rd, False)
+        selections[t] = assign
+        explored[t] = adapter.last_explored
+    return {"selections": selections, "utilities": utils,
+            "participants": parts, "explored": explored,
+            "final_state": adapter.state}

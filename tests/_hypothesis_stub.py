@@ -1,0 +1,77 @@
+"""Minimal offline fallback for the `hypothesis` API surface these tests
+use (given / settings / strategies.integers / sampled_from / booleans).
+
+Installed into ``sys.modules['hypothesis']`` by conftest.py ONLY when the
+real package is unavailable (this container has no network access). Each
+decorated test runs ``max_examples`` times with draws from a fixed-seed
+RNG, so failures are reproducible; the real hypothesis package — declared
+in pyproject's test extra — takes precedence whenever it is installed.
+"""
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+__version__ = "0.0-repro-stub"
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def _floats(min_value=0.0, max_value=1.0, **_ignored):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+strategies = types.SimpleNamespace(integers=_integers,
+                                   sampled_from=_sampled_from,
+                                   booleans=_booleans,
+                                   floats=_floats)
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        # NB: not functools.wraps — the wrapper must present a zero-arg
+        # signature or pytest would treat the strategy params as fixtures
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_settings",
+                        {}).get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            for example in range(n):
+                rng = np.random.default_rng(1_000_003 * example + 17)
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 — re-raise with context
+                    raise AssertionError(
+                        f"falsifying example #{example}: {drawn!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

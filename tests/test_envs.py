@@ -1,0 +1,79 @@
+"""Functional environment API + scenario presets."""
+import numpy as np
+import pytest
+
+from repro import envs
+from repro.configs.paper_hfl import MNIST_CONVEX
+
+
+def test_env_step_is_pure():
+    env = envs.make("paper")
+    s0 = env.init(seed=5)
+    _, rd_a = env.step(s0)
+    _, rd_b = env.step(s0)        # same input state -> same round
+    np.testing.assert_array_equal(rd_a.outcomes, rd_b.outcomes)
+    np.testing.assert_array_equal(rd_a.costs, rd_b.costs)
+
+
+def test_env_step_stream_matches_rollout():
+    env = envs.make("paper")
+    state = env.init(seed=2)
+    stepped = []
+    for _ in range(4):
+        state, rd = env.step(state)
+        stepped.append(rd)
+    rolled = env.rollout(2, 4)
+    for a, b in zip(stepped, rolled):
+        np.testing.assert_array_equal(a.outcomes, b.outcomes)
+        np.testing.assert_array_equal(a.contexts, b.contexts)
+
+
+def test_round_data_has_realized_latency():
+    rd = envs.make("paper").rollout(0, 1)[0]
+    assert rd.latency is not None
+    assert rd.latency.shape == rd.outcomes.shape
+    # Eq. 6: the outcome is exactly the deadline indicator on the latency
+    np.testing.assert_array_equal(
+        rd.outcomes, (rd.latency <= MNIST_CONVEX.deadline_s).astype(float))
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        envs.make("marsnet")
+
+
+def test_static_vs_high_mobility_churn():
+    """Eligibility changes round-to-round much more under high mobility."""
+    def churn(name):
+        rounds = envs.make(name).rollout(0, 20)
+        flips = [np.mean(a.eligible != b.eligible)
+                 for a, b in zip(rounds, rounds[1:])]
+        return float(np.mean(flips))
+
+    assert churn("static-clients") == 0.0
+    assert churn("high-mobility") > 0.01
+
+
+def test_tiered_pricing_discrete_tiers():
+    env = envs.make("tiered-pricing")
+    sim = env.make_sim(seed=0)
+    tiers = {p for p, _ in env.spec.price_tiers}
+    assert set(np.unique(sim.price)) <= tiers
+
+
+def test_flash_crowd_costs_dip_on_surge_rounds():
+    env = envs.make("flash-crowd", surge_period=10, surge_len=3,
+                    surge_discount=0.2)
+    sim = env.make_sim(seed=1)
+    cohort = sim.surge_cohort
+    rounds = [sim.round(t) for t in range(20)]
+    surge_cost = np.mean([r.costs[cohort].mean() for r in rounds[:3]])
+    calm_cost = np.mean([r.costs[cohort].mean() for r in rounds[3:10]])
+    assert surge_cost < 0.5 * calm_cost
+
+
+def test_scenario_override_knobs():
+    env = envs.make("paper", mobility=0.0)
+    assert env.spec.mobility == 0.0
+    env2 = envs.make("paper", cfg=MNIST_CONVEX)
+    assert env2.cfg is MNIST_CONVEX

@@ -1,0 +1,28 @@
+"""HFLHistory accounting: loss tracking during eval and
+rounds_to_accuracy, plus registry-name policy construction for the
+simulation loop."""
+import dataclasses as dc
+
+import numpy as np
+
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.fed.hfl import HFLHistory, HFLSimConfig, HFLSimulation
+
+
+def test_rounds_to_accuracy():
+    hist = HFLHistory(rounds=[5, 10, 15], accuracy=[0.4, 0.72, 0.9])
+    assert hist.rounds_to_accuracy(0.7) == 10
+    assert hist.rounds_to_accuracy(0.4) == 5
+    assert hist.rounds_to_accuracy(0.95) is None
+    assert HFLHistory().rounds_to_accuracy(0.1) is None
+
+
+def test_run_populates_loss_and_accepts_policy_name():
+    exp = dc.replace(MNIST_CONVEX, lr=0.05)
+    cfg = HFLSimConfig(exp=exp, rounds=10, eval_every=5, seed=0)
+    sim = HFLSimulation(cfg, "oracle")        # registry-name construction
+    loss0 = sim.evaluate_loss()
+    hist = sim.run()
+    assert len(hist.loss) == len(hist.rounds) == len(hist.accuracy)
+    assert all(np.isfinite(hist.loss))
+    assert hist.loss[-1] < loss0, "training should reduce test loss"
