@@ -2,6 +2,7 @@
 (name, us_per_call, derived)."""
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Callable, List, Tuple
@@ -23,3 +24,12 @@ def timed(fn: Callable, repeats: int = 1) -> Tuple[float, object]:
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_json(rows: List[Row], path: str) -> None:
+    """Machine-readable perf trajectory: the CSV rows as a JSON list."""
+    payload = [{"name": name, "us_per_call": us, "derived": derived}
+               for name, us, derived in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses as dc
 from typing import List
 
-import numpy as np
 
 from benchmarks.common import FULL, Row, timed
 from repro.configs.paper_hfl import CIFAR10_NONCONVEX

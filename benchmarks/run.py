@@ -1,14 +1,17 @@
 """Benchmark runner: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Quick mode by default;
-REPRO_BENCH_FULL=1 restores paper-scale horizons.
+REPRO_BENCH_FULL=1 restores paper-scale horizons. ``--json PATH``
+additionally writes the rows as a JSON list (e.g. ``BENCH_quick.json``)
+so the perf trajectory is machine-readable (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
-from benchmarks.common import emit
+from benchmarks.common import Row, emit, write_json
 
 MODULES = [
     "benchmarks.fig2_participation",
@@ -24,17 +27,28 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as a JSON list to PATH "
+                         "(convention: BENCH_<name>.json)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
+    all_rows: list[Row] = []
     failures = 0
     for modname in MODULES:
         try:
             mod = __import__(modname, fromlist=["run"])
-            emit(mod.run())
+            rows = mod.run()
+            emit(rows)
+            all_rows.extend(rows)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             failures += 1
             print(f"{modname},0.0,ERROR:{type(e).__name__}:{e}")
+            all_rows.append((modname, 0.0, f"ERROR:{type(e).__name__}:{e}"))
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        write_json(all_rows, args.json)
     if failures:
         sys.exit(1)
 

@@ -8,8 +8,8 @@ d_model<=512, <=4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 ARCH_TYPES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
 

@@ -71,20 +71,33 @@ class HFLNetworkSim:
 
     # -- channel helpers ----------------------------------------------------
 
-    def _gain(self, d_km: np.ndarray, fading: np.ndarray) -> np.ndarray:
-        """Linear channel gain: path loss (dB) + Rayleigh |h|^2 ~ Exp(1)."""
-        pl_db = 128.1 + 37.6 * np.log10(np.maximum(d_km, 0.01))
-        return fading * 10 ** (-pl_db / 10.0)
+    def _gain0(self, d_km: np.ndarray) -> np.ndarray:
+        """Distance-only part of the channel gain (path loss, linear)."""
+        pl_db = 128.1 + 37.6 * np.log10(np.maximum(np.asarray(d_km, float),
+                                                   0.01))
+        return 10 ** (-pl_db / 10.0)
 
-    def _rate(self, bandwidth, d_km, fading) -> np.ndarray:
-        g = self._gain(np.asarray(d_km, float), np.asarray(fading, float))
+    def _gain(self, d_km, fading: np.ndarray,
+              g0: Optional[np.ndarray] = None) -> np.ndarray:
+        """Linear channel gain: path loss (dB) + Rayleigh |h|^2 ~ Exp(1).
+
+        ``g0`` lets callers reuse the path-loss term across the several
+        fading draws of one round (bitwise-identical result)."""
+        if g0 is None:
+            g0 = self._gain0(d_km)
+        return np.asarray(fading, float) * g0
+
+    def _rate(self, bandwidth, d_km, fading,
+              g0: Optional[np.ndarray] = None) -> np.ndarray:
+        g = self._gain(d_km, fading, g0)
         snr = self.tx_w * g / (self.noise_psd_w * np.asarray(bandwidth, float))
         return bandwidth * np.log2(1.0 + snr)
 
-    def _latency(self, bandwidth, compute, d_km, fad_dt, fad_ut) -> np.ndarray:
+    def _latency(self, bandwidth, compute, d_km, fad_dt, fad_ut,
+                 g0: Optional[np.ndarray] = None) -> np.ndarray:
         c = self.cfg
-        r_dt = self._rate(bandwidth, d_km, fad_dt)
-        r_ut = self._rate(bandwidth, d_km, fad_ut)
+        r_dt = self._rate(bandwidth, d_km, fad_dt, g0)
+        r_ut = self._rate(bandwidth, d_km, fad_ut, g0)
         with np.errstate(divide="ignore"):
             return (c.update_bits / np.maximum(r_dt, 1e-9)
                     + c.workload / np.maximum(compute, 1e-9)
@@ -119,14 +132,16 @@ class HFLNetworkSim:
         # free unit constant, chosen so B=3.5 admits ~2-3 clients per ES —
         # matching the magnitudes of Fig. 4b.
         costs = 2.0 * self.price * bandwidth / 1e6
-        # realized fading for this round (shared DT/UT draw per pair)
+        # realized fading for this round (shared DT/UT draw per pair);
+        # the path-loss gain is distance-only, computed once per round
+        g0 = self._gain0(d)
         fad_dt = self.rng.exponential(1.0, (n, m))
         fad_ut = self.rng.exponential(1.0, (n, m))
         tau = self._latency(bandwidth[:, None], compute[:, None], d,
-                            fad_dt, fad_ut)
+                            fad_dt, fad_ut, g0)
         outcomes = (tau <= c.deadline_s).astype(np.float64)
         # contexts: (normalized mean downlink rate, normalized compute)
-        mean_rate = self._rate(bandwidth[:, None], d, 1.0)    # E[|h|^2] = 1
+        mean_rate = self._rate(bandwidth[:, None], d, 1.0, g0)  # E[|h|^2]=1
         phi_rate = np.clip(mean_rate / self._rate_hi, 0.0, 1.0)
         phi_comp = (compute - c.compute_low) / (c.compute_high - c.compute_low)
         contexts = np.stack(
@@ -136,7 +151,7 @@ class HFLNetworkSim:
         f1 = self.rng.exponential(1.0, (k, n, m))
         f2 = self.rng.exponential(1.0, (k, n, m))
         tau_mc = self._latency(bandwidth[None, :, None],
-                               compute[None, :, None], d[None], f1, f2)
+                               compute[None, :, None], d[None], f1, f2, g0)
         true_p = (tau_mc <= c.deadline_s).mean(axis=0)
         return RoundData(t=t, contexts=contexts, eligible=eligible,
                          costs=costs, outcomes=outcomes, true_p=true_p,

@@ -1,12 +1,42 @@
-"""Federated dataset plumbing: per-client datasets + local batch sampling."""
+"""Federated dataset plumbing: per-client datasets + local batch sampling.
+
+Two access paths:
+  * ``ClientData.sample_batches`` — host-side numpy sampling, one client at a
+    time (legacy ``HFLSimulation`` backend);
+  * ``FederatedDataset.stacked()`` — all client shards stacked into padded
+    device arrays with per-client sizes/validity masks, so the batched HFL
+    backend can sample every selected client's batches with a single
+    ``jax.random`` gather (no host round-trip in the hot loop).
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import make_synthetic_classification, non_iid_split
+
+
+@dataclass(frozen=True)
+class StackedClients:
+    """All client shards as device arrays, padded to the largest shard.
+
+    Padding rows are zero and are never sampled: batch indices are always
+    drawn in ``[0, sizes[c])``. ``mask`` marks the real rows (1.0) so
+    consumers can assert padding never contributes.
+    """
+
+    x: jax.Array        # (N, L, ...) float32, zero-padded past sizes[c]
+    y: jax.Array        # (N, L) int32
+    sizes: jax.Array    # (N,) int32 — real samples per client
+    mask: jax.Array     # (N, L) float32 validity (1 = real sample)
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.x.shape[0])
 
 
 @dataclass
@@ -27,6 +57,28 @@ class FederatedDataset:
     clients: List[ClientData]
     test_x: np.ndarray
     test_y: np.ndarray
+    _stacked: Optional[StackedClients] = field(
+        default=None, repr=False, compare=False)
+
+    def stacked(self) -> StackedClients:
+        """Stack all client shards into padded device arrays (cached)."""
+        if self._stacked is None:
+            sizes = np.array([len(c.y) for c in self.clients], np.int32)
+            if sizes.min() < 1:
+                raise ValueError("every client needs at least one sample")
+            n, lmax = len(self.clients), int(sizes.max())
+            feat = self.clients[0].x.shape[1:]
+            x = np.zeros((n, lmax) + feat, np.float32)
+            y = np.zeros((n, lmax), np.int32)
+            mask = np.zeros((n, lmax), np.float32)
+            for c, cd in enumerate(self.clients):
+                x[c, :sizes[c]] = cd.x
+                y[c, :sizes[c]] = cd.y
+                mask[c, :sizes[c]] = 1.0
+            self._stacked = StackedClients(
+                x=jnp.asarray(x), y=jnp.asarray(y),
+                sizes=jnp.asarray(sizes), mask=jnp.asarray(mask))
+        return self._stacked
 
     @classmethod
     def synthetic(cls, num_clients: int, kind: str = "mnist",

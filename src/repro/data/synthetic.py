@@ -6,7 +6,7 @@ each client holds samples of only `labels_per_client` classes (=2, Sec VI-A).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

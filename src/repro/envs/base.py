@@ -22,9 +22,9 @@ import copy
 from dataclasses import dataclass
 from typing import List, Optional
 
-from repro.configs.paper_hfl import HFLExperimentConfig, MNIST_CONVEX
+from repro.configs.paper_hfl import HFLExperimentConfig
 from repro.core.network import HFLNetworkSim, RoundData
-from repro.envs.scenarios import SCENARIOS, ScenarioSim, ScenarioSpec
+from repro.envs.scenarios import ScenarioSim, ScenarioSpec
 
 
 @dataclass

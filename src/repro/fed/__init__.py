@@ -1,6 +1,9 @@
-from repro.fed.client import local_sgd
-from repro.fed.edge import deadline_masked_aggregate
-from repro.fed.hfl import HFLSimulation, HFLSimConfig
+from repro.fed.batched import BatchedRoundEngine, BatchedRoundSpec, make_engine
+from repro.fed.client import local_sgd, local_sgd_multi
+from repro.fed.edge import deadline_masked_aggregate, effective_mask_multi
+from repro.fed.hfl import HFLHistory, HFLSimConfig, HFLSimulation
 
-__all__ = ["HFLSimConfig", "HFLSimulation", "deadline_masked_aggregate",
-           "local_sgd"]
+__all__ = ["BatchedRoundEngine", "BatchedRoundSpec", "HFLHistory",
+           "HFLSimConfig", "HFLSimulation", "deadline_masked_aggregate",
+           "effective_mask_multi", "local_sgd", "local_sgd_multi",
+           "make_engine"]

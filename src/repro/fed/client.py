@@ -8,11 +8,14 @@ import jax.numpy as jnp
 
 
 def local_sgd(params: Any, loss_fn: Callable[[Any, Dict], jax.Array],
-              batches: Dict[str, jax.Array], lr: float) -> Tuple[Any, jax.Array]:
+              batches: Dict[str, jax.Array], lr: float,
+              unroll: int = 1) -> Tuple[Any, jax.Array]:
     """Run one SGD step per stacked batch (leading axis = steps) via scan.
 
     Returns (delta = w_final - w_init, mean loss). batches leaves have shape
-    (num_steps, B, ...); num_steps = E * batches_per_epoch.
+    (num_steps, B, ...); num_steps = E * batches_per_epoch. ``unroll``
+    trades compile time for step-loop overhead — worth it for tiny models
+    (logreg), counterproductive for convnets.
     """
     grad_fn = jax.value_and_grad(loss_fn)
 
@@ -21,17 +24,25 @@ def local_sgd(params: Any, loss_fn: Callable[[Any, Dict], jax.Array],
         p = jax.tree.map(lambda w, gg: (w - lr * gg).astype(w.dtype), p, g)
         return p, loss
 
-    final, losses = jax.lax.scan(step, params, batches)
+    steps = jax.tree.leaves(batches)[0].shape[0]
+    final, losses = jax.lax.scan(step, params, batches,
+                                 unroll=min(max(unroll, 1), steps))
     delta = jax.tree.map(lambda a, b: a - b, final, params)
     return delta, jnp.mean(losses)
 
 
 def local_sgd_multi(params: Any, loss_fn, client_batches: Dict[str, jax.Array],
-                    lr: float):
-    """vmap local_sgd over a leading client axis.
+                    lr: float, per_client_params: bool = False,
+                    unroll: int = 1):
+    """vmap local_sgd over a leading client axis (Eq. 2 for all clients at
+    once) — the real path of the batched HFL backend.
 
-    client_batches leaves: (num_clients, num_steps, B, ...). params are shared
-    (the downloaded edge model). Returns per-client deltas + losses.
+    client_batches leaves: (num_clients, num_steps, B, ...). With
+    ``per_client_params=False`` params are shared (every client downloads the
+    same edge model); with ``per_client_params=True`` params carry a leading
+    client axis too (each slot starts from its own edge server's model).
+    Returns per-client deltas + losses.
     """
-    fn = lambda b: local_sgd(params, loss_fn, b, lr)
-    return jax.vmap(fn)(client_batches)
+    fn = lambda p, b: local_sgd(p, loss_fn, b, lr, unroll=unroll)
+    return jax.vmap(fn, in_axes=(0 if per_client_params else None, 0))(
+        params, client_batches)

@@ -16,8 +16,7 @@ Two step functions are lowered in the dry-run:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -3,23 +3,51 @@ the loop, real local SGD on non-IID client data, deadline-masked edge
 aggregation, periodic global aggregation, test-accuracy tracking.
 
 This is the engine behind Fig. 4a/4c/4e, Fig. 7 and Table II.
+
+Two training backends share the public API (``round`` / ``run`` /
+``evaluate`` / ``HFLHistory``):
+
+  * ``backend="batched"`` (default) — one compiled ``lax.scan`` block per
+    eval interval: on-device batch sampling, vmapped local SGD over all
+    (ES x slot) assignments, stacked deadline-masked aggregation
+    (``repro.fed.batched``).
+  * ``backend="legacy"`` — the original per-client dispatch loop, kept as
+    the parity oracle for the batched path.
+
+Both backends run the selection policy on the host round-by-round, so
+policy decisions are bitwise identical across backends.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_hfl import HFLExperimentConfig
-from repro.core.network import HFLNetworkSim
+from repro.core.network import HFLNetworkSim, RoundData
 from repro.data.federated import FederatedDataset
 from repro.fed.client import local_sgd
 from repro.fed.edge import broadcast_global, deadline_masked_aggregate
-from repro.models.logistic import accuracy, make_loss_fn, make_model
+from repro.models.logistic import accuracy, make_model, make_loss_fn, softmax_xent
+
+
+@functools.lru_cache(maxsize=None)
+def _eval_fn(logits_fn):
+    """Fused global-model eval: one compiled (accuracy, loss) per call.
+
+    Cached on the logits function (module-level per model kind) so every
+    simulation instance shares one compiled evaluator.
+    """
+    @jax.jit
+    def f(edge_params, x, y):
+        p = jax.tree.map(lambda a: jnp.mean(a, axis=0), edge_params)
+        logits = logits_fn(p, x)
+        return accuracy(logits, y), softmax_xent(logits, y)
+    return f
 
 
 @dataclass
@@ -31,6 +59,13 @@ class HFLSimConfig:
     batches_per_epoch: int = 2
     eval_every: int = 5
     seed: int = 0
+    backend: str = "batched"             # 'batched' | 'legacy'
+    sampler: str = "device"              # 'device' | 'host' (parity testing)
+    use_kernel: Optional[bool] = None    # None -> Pallas on TPU, jnp on CPU
+    slots_per_es: Optional[int] = None   # None -> per-block capacity (exact
+                                         # for small models, buckets of 8 for
+                                         # large; see fed.batched.make_engine)
+    agg_tile: int = 512
 
 
 @dataclass
@@ -59,6 +94,8 @@ class HFLSimulation:
                  data: Optional[FederatedDataset] = None,
                  sim: Optional[HFLNetworkSim] = None):
         self.cfg = cfg
+        if cfg.backend not in ("batched", "legacy"):
+            raise ValueError(f"unknown backend {cfg.backend!r}")
         if isinstance(policy, str):
             from repro import policies as _policies
             from repro.core.utility import _policy_kwargs
@@ -84,17 +121,45 @@ class HFLSimulation:
         self.rng = np.random.default_rng(cfg.seed + 7)
         self._local = jax.jit(lambda p, b: local_sgd(p, self.loss_fn, b,
                                                      e.lr))
-        self._eval = jax.jit(lambda p, x, y: accuracy(self.logits_fn(p, x), y))
-        self._eval_loss = jax.jit(
-            lambda p, x, y: self.loss_fn(p, {"x": x, "y": y}))
+        self._test_x = jnp.asarray(self.data.test_x)
+        self._test_y = jnp.asarray(self.data.test_y)
+        self._eval_both = _eval_fn(self.logits_fn)
+        self.engine = None
+        if cfg.backend == "batched":
+            from repro.fed.batched import make_engine
+            self.engine = make_engine(
+                e, steps=e.local_epochs * cfg.batches_per_epoch,
+                batch_size=cfg.batch_size, loss_fn=self.loss_fn,
+                data=self.data, seed=cfg.seed, sampler=cfg.sampler,
+                use_kernel=cfg.use_kernel, slots_per_es=cfg.slots_per_es,
+                tile=cfg.agg_tile,
+                param_count=sum(int(p.size) for p in
+                                jax.tree.leaves(params)))
 
     # -- single HFL round ----------------------------------------------------
 
-    def round(self, t: int) -> Dict[str, float]:
-        e = self.cfg.exp
+    def _policy_step(self, t: int) -> Tuple[RoundData, np.ndarray]:
         rd = self.sim.round(t)
-        assign = self.policy.select(rd)
-        self.policy.update(rd, assign)
+        if hasattr(self.policy, "step"):     # fused compiled select+update
+            assign = self.policy.step(rd)
+        else:
+            assign = self.policy.select(rd)
+            self.policy.update(rd, assign)
+        return rd, assign
+
+    def round(self, t: int) -> Dict[str, float]:
+        rd, assign = self._policy_step(t)
+        if self.engine is not None:
+            self.edge_params, parts = self.engine.run_block(
+                self.edge_params, [assign], [rd], [t])
+            return {"participants": float(parts[-1])}
+        return self._legacy_round(t, rd, assign)
+
+    def _legacy_round(self, t: int, rd: RoundData,
+                      assign: np.ndarray) -> Dict[str, float]:
+        e = self.cfg.exp
+        assert rd.latency is not None, \
+            "RoundData.latency must carry realized Eq. 5 latencies"
         steps = e.local_epochs * self.cfg.batches_per_epoch
         total_participants = 0.0
         new_edges = []
@@ -111,8 +176,7 @@ class HFLSimulation:
                 delta, _ = self._local(edge_p, batches)
                 deltas.append(delta)
                 arrived.append(rd.outcomes[c, m])
-                taus.append(rd.latency[c, m] if rd.latency is not None
-                            else 1.0 - rd.true_p[c, m])
+                taus.append(rd.latency[c, m])
             deltas = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
             agg, k = deadline_masked_aggregate(
                 edge_p, deltas, jnp.asarray(arrived), jnp.asarray(taus),
@@ -129,27 +193,62 @@ class HFLSimulation:
     def global_params(self):
         return jax.tree.map(lambda a: jnp.mean(a, axis=0), self.edge_params)
 
+    def _metrics(self) -> Tuple[float, float]:
+        acc, loss = self._eval_both(self.edge_params, self._test_x,
+                                    self._test_y)
+        return float(acc), float(loss)
+
     def evaluate(self) -> float:
-        p = self.global_params()
-        return float(self._eval(p, jnp.asarray(self.data.test_x),
-                                jnp.asarray(self.data.test_y)))
+        return self._metrics()[0]
 
     def evaluate_loss(self) -> float:
-        p = self.global_params()
-        return float(self._eval_loss(p, jnp.asarray(self.data.test_x),
-                                     jnp.asarray(self.data.test_y)))
+        return self._metrics()[1]
 
     def run(self, progress: Optional[Callable[[int, float], None]] = None
             ) -> HFLHistory:
         hist = HFLHistory()
+
+        def record(t, participants):
+            acc, loss = self._metrics()
+            hist.rounds.append(t + 1)
+            hist.accuracy.append(acc)
+            hist.loss.append(loss)
+            hist.participants.append(participants)
+            if progress:
+                progress(t + 1, acc)
+
+        if self.engine is None:
+            for t in range(self.cfg.rounds):
+                info = self.round(t)
+                if ((t + 1) % self.cfg.eval_every == 0
+                        or t == self.cfg.rounds - 1):
+                    record(t, info["participants"])
+            return hist
+        # batched backend: fuse each eval interval into one scanned block.
+        # Without a progress callback, metrics stay as in-flight device
+        # scalars until the end so the host never blocks between blocks.
+        pend_ts: List[int] = []
+        pend_assigns: List[np.ndarray] = []
+        pend_rds: List[RoundData] = []
+        stash = []
         for t in range(self.cfg.rounds):
-            info = self.round(t)
+            rd, assign = self._policy_step(t)
+            pend_ts.append(t)
+            pend_assigns.append(assign)
+            pend_rds.append(rd)
             if (t + 1) % self.cfg.eval_every == 0 or t == self.cfg.rounds - 1:
-                acc = self.evaluate()
-                hist.rounds.append(t + 1)
-                hist.accuracy.append(acc)
-                hist.loss.append(self.evaluate_loss())
-                hist.participants.append(info["participants"])
+                self.edge_params, parts = self.engine.run_block(
+                    self.edge_params, pend_assigns, pend_rds, pend_ts)
+                pend_ts, pend_assigns, pend_rds = [], [], []
                 if progress:
-                    progress(t + 1, acc)
+                    record(t, float(parts[-1]))
+                else:
+                    acc, loss = self._eval_both(self.edge_params,
+                                                self._test_x, self._test_y)
+                    stash.append((t, parts, acc, loss))
+        for t, parts, acc, loss in stash:
+            hist.rounds.append(t + 1)
+            hist.accuracy.append(float(acc))
+            hist.loss.append(float(loss))
+            hist.participants.append(float(parts[-1]))
         return hist

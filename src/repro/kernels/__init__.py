@@ -1,7 +1,12 @@
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.masked_aggregate import (masked_aggregate,
-                                            masked_aggregate_ref)
+                                            masked_aggregate_flat,
+                                            masked_aggregate_ref,
+                                            masked_aggregate_ref_stacked,
+                                            masked_aggregate_stacked)
 from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
 
 __all__ = ["attention_ref", "flash_attention", "masked_aggregate",
-           "masked_aggregate_ref", "rwkv6_scan", "rwkv6_scan_ref"]
+           "masked_aggregate_flat", "masked_aggregate_ref",
+           "masked_aggregate_ref_stacked", "masked_aggregate_stacked",
+           "rwkv6_scan", "rwkv6_scan_ref"]

@@ -1,4 +1,9 @@
-from repro.kernels.masked_aggregate.ops import masked_aggregate
-from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+from repro.kernels.masked_aggregate.ops import (masked_aggregate,
+                                                masked_aggregate_flat,
+                                                masked_aggregate_stacked)
+from repro.kernels.masked_aggregate.ref import (masked_aggregate_ref,
+                                                masked_aggregate_ref_stacked)
 
-__all__ = ["masked_aggregate", "masked_aggregate_ref"]
+__all__ = ["masked_aggregate", "masked_aggregate_flat",
+           "masked_aggregate_stacked", "masked_aggregate_ref",
+           "masked_aggregate_ref_stacked"]

@@ -1,8 +1,16 @@
-"""jit'd public wrapper: pytree-level deadline-masked aggregation.
+"""jit'd public wrappers: pytree-level deadline-masked aggregation.
 
 On TPU the Pallas kernel is used (interpret=False); this container is
-CPU-only so the default runs the same kernel body in interpret mode. The
-wrapper flattens a parameter pytree, aggregates, and unflattens.
+CPU-only so ``use_kernel=True`` runs the same kernel body in interpret
+mode while the default routes through the pure-jnp oracle. Three entry
+points share one reduction implementation so the math cannot drift:
+
+  * ``masked_aggregate_flat``   — single ES, pre-flattened (D,)/(C, D);
+  * ``masked_aggregate``        — single ES, parameter pytree;
+  * ``masked_aggregate_stacked``— all M edge servers at once: pytrees with
+    a leading (M,) axis, deltas with (M, S) slot axes. Leaves are
+    flattened and concatenated so each ES is one kernel launch over the
+    whole parameter vector.
 """
 from __future__ import annotations
 
@@ -12,7 +20,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
-from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
+from repro.kernels.masked_aggregate.ref import (masked_aggregate_ref,
+                                               masked_aggregate_ref_stacked)
+
+
+def masked_aggregate_flat(param: jax.Array, deltas: jax.Array,
+                          weights: jax.Array, use_kernel: bool = False,
+                          tile: int = 512, interpret: bool = True
+                          ) -> jax.Array:
+    """param: (D,); deltas: (C, D); weights: (C,). Returns (D,)."""
+    if use_kernel:
+        return masked_aggregate_kernel(param, deltas, weights, tile=tile,
+                                       interpret=interpret)
+    return masked_aggregate_ref(param, deltas, weights)
 
 
 def masked_aggregate(edge_params: Any, deltas: Any, weights: jax.Array,
@@ -25,13 +45,42 @@ def masked_aggregate(edge_params: Any, deltas: Any, weights: jax.Array,
     out = []
     for p, d in zip(leaves_p, leaves_d):
         c = d.shape[0]
-        flat_p = p.reshape(-1)
-        flat_d = d.reshape(c, -1)
-        if use_kernel:
-            out.append(masked_aggregate_kernel(
-                flat_p, flat_d, weights, tile=tile,
-                interpret=interpret).reshape(p.shape))
-        else:
-            out.append(masked_aggregate_ref(flat_p, flat_d,
-                                            weights).reshape(p.shape))
+        flat = masked_aggregate_flat(p.reshape(-1), d.reshape(c, -1), weights,
+                                     use_kernel=use_kernel, tile=tile,
+                                     interpret=interpret)
+        out.append(flat.reshape(p.shape))
     return jax.tree.unflatten(treedef, out)
+
+
+def masked_aggregate_stacked(edge_params: Any, deltas: Any,
+                             weights: jax.Array, use_kernel: bool = False,
+                             tile: int = 512, interpret: bool = True) -> Any:
+    """Aggregate every edge server in one shot (batched HFL round hot spot).
+
+    edge_params: pytree, leaves (M, ...); deltas: same pytree, leaves
+    (M, S, ...) with S fixed-capacity client slots; weights: (M, S) —
+    zero for padded/dropped slots. Each ES m gets Eq. 3 restricted to its
+    mask with denominator max(sum_s w[m, s], 1). Leaves are concatenated
+    along the flattened parameter axis so the reduction is one
+    (S,)x(S, D_total) contraction per ES.
+    """
+    leaves_p, treedef = jax.tree.flatten(edge_params)
+    leaves_d = treedef.flatten_up_to(deltas)
+    m, s = weights.shape
+    dims = [int(p.size) // m for p in leaves_p]
+    flat_p = jnp.concatenate(
+        [p.reshape(m, -1).astype(jnp.float32) for p in leaves_p], axis=1)
+    flat_d = jnp.concatenate(
+        [d.reshape(m, s, -1).astype(jnp.float32) for d in leaves_d], axis=2)
+    if use_kernel:
+        out = jnp.stack([
+            masked_aggregate_kernel(flat_p[i], flat_d[i], weights[i],
+                                    tile=tile, interpret=interpret)
+            for i in range(m)])
+    else:
+        out = masked_aggregate_ref_stacked(flat_p, flat_d, weights)
+    offsets = [sum(dims[:i]) for i in range(1, len(dims))]  # static splits
+    pieces = jnp.split(out, offsets, axis=1)
+    return jax.tree.unflatten(treedef, [
+        piece.reshape(p.shape).astype(p.dtype)
+        for piece, p in zip(pieces, leaves_p)])

@@ -11,3 +11,16 @@ def masked_aggregate_ref(param: jax.Array, deltas: jax.Array,
     denom = jnp.maximum(jnp.sum(w), 1.0)
     agg = jnp.einsum("c,cd->d", w, deltas.astype(jnp.float32)) / denom
     return (param.astype(jnp.float32) + agg).astype(param.dtype)
+
+
+def masked_aggregate_ref_stacked(params: jax.Array, deltas: jax.Array,
+                                 weights: jax.Array) -> jax.Array:
+    """Batched oracle over a leading edge-server axis.
+
+    params: (M, D); deltas: (M, S, D); weights: (M, S). Returns (M, D) with
+    each row aggregated under its own mask/denominator (max(sum w_m, 1))."""
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w, axis=1), 1.0)
+    agg = jnp.einsum("ms,msd->md", w, deltas.astype(jnp.float32))
+    return (params.astype(jnp.float32)
+            + agg / denom[:, None]).astype(params.dtype)

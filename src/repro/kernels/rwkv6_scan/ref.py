@@ -1,7 +1,6 @@
 """Exact per-step oracle for the RWKV6 WKV kernel (lax.scan)."""
 from __future__ import annotations
 
-import jax
 
 from repro.models.layers import linear_recurrence_ref
 

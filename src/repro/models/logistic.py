@@ -7,6 +7,7 @@ client); see repro.data.synthetic.
 """
 from __future__ import annotations
 
+import functools
 from typing import Tuple
 
 import jax
@@ -76,8 +77,14 @@ def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
     return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
 
 
+@functools.lru_cache(maxsize=None)
 def make_loss_fn(kind: str):
-    """kind: 'logreg' | 'cnn'. Returns loss(params, batch) -> scalar."""
+    """kind: 'logreg' | 'cnn'. Returns loss(params, batch) -> scalar.
+
+    Cached so every caller gets the *same* callable per kind — jit caches
+    (and the batched-HFL compiled-block cache) key on function identity,
+    letting independent simulations share compiled code.
+    """
     logits_fn = logreg_logits if kind == "logreg" else cnn_logits
 
     def loss(params, batch) -> jax.Array:

@@ -21,7 +21,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.models import encdec, rwkv6, transformer, zamba2
 
 # sliding window used by the long-context serving mode of full-attention archs

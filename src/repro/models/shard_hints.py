@@ -7,7 +7,7 @@ smoke tests) it is a no-op.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

@@ -9,7 +9,6 @@ centralized/server-side training paths.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Tuple
 
 import jax

@@ -18,6 +18,7 @@ stateful ``pol.select(rd) / pol.update(rd, assign)`` interface used by
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, NamedTuple, Optional, Tuple
 
@@ -108,12 +109,37 @@ class FunctionalPolicy:
         return state
 
 
+# Compiled per *policy value* (frozen dataclasses hash by field values), so
+# every adapter / simulation over an equivalent policy shares one jit cache
+# instead of recompiling per instance.
+@functools.lru_cache(maxsize=None)
+def _jitted_select(policy: "FunctionalPolicy"):
+    return jax.jit(lambda state, rd: policy.select(state, rd))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_update(policy: "FunctionalPolicy"):
+    return jax.jit(
+        lambda state, rd, assign, aux: policy.update(state, rd, assign, aux))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(policy: "FunctionalPolicy"):
+    """select+update fused into a single compiled round step."""
+    def step(state, rd):
+        assign, aux = policy.select(state, rd)
+        return assign, aux, policy.update(state, rd, assign, aux)
+    return jax.jit(step)
+
+
 class PolicyAdapter:
     """Legacy-interface shim over a functional policy.
 
     Holds the state internally and exposes the historical
     ``select(rd) -> assign`` / ``update(rd, assign) -> None`` contract plus
-    ``name`` and ``last_explored`` attributes.
+    ``name`` and ``last_explored`` attributes. For ``jax_capable`` policies
+    select/update run as compiled calls on a ``Round`` pytree view, and
+    ``step`` fuses both into one dispatch (the HFL training loop's path).
     """
 
     def __init__(self, policy: FunctionalPolicy, seed: int = 0,
@@ -129,18 +155,43 @@ class PolicyAdapter:
         if self._state is None:
             self._state = self.policy.init(self._seed, rd0=rd)
 
-    def select(self, rd: RoundData) -> np.ndarray:
-        self._ensure_state(rd)
-        assign, aux = self.policy.select(self._state, rd)
+    def _set_aux(self, aux) -> None:
         self._aux = aux
         if isinstance(aux, dict) and "explored" in aux:
             self.last_explored = bool(aux["explored"])
+
+    def select(self, rd: RoundData) -> np.ndarray:
+        self._ensure_state(rd)
+        if self.policy.jax_capable:
+            assign, aux = _jitted_select(self.policy)(
+                self._state, round_from_data(rd))
+        else:
+            assign, aux = self.policy.select(self._state, rd)
+        self._set_aux(aux)
         return np.asarray(assign, np.int64)
 
     def update(self, rd: RoundData, assign: np.ndarray) -> None:
         self._ensure_state(rd)
-        self._state = self.policy.update(self._state, rd,
-                                         np.asarray(assign), self._aux)
+        if self.policy.jax_capable:
+            self._state = _jitted_update(self.policy)(
+                self._state, round_from_data(rd), np.asarray(assign),
+                self._aux)
+        else:
+            self._state = self.policy.update(self._state, rd,
+                                             np.asarray(assign), self._aux)
+
+    def step(self, rd: RoundData) -> np.ndarray:
+        """Fused select+update: one compiled dispatch per round for
+        jax-capable policies, plain select-then-update otherwise."""
+        self._ensure_state(rd)
+        if self.policy.jax_capable:
+            assign, aux, self._state = _jitted_step(self.policy)(
+                self._state, round_from_data(rd))
+            self._set_aux(aux)
+            return np.asarray(assign, np.int64)
+        assign = self.select(rd)
+        self.update(rd, assign)
+        return assign
 
     @property
     def state(self):

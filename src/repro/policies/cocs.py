@@ -15,10 +15,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.cocs import theorem2_params
-from repro.policies.base import FunctionalPolicy, PolicySpec, as_key
+from repro.policies.base import FunctionalPolicy
 from repro.policies.solvers import flgreedy_assign, greedy_assign
 
 

@@ -11,7 +11,7 @@ to the legacy loop via ``PolicyAdapter``.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """COCS policy unit tests: estimator correctness, explore/exploit logic,
 Theorem 2 parameters, numpy/JAX estimator equivalence."""
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

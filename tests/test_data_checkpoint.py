@@ -1,5 +1,4 @@
 """Data pipeline (non-IID invariants, hypothesis) + checkpoint roundtrip."""
-import os
 import tempfile
 
 import jax.numpy as jnp

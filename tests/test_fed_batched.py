@@ -1,0 +1,191 @@
+"""Batched HFL backend: parity with the legacy per-client loop, Eq. 6
+slot-mask semantics over padded capacity, and the stacked aggregation
+kernel/ref/edge agreement."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.data.federated import FederatedDataset
+from repro.fed.client import local_sgd, local_sgd_multi
+from repro.fed.edge import deadline_masked_aggregate, effective_mask_multi
+from repro.fed.hfl import HFLSimConfig, HFLSimulation
+from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
+from repro.models.logistic import make_loss_fn
+
+EXP = dc.replace(MNIST_CONVEX, lr=0.05)
+ROUNDS = 12
+
+
+def _data():
+    return FederatedDataset.synthetic(EXP.num_clients, kind="mnist", seed=0)
+
+
+def _run(backend, data, sampler="device"):
+    cfg = HFLSimConfig(exp=EXP, rounds=ROUNDS, eval_every=3, seed=0,
+                       backend=backend, sampler=sampler)
+    sim = HFLSimulation(cfg, "cocs", data=data)
+    hist = sim.run()
+    return sim, hist
+
+
+def test_backend_parity_host_sampler():
+    """Same numpy batch stream -> batched must reproduce legacy exactly:
+    identical policy decisions/participants, edge params to float tolerance,
+    accuracy within 1e-3."""
+    data = _data()
+    sim_l, h_l = _run("legacy", data)
+    sim_b, h_b = _run("batched", data, sampler="host")
+    assert h_l.rounds == h_b.rounds
+    assert h_l.participants == h_b.participants
+    np.testing.assert_allclose(h_l.accuracy, h_b.accuracy, atol=1e-3)
+    for a, b in zip(jax.tree.leaves(sim_l.edge_params),
+                    jax.tree.leaves(sim_b.edge_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_backend_parity_device_sampler():
+    """On-device jax.random sampling: policy decisions and participant
+    counts stay bitwise identical (selection never depends on batches);
+    the learning curve stays close."""
+    data = _data()
+    _, h_l = _run("legacy", data)
+    _, h_b = _run("batched", data)
+    assert h_l.rounds == h_b.rounds
+    assert h_l.participants == h_b.participants
+    np.testing.assert_allclose(h_l.accuracy, h_b.accuracy, atol=0.1)
+
+
+def test_device_sampler_block_boundary_independence():
+    """run() (scan blocks) and round()-by-round (blocks of 1) must produce
+    identical results: device sampling keys depend only on (round, slot),
+    never on block length or padded slot capacity."""
+    data = _data()
+    cfg = HFLSimConfig(exp=EXP, rounds=6, eval_every=3, seed=0,
+                       backend="batched")
+    sim_blocks = HFLSimulation(cfg, "oracle", data=data)
+    sim_blocks.run()
+    sim_single = HFLSimulation(cfg, "oracle", data=data)
+    for t in range(cfg.rounds):
+        sim_single.round(t)
+    for a, b in zip(jax.tree.leaves(sim_blocks.edge_params),
+                    jax.tree.leaves(sim_single.edge_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_batched_round_api():
+    """Public per-round API works on the batched backend."""
+    data = _data()
+    cfg = HFLSimConfig(exp=EXP, rounds=4, eval_every=2, seed=0,
+                       backend="batched")
+    sim = HFLSimulation(cfg, "oracle", data=data)
+    shapes = [a.shape for a in jax.tree.leaves(sim.edge_params)]
+    info = sim.round(0)
+    assert info["participants"] >= 0.0
+    assert [a.shape for a in jax.tree.leaves(sim.edge_params)] == shapes
+
+
+def test_unknown_backend_rejected():
+    cfg = HFLSimConfig(exp=EXP, rounds=2, backend="warp-drive")
+    with pytest.raises(ValueError):
+        HFLSimulation(cfg, "oracle")
+
+
+def test_local_sgd_multi_per_client_params():
+    """vmap with a leading params axis == looping local_sgd per client."""
+    loss_fn = make_loss_fn("logreg")
+    key = jax.random.PRNGKey(1)
+    n, steps, b, d = 3, 2, 4, 8
+    xb = jax.random.normal(key, (n, steps, b, d))
+    yb = jax.random.randint(key, (n, steps, b), 0, 10)
+    params = [{"w": jax.random.normal(jax.random.fold_in(key, i), (d, 10)),
+               "b": jnp.zeros((10,))} for i in range(n)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+    deltas, losses = local_sgd_multi(stacked, loss_fn,
+                                     {"x": xb, "y": yb}, 0.1,
+                                     per_client_params=True)
+    for i in range(n):
+        di, li = local_sgd(params[i], loss_fn,
+                           {"x": xb[i], "y": yb[i]}, 0.1)
+        np.testing.assert_allclose(np.asarray(deltas["w"][i]),
+                                   np.asarray(di["w"]), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(float(losses[i]), float(li), rtol=1e-5)
+
+
+def _random_case(rng, m, s, z_min):
+    params = {"w": jnp.asarray(rng.standard_normal((m, 6)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((m, 2)), jnp.float32)}
+    deltas = {"w": jnp.asarray(rng.standard_normal((m, s, 6)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((m, s, 2)), jnp.float32)}
+    n_valid = rng.integers(0, s + 1, m)          # some ESs may be empty
+    valid = np.zeros((m, s), np.float32)
+    for j in range(m):
+        valid[j, :n_valid[j]] = 1.0
+    arrived = (rng.random((m, s)) < 0.6).astype(np.float32) * valid
+    tau = np.where(valid > 0, rng.random((m, s)).astype(np.float32) * 5.0,
+                   np.inf)
+    return params, deltas, jnp.asarray(valid), jnp.asarray(arrived), \
+        jnp.asarray(tau), n_valid
+
+
+@settings(max_examples=20)
+@given(seed=st.integers(0, 10_000), z_min=st.integers(1, 3),
+       s=st.integers(1, 6))
+def test_padded_slots_contribute_zero(seed, z_min, s):
+    """Property: padded/empty slots never contribute — garbage in the padded
+    delta slots cannot change the result, empty ESs keep their params, and
+    each ES matches the legacy single-ES aggregation over its real slots."""
+    rng = np.random.default_rng(seed)
+    m = 3
+    params, deltas, valid, arrived, tau, n_valid = _random_case(
+        rng, m, s, z_min)
+    w = effective_mask_multi(arrived, tau, valid, z_min)
+    out = masked_aggregate_stacked(params, deltas, w)
+    # 1) garbage-independence: rewrite padded slots with different garbage
+    deltas_garbage = jax.tree.map(
+        lambda d: jnp.where(valid[..., None] > 0, d, 1e6), deltas)
+    out_garbage = masked_aggregate_stacked(params, deltas_garbage, w)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out_garbage)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for j in range(m):
+        pj = jax.tree.map(lambda a: a[j], params)
+        c = int(n_valid[j])
+        if c == 0:
+            # 2) empty ES -> params unchanged
+            for a, b in zip(jax.tree.leaves(jax.tree.map(lambda o: o[j],
+                                                         out)),
+                            jax.tree.leaves(pj)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-6)
+            continue
+        # 3) per-ES parity with the legacy path over the real slots only
+        dj = jax.tree.map(lambda d: d[j, :c], deltas)
+        legacy_out, _ = deadline_masked_aggregate(
+            pj, dj, arrived[j, :c], tau[j, :c], z_min=z_min)
+        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda o: o[j], out)),
+                        jax.tree.leaves(legacy_out)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_masked_aggregate_stacked_kernel_matches_ref():
+    """Pallas kernel path (interpret mode on CPU) == jnp oracle path."""
+    rng = np.random.default_rng(3)
+    m, s = 2, 4
+    params = {"w": jnp.asarray(rng.standard_normal((m, 700)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((m, 10)), jnp.float32)}
+    deltas = {"w": jnp.asarray(rng.standard_normal((m, s, 700)), jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((m, s, 10)), jnp.float32)}
+    w = jnp.asarray(rng.random((m, s)) < 0.5, jnp.float32)
+    ref = masked_aggregate_stacked(params, deltas, w, use_kernel=False)
+    ker = masked_aggregate_stacked(params, deltas, w, use_kernel=True,
+                                   tile=256, interpret=True)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(ker)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)

@@ -1,7 +1,6 @@
 """Optimizers + schedules."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim import adamw, apply_updates, momentum, sgd, warmup_cosine

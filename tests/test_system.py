@@ -1,7 +1,6 @@
 """End-to-end behaviour tests for the paper's system: COCS in the HFL loop
 reproduces the paper's qualitative claims on the simulated network.
 """
-import numpy as np
 import pytest
 
 from repro.configs.paper_hfl import CIFAR10_NONCONVEX, MNIST_CONVEX
