@@ -1,0 +1,101 @@
+"""Fail CI when a guarded benchmark entry regresses vs the committed
+baseline.
+
+    python benchmarks/check_regression.py \
+        --baseline /tmp/bench_baseline.json --current BENCH_quick.json \
+        --entry fig4_sweep_fused --relative-to fig4_sweep_seq \
+        --max-ratio 1.5
+
+With ``--relative-to`` the guarded quantity is ``entry / reference``
+within each file, so a committed baseline measured on different hardware
+still guards correctly — machine speed cancels out and only the fused
+engine's *relative* cost vs the sequential loop is checked. Timing guard
+with generous slack: shared CI runners are noisy, so only a
+>``max_ratio`` blowup fails. Skips cleanly (exit 0) when the baseline
+file/entries are absent — a new entry has no trajectory to regress — or
+when a needed row carries no positive timing (ERROR rows) in the
+baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return {e["name"]: e for e in json.load(f)}
+    except (OSError, json.JSONDecodeError, KeyError, TypeError):
+        return {}
+
+
+def _metric(entries: dict, name: str, reference: str):
+    """us_per_call of ``name``, divided by ``reference``'s if given.
+    None when any needed row is absent or non-positive."""
+    e = entries.get(name)
+    if not e or e.get("us_per_call", 0) <= 0:
+        return None
+    value = e["us_per_call"]
+    if reference:
+        r = entries.get(reference)
+        if not r or r.get("us_per_call", 0) <= 0:
+            return None
+        value /= r["us_per_call"]
+    return value
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json snapshot (pre-run copy)")
+    ap.add_argument("--current", required=True,
+                    help="freshly produced BENCH_*.json")
+    ap.add_argument("--entry", action="append", default=None,
+                    help="entry name(s) to guard (repeatable); default "
+                         "fig4_sweep_fused")
+    ap.add_argument("--relative-to", default=None,
+                    help="normalize each entry by this row's timing in the "
+                         "same file (hardware-independent guard)")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when current/baseline exceeds this")
+    args = ap.parse_args(argv)
+    entries = args.entry or ["fig4_sweep_fused"]
+
+    baseline = _load(args.baseline)
+    current = _load(args.current)
+    failures = 0
+    for name in entries:
+        base = _metric(baseline, name, args.relative_to)
+        if base is None:
+            print(f"{name}: no usable baseline entry — skipping")
+            continue
+        cur = _metric(current, name, args.relative_to)
+        if cur is None:
+            print(f"{name}: missing/errored in current run — FAIL")
+            failures += 1
+            continue
+        # write_json merges by name, so a benchmark that stopped emitting
+        # its row leaves the committed timing byte-identical in the
+        # "current" file — that is a missing measurement, not a pass
+        stale = (name in baseline and name in current
+                 and current[name].get("us_per_call")
+                 == baseline[name].get("us_per_call"))
+        if stale:
+            print(f"{name}: timing identical to baseline — the benchmark "
+                  "did not re-measure this entry — FAIL")
+            failures += 1
+            continue
+        ratio = cur / base
+        unit = (f"x {args.relative_to}" if args.relative_to else "us")
+        verdict = "OK" if ratio <= args.max_ratio else "REGRESSION"
+        print(f"{name}: {base:.3g}{unit} -> {cur:.3g}{unit} "
+              f"({ratio:.2f}x, limit {args.max_ratio:.2f}x) {verdict}")
+        if ratio > args.max_ratio:
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

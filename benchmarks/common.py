@@ -27,9 +27,32 @@ def emit(rows: List[Row]) -> None:
 
 
 def write_json(rows: List[Row], path: str) -> None:
-    """Machine-readable perf trajectory: the CSV rows as a JSON list."""
-    payload = [{"name": name, "us_per_call": us, "derived": derived}
-               for name, us, derived in rows]
+    """Machine-readable perf trajectory: the CSV rows as a JSON list.
+
+    Merges by name into an existing file instead of overwriting it, so
+    entries from earlier PRs/benchmark subsets accumulate. A re-measured
+    entry gains a ``speedup_vs`` field (previous / new us_per_call) —
+    >1 means this measurement is faster than the last committed one.
+    """
+    previous: dict = {}
+    order: List[str] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                for entry in json.load(f):
+                    previous[entry["name"]] = entry
+                    order.append(entry["name"])
+        except (json.JSONDecodeError, KeyError, TypeError):
+            previous, order = {}, []        # corrupt file: start fresh
+    merged = dict(previous)
+    for name, us, derived in rows:
+        entry = {"name": name, "us_per_call": us, "derived": derived}
+        old = previous.get(name)
+        if old and old.get("us_per_call", 0) > 0 and us > 0:
+            entry["speedup_vs"] = round(old["us_per_call"] / us, 3)
+        if name not in merged:
+            order.append(name)
+        merged[name] = entry
     with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump([merged[n] for n in order], f, indent=2)
         f.write("\n")

@@ -1,6 +1,14 @@
 """Kernel microbenchmarks (substrate): Pallas interpret-mode correctness is
 tested in tests/; here we time the jnp reference paths (what actually runs
-on this CPU container) and report derived bandwidth/throughput."""
+on this CPU container) and report derived bandwidth/throughput.
+
+The ``masked_aggregate`` tile sweep times the jnp oracle, the Pallas
+kernel in interpret mode (debug path, small sizes only — it executes the
+kernel body per grid step in Python) and, on TPU, the compiled tiled
+kernel, across parameter counts and the fused experiment engine's seed
+axis. ``best_tile`` — the autotuner ``make_engine`` consults instead of a
+hardcoded tile — reports its pick per size.
+"""
 from __future__ import annotations
 
 from typing import List
@@ -10,8 +18,68 @@ import jax.numpy as jnp
 
 from benchmarks.common import Row, timed
 from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
+from repro.kernels.masked_aggregate.ops import (best_tile,
+                                                masked_aggregate_stacked)
 from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
 from repro.models.layers import chunked_linear_recurrence
+
+TILE_CANDIDATES = (256, 512, 1024)
+PARAM_COUNTS = (10_000, 100_000, 1_000_000)
+INTERPRET_MAX_D = 10_000       # interpret mode is O(grid) Python steps
+
+
+def _tile_sweep(key) -> List[Row]:
+    rows: List[Row] = []
+    on_tpu = jax.default_backend() == "tpu"
+    c, s_seeds, m = 16, 4, 3
+    for d in PARAM_COUNTS:
+        p = jnp.zeros((d,), jnp.float32)
+        deltas = jax.random.normal(key, (c, d), jnp.float32)
+        w = jnp.ones((c,))
+        f = jax.jit(masked_aggregate_ref)
+        f(p, deltas, w).block_until_ready()
+        us, _ = timed(lambda: f(p, deltas, w).block_until_ready(),
+                      repeats=3)
+        gb = (c * d * 4 + d * 8) / 1e9
+        rows.append((f"kernel_masked_aggregate_ref_d{d}", us,
+                     f"GBps={gb / (us / 1e6):.2f};"
+                     f"picked_tile={best_tile(d)}"))
+        # seed axis: (S, M, ...) stacked layout of the fused engine
+        slots = 8
+        params_sm = {"w": jnp.zeros((s_seeds, m, d // (s_seeds * m)))}
+        deltas_sm = {"w": jax.random.normal(
+            key, (s_seeds, m, slots, d // (s_seeds * m)), jnp.float32)}
+        w_sm = jnp.ones((s_seeds, m, slots))
+        g = jax.jit(lambda a, b, ww: masked_aggregate_stacked(a, b, ww))
+        jax.block_until_ready(g(params_sm, deltas_sm, w_sm))
+        us, _ = timed(
+            lambda: jax.block_until_ready(g(params_sm, deltas_sm, w_sm)),
+            repeats=3)
+        rows.append((f"kernel_masked_aggregate_seedaxis_d{d}", us,
+                     f"S={s_seeds};M={m};slots={slots}"))
+        for tile in TILE_CANDIDATES:
+            if d <= INTERPRET_MAX_D:
+                fi = lambda: masked_aggregate_kernel(
+                    p, deltas, w, tile=tile,
+                    interpret=True).block_until_ready()
+                fi()
+                us, _ = timed(fi)
+                rows.append((f"kernel_masked_aggregate_interp_d{d}_t{tile}",
+                             us, "interpret=1"))
+            if on_tpu:
+                ft = lambda: masked_aggregate_kernel(
+                    p, deltas, w, tile=tile,
+                    interpret=False).block_until_ready()
+                ft()
+                us, _ = timed(ft, repeats=3)
+                rows.append((f"kernel_masked_aggregate_tiled_d{d}_t{tile}",
+                             us, f"GBps={gb / (us / 1e6):.2f}"))
+    if not on_tpu:
+        rows.append(("kernel_masked_aggregate_tiled", 0.0,
+                     "skipped: compiled Pallas path needs TPU "
+                     "(interpret-only container)"))
+    return rows
 
 
 def run() -> List[Row]:
@@ -29,6 +97,7 @@ def run() -> List[Row]:
     gb = (c * d * 4 + d * 8) / 1e9
     rows.append(("kernel_masked_aggregate_16x4M", us,
                  f"GBps={gb / (us / 1e6):.2f}"))
+    rows.extend(_tile_sweep(key))
 
     # attention: b1 h8 kv2 s1024 d64
     q = jax.random.normal(key, (1, 8, 1024, 64))

@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV. Quick mode by default;
 REPRO_BENCH_FULL=1 restores paper-scale horizons. ``--json PATH``
-additionally writes the rows as a JSON list (e.g. ``BENCH_quick.json``)
-so the perf trajectory is machine-readable (uploaded as a CI artifact).
+merges the rows by name into the JSON list at PATH (e.g.
+``BENCH_quick.json``), annotating re-measured entries with a
+``speedup_vs`` ratio against the previous value, so the perf trajectory
+accumulates across PRs (uploaded as a CI artifact; guarded by
+``benchmarks/check_regression.py``).
 """
 from __future__ import annotations
 
@@ -22,6 +25,7 @@ MODULES = [
     "benchmarks.fig567_nonconvex",
     "benchmarks.ablation_phased",
     "benchmarks.engine_sweep",
+    "benchmarks.sweep_training",
     "benchmarks.kernels_bench",
     "benchmarks.roofline_report",
 ]

@@ -5,11 +5,15 @@
     state, rd = env.step(state)        # pure: the input state is unchanged
     rounds = env.rollout(seed, horizon)  # fast path, no state copies
 
-``step`` is referentially transparent at host level: it deep-copies the
-underlying simulator before advancing, so stepping the same state twice
-yields the same RoundData and old states stay replayable. ``rollout``
-advances one simulator in place and is what the jitted bandit engine
-consumes (it stacks the realized rounds into a device batch).
+``step`` is referentially transparent at host level: stepping the same
+state twice yields the same RoundData and old states stay replayable. It
+copies only the state ``round()`` actually advances — the RNG and the
+mobility positions — not the whole simulator (large immutable arrays such
+as client shards/prices are shared between states). ``rollout`` advances
+one simulator in place, and ``rollout_multi`` realizes a whole seed sweep
+into one stacked ``(S, T, ...)`` ``Round`` batch — the host-side data
+preparation the device-resident engines (``repro.policies.engine``,
+``repro.experiment``) consume.
 
 RoundData now carries the realized per-pair latencies (Eq. 5), so
 downstream consumers (e.g. the deadline-masked edge aggregation in
@@ -20,7 +24,7 @@ from __future__ import annotations
 
 import copy
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 from repro.configs.paper_hfl import HFLExperimentConfig
 from repro.core.network import HFLNetworkSim, RoundData
@@ -51,8 +55,14 @@ class HFLEnv:
 
     def step(self, state: EnvState,
              t: Optional[int] = None) -> tuple:
-        """(state, t?) -> (new_state, RoundData). Pure: copies the sim."""
-        sim = copy.deepcopy(state.sim)
+        """(state, t?) -> (new_state, RoundData). Pure: copies only the
+        mutable sim state (RNG, client positions) — ``round()`` rebinds
+        rather than mutates everything else, so the heavy immutable
+        arrays are shared and stepping stays O(mutable state), not
+        O(simulator size)."""
+        sim = copy.copy(state.sim)
+        sim.rng = copy.deepcopy(state.sim.rng)
+        sim.client_pos = state.sim.client_pos.copy()
         tt = state.t if t is None else t
         rd = sim.round(tt)
         return EnvState(sim=sim, t=tt + 1), rd
@@ -61,3 +71,10 @@ class HFLEnv:
         """Realize `horizon` rounds in place (no copies)."""
         sim = self.make_sim(seed)
         return [sim.round(t) for t in range(horizon)]
+
+    def rollout_multi(self, seeds: Sequence[int], horizon: int):
+        """Realize a whole seed sweep as one stacked ``(S, T, ...)``
+        ``Round`` batch (see ``repro.policies.stack_rounds_multi``)."""
+        from repro.policies.engine import stack_rounds_multi
+        return stack_rounds_multi(
+            [self.rollout(s, horizon) for s in seeds])

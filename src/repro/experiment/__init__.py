@@ -1,0 +1,23 @@
+"""Device-resident experiment engine: whole multi-seed HFL experiments —
+client-selection policy, Eq. 2/3/6 training rounds and test evaluation —
+as one compiled ``lax.scan`` block per eval interval, batched over seeds.
+
+    from repro import envs, experiment
+    env = envs.make("paper")
+    res = experiment.run_experiment_sweep(["cocs", "oracle"], env,
+                                          seeds=range(8), horizon=150)
+    res.final_accuracy("cocs")          # (S,)
+
+Policy decisions match the sequential host oracle
+(``repro.policies.run_rounds_host``) bitwise; training math matches the
+host-loop batched backend (``repro.fed.batched``), whose sampling and
+per-slot training bodies it shares.
+"""
+from __future__ import annotations
+
+from repro.experiment.fused import BlockOut, fused_block
+from repro.experiment.packing import pack_assignment, slot_capacity
+from repro.experiment.sweep import SweepResult, run_experiment_sweep
+
+__all__ = ["BlockOut", "SweepResult", "fused_block", "pack_assignment",
+           "run_experiment_sweep", "slot_capacity"]

@@ -1,0 +1,133 @@
+"""The fused device-resident HFL block: policy + training + evaluation.
+
+One jitted call covers an entire eval interval for *all seeds at once*:
+
+    lax.scan over rounds of
+        select (P2/P3 solver)  ->  update (CC-MAB estimators)   [policy]
+        traced packing         ->  on-device batch sampling
+        Eq. 2 local SGD        ->  Eq. 6 deadline masks
+        Eq. 3 masked aggregation -> cloud sync                  [training]
+    then one batched test-set evaluation per block               [eval]
+
+The seed axis is batched *explicitly* rather than with an outer
+``jax.vmap``: the policy step is vmapped per stage, while the training
+stages fold seeds into the existing batch axes — (S, M, slots) slots
+flatten into one ``local_sgd_multi`` call and the aggregation routes
+through ``masked_aggregate_stacked``'s (S, M, ...) path, so the Pallas
+kernel sees ordinary stacked shapes instead of relying on batching rules.
+
+Carries (policy state, edge params) are donated, so a run's device
+residency is: one dispatch per eval interval, zero host round-trips
+inside it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed.batched import (BatchedRoundSpec, device_batch_indices,
+                               slot_train)
+from repro.fed.edge import broadcast_global, effective_mask_multi
+from repro.experiment.packing import pack_assignment
+from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
+from repro.models.logistic import accuracy, softmax_xent
+from repro.policies.base import FunctionalPolicy
+
+
+class BlockOut(NamedTuple):
+    """Per-block device outputs (leading axes: S seeds, T block rounds)."""
+    policy_state: object
+    edge_params: object
+    selections: jax.Array    # (S, T, N) int32
+    utilities: jax.Array     # (S, T)
+    participants: jax.Array  # (S, T)
+    explored: jax.Array      # (S, T) bool
+    accuracy: jax.Array      # (S,) test accuracy at block end
+    loss: jax.Array          # (S,) test loss at block end
+
+
+@functools.lru_cache(maxsize=None)
+def fused_block(policy: FunctionalPolicy, spec: BatchedRoundSpec,
+                slots: int, batch: int, loss_fn, logits_fn):
+    """Compile-once block runner for one (policy, spec, shapes) variant.
+
+    Returns ``block(stacked_x, stacked_y, stacked_sizes, base_keys,
+    policy_state, edge_params, rounds, test_x, test_y) -> BlockOut`` where
+    ``rounds`` is a ``Round`` pytree with (T, S, ...) leaves (scan axis
+    first), ``base_keys`` is (S,) per-seed PRNG keys and the carries have
+    a leading (S,) seed axis. Cached on value-hashable statics so every
+    sweep over an equivalent configuration shares one executable.
+    """
+    m, steps = spec.num_edge_servers, spec.steps
+    sqrt_u = policy.spec.sqrt_utility
+
+    def block(stacked_x, stacked_y, stacked_sizes, base_keys,
+              policy_state, edge_params, rounds, test_x, test_y):
+        n_seeds = base_keys.shape[0]
+
+        def step(carry, rd):
+            pstate, edge = carry
+            assign, aux = jax.vmap(policy.select)(pstate, rd)
+            new_pstate = jax.vmap(policy.update)(pstate, rd, assign, aux)
+            ci, valid, arrived, tau = jax.vmap(
+                pack_assignment, in_axes=(0, 0, 0, None, None))(
+                    assign, rd.outcomes, rd.latency, m, slots)
+            idx = jax.vmap(device_batch_indices,
+                           in_axes=(0, 0, 0, None, None, None))(
+                base_keys, rd.t, ci, stacked_sizes, steps, batch)
+            xb = stacked_x[ci[..., None, None], idx]  # (S,M,slots,steps,B,..)
+            yb = stacked_y[ci[..., None, None], idx]
+            flat = n_seeds * m * slots
+            batches = {
+                "x": xb.reshape((flat, steps, batch) + xb.shape[5:]),
+                "y": yb.reshape(flat, steps, batch),
+            }
+            slot_params = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[:, :, None], (n_seeds, m, slots) + a.shape[2:]
+                ).reshape((flat,) + a.shape[2:]), edge)
+            deltas = slot_train(slot_params, batches,
+                                valid.reshape(flat) > 0, spec, loss_fn)
+            deltas = jax.tree.map(
+                lambda d: d.reshape((n_seeds, m, slots) + d.shape[1:]),
+                deltas)
+            w = effective_mask_multi(
+                arrived.reshape(n_seeds * m, slots),
+                tau.reshape(n_seeds * m, slots),
+                valid.reshape(n_seeds * m, slots),
+                spec.z_min).reshape(n_seeds, m, slots)
+            new_edge = masked_aggregate_stacked(
+                edge, deltas, w, use_kernel=spec.use_kernel,
+                tile=spec.tile, interpret=spec.interpret)
+            sync = ((rd.t[0] + 1) % spec.t_es) == 0
+            synced = jax.vmap(broadcast_global)(new_edge)
+            new_edge = jax.tree.map(
+                lambda a, c: jnp.where(sync, a, c), synced, new_edge)
+            parts = jnp.sum(arrived * valid, axis=(1, 2))     # (S,)
+            util = jnp.sqrt(parts / m) if sqrt_u else parts
+            explored = (aux.get("explored",
+                                jnp.zeros((n_seeds,), bool))
+                        if isinstance(aux, dict)
+                        else jnp.zeros((n_seeds,), bool))
+            return (new_pstate, new_edge), (assign, util, parts, explored)
+
+        (pstate, edge), (sel, util, parts, explored) = jax.lax.scan(
+            step, (policy_state, edge_params), rounds)
+        # batched eval: global model per seed = mean over its M edge models
+        global_params = jax.tree.map(lambda a: jnp.mean(a, axis=1), edge)
+        logits = jax.vmap(lambda p: logits_fn(p, test_x))(global_params)
+        acc = jax.vmap(accuracy, in_axes=(0, None))(logits, test_y)
+        loss = jax.vmap(softmax_xent, in_axes=(0, None))(logits, test_y)
+        # scan stacks per-round outputs on the leading axis: (T, S, ...)
+        return BlockOut(
+            policy_state=pstate, edge_params=edge,
+            selections=jnp.swapaxes(sel, 0, 1),
+            utilities=jnp.swapaxes(util, 0, 1),
+            participants=jnp.swapaxes(parts, 0, 1),
+            explored=jnp.swapaxes(explored, 0, 1),
+            accuracy=acc, loss=loss)
+
+    return jax.jit(block, donate_argnums=(4, 5))

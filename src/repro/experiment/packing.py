@@ -1,0 +1,70 @@
+"""Traced assignment packing: the device-side twin of
+``BatchedRoundEngine._pack``.
+
+The host engine packs each round's policy assignment into fixed-capacity
+``(M, S)`` slot arrays with a Python loop — impossible once the policy
+step moves *inside* the compiled training scan, where the assignment is a
+traced array. This module does the same packing as pure jnp:
+
+  * ``slot_capacity`` pins a static per-ES slot count from the budget
+    feasibility bound ``floor(B / min cost)`` (any solver output respects
+    it, so no traced assignment can overflow);
+  * ``pack_assignment`` scatters a traced ``(N,)`` assignment into
+    ``(M, S)`` ``client_idx``/``valid``/``arrived``/``tau`` arrays with
+    the exact slot ordering of the host ``_pack`` loop (ascending client
+    index per ES), so device batch-sampling keys — which depend on the
+    slot position — match the host-loop backend draw for draw.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.policies.solvers import feasible_cohort_bound
+
+
+def slot_capacity(budget: float, costs, num_clients: int) -> int:
+    """Static slot count for a whole experiment batch: the budget bound
+    evaluated at the smallest realized cost. ``costs`` is any array of
+    realized per-client costs (e.g. the stacked ``(S, T, N)`` batch)."""
+    min_cost = float(np.min(np.asarray(costs)))
+    return feasible_cohort_bound(budget, min_cost, num_clients)
+
+
+def pack_assignment(assign: jax.Array, outcomes: jax.Array,
+                    latency: jax.Array, num_es: int, slots: int
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Pack one round's traced assignment into (M, S) slot arrays.
+
+    assign: (N,) int, -1 = unselected; outcomes/latency: (N, M).
+    Returns (client_idx int32, valid f32, arrived f32, tau f32), each
+    (M, S): client c assigned to ES j lands in slot ``rank of c among
+    clients assigned to j`` — identical to the host ``_pack``'s ascending
+    ``np.nonzero`` order. Anything unselected (or beyond capacity, which
+    a feasible assignment can't produce — see ``slot_capacity``) is
+    scattered into a scratch row/column that is sliced away.
+    """
+    n = assign.shape[0]
+    assign = assign.astype(jnp.int32)
+    onehot = assign[:, None] == jnp.arange(num_es, dtype=jnp.int32)[None, :]
+    rank = jnp.cumsum(onehot, axis=0) - 1                   # (N, M)
+    ii = jnp.arange(n)
+    j = jnp.clip(assign, 0, num_es - 1)
+    slot = rank[ii, j]
+    ok = (assign >= 0) & (slot < slots)
+    row = jnp.where(ok, j, num_es)
+    col = jnp.where(ok, slot, slots)
+
+    def scatter(fill, vals, dtype):
+        buf = jnp.full((num_es + 1, slots + 1), fill, dtype)
+        return buf.at[row, col].set(vals.astype(dtype),
+                                    mode="drop")[:num_es, :slots]
+
+    client_idx = scatter(0, ii, jnp.int32)
+    valid = scatter(0.0, jnp.ones((n,), jnp.float32), jnp.float32)
+    arrived = scatter(0.0, outcomes[ii, j], jnp.float32)
+    tau = scatter(jnp.inf, latency[ii, j], jnp.float32)
+    return client_idx, valid, arrived, tau

@@ -1,0 +1,260 @@
+"""``run_experiment_sweep``: whole multi-seed HFL experiments, one
+compiled dispatch per eval interval.
+
+Host stages (once per sweep): realize env observables per seed
+(``env.rollout``), stack them into an (S, T, ...) ``Round`` batch, stack
+per-seed model/policy initial states. Device stages (the entire rest of
+the experiment): ``repro.experiment.fused.fused_block``.
+
+Policies that are not jax-capable (CUCB, LinUCB, phased COCS) fall back
+to a sequential per-seed loop over the same realized rounds, built on the
+host-loop batched backend — same packing semantics, same metrics, so a
+sweep can mix device and host policies in one result.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.utility import _policy_kwargs, realized_utility
+from repro.data.federated import FederatedDataset
+from repro.envs.base import HFLEnv
+from repro.experiment.fused import fused_block
+from repro.experiment.packing import slot_capacity
+from repro.fed.batched import (BatchedRoundEngine, bucketed_capacity,
+                               make_round_spec)
+from repro.fed.hfl import _eval_fn
+from repro.models.logistic import make_loss_fn, make_model
+from repro.policies.base import (FunctionalPolicy, PolicyAdapter, Round,
+                                 rounds_to_scan_axes)
+from repro.policies.engine import (run_rounds_multi_seed, stack_rounds_multi,
+                                   stack_states)
+
+
+@dataclass
+class SweepResult:
+    """Per-policy, per-seed experiment trajectories."""
+    policies: List[str]
+    seeds: List[int]
+    eval_rounds: np.ndarray                      # (E,) 1-based round ids
+    accuracy: Dict[str, np.ndarray]              # (S, E)
+    loss: Dict[str, np.ndarray]                  # (S, E)
+    utilities: Dict[str, np.ndarray]             # (S, T)
+    participants: Dict[str, np.ndarray]          # (S, T)
+    selections: Dict[str, np.ndarray]            # (S, T, N)
+    explored: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def final_accuracy(self, name: str) -> np.ndarray:
+        return self.accuracy[name][:, -1]
+
+
+def _block_bounds(horizon: int, eval_every: int) -> List[int]:
+    """Exclusive block ends: an eval after every ``eval_every`` rounds and
+    after the final round (the ``HFLSimulation.run`` cadence)."""
+    ends = [t + 1 for t in range(horizon)
+            if (t + 1) % eval_every == 0 or t == horizon - 1]
+    return ends
+
+
+def _block_slots(selections: np.ndarray, num_es: int, ends: List[int],
+                 bucket: int) -> List[int]:
+    """Exact per-block slot capacity from pre-scanned selections.
+
+    The policy step costs ~10 ms for a whole sweep on the bandit engine,
+    so running it once *ahead* of the fused blocks buys the same
+    per-block exact capacity the host-loop engine gets from seeing the
+    assignments — without loosening the static-shape guarantee: the fused
+    block re-runs the identical pure policy from the identical state, so
+    its (traced) assignments are the ones measured here and can never
+    overflow. Capacity is shared across seeds (max) and rounded up to
+    ``bucket`` to bound the number of compiled variants.
+    """
+    s, t_len, n = selections.shape
+    peaks = np.zeros(t_len, np.int64)
+    for si in range(s):
+        for t in range(t_len):
+            a = selections[si, t]
+            sel = a[a >= 0]
+            if sel.size:
+                peaks[t] = max(peaks[t],
+                               int(np.bincount(sel, minlength=num_es).max()))
+    out, lo = [], 0
+    for hi in ends:
+        peak = max(1, int(peaks[lo:hi].max()))
+        out.append(bucketed_capacity(peak, bucket, n))
+        lo = hi
+    return out
+
+
+def run_experiment_sweep(policies: Union[Sequence[str],
+                                         Dict[str, FunctionalPolicy]],
+                         env: HFLEnv, seeds: Sequence[int], horizon: int, *,
+                         model_kind: str = "logreg", batch_size: int = 32,
+                         batches_per_epoch: int = 2, eval_every: int = 5,
+                         data: Optional[FederatedDataset] = None,
+                         use_kernel: Optional[bool] = None,
+                         tile: Optional[int] = None,
+                         slots_per_es: Optional[int] = None) -> SweepResult:
+    """Run every policy for every seed over ``horizon`` training rounds.
+
+    ``policies`` is either a dict name -> ``FunctionalPolicy`` or a list
+    of registry names (constructed with the env config's COCS knobs, as
+    ``HFLSimulation`` does). Each seed gets its own realized environment
+    (``env.rollout(seed)``), model init (``PRNGKey(seed)``), sampler
+    stream and policy state — matching a ``HFLSimulation(seed=s)`` run
+    with the same shared ``data`` — and jax-capable policies execute all
+    seeds in one fused device program per eval interval.
+    """
+    cfg = env.cfg
+    seeds = [int(s) for s in seeds]
+    if not isinstance(policies, dict):
+        from repro import policies as _registry
+        spec = _registry.PolicySpec.from_experiment(cfg, horizon)
+        policies = {name: _registry.make(name, spec,
+                                         **_policy_kwargs(cfg, name.lower()))
+                    for name in policies}
+
+    # -- host-side data preparation (the only non-compiled stage) ----------
+    rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
+    batch_st = stack_rounds_multi(rounds_per_seed)          # (S, T, ...)
+    scan_rounds = rounds_to_scan_axes(batch_st)             # (T, S, ...)
+    kind = "mnist" if model_kind == "logreg" else "cifar"
+    data = data or FederatedDataset.synthetic(cfg.num_clients, kind=kind,
+                                              seed=0)
+    stacked = data.stacked()
+    sizes = np.asarray(stacked.sizes)
+    batch = int(min(batch_size, sizes.min()))
+    steps = cfg.local_epochs * batches_per_epoch
+    loss_fn = make_loss_fn(model_kind)
+
+    # per-seed model init, stacked to (S, M, ...) edge params
+    inits, logits_fn = [], None
+    for s in seeds:
+        params, logits_fn = make_model(
+            model_kind, jax.random.PRNGKey(s),
+            input_shape=data.test_x.shape[1:])
+        inits.append(jax.tree.map(
+            lambda p: jnp.broadcast_to(
+                p[None], (cfg.num_edge_servers,) + p.shape), params))
+    edge0 = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+    param_count = sum(int(p.size) for p in
+                     jax.tree.leaves(inits[0])) // cfg.num_edge_servers
+    spec = make_round_spec(cfg, steps=steps, batch_size=batch_size,
+                           use_kernel=use_kernel, tile=tile,
+                           param_count=param_count)
+    base_keys = jnp.stack([jax.random.PRNGKey(s + 11) for s in seeds])
+    test_x = jnp.asarray(data.test_x)
+    test_y = jnp.asarray(data.test_y)
+    ends = _block_bounds(horizon, eval_every)
+    scan_rounds = jax.device_put(scan_rounds)   # slice per block on device
+
+    result = SweepResult(policies=list(policies), seeds=seeds,
+                         eval_rounds=np.asarray(ends), accuracy={}, loss={},
+                         utilities={}, participants={}, selections={},
+                         explored={})
+    for name, pol in policies.items():
+        if pol.jax_capable:
+            if slots_per_es is not None:
+                slots_blocks = [int(slots_per_es)] * len(ends)
+            else:
+                # bandit pre-scan (~ms): exact per-block slot capacity,
+                # falling back to the budget bound if the pre-scan fails
+                # (surfaced — padding then costs perf, never correctness)
+                try:
+                    pre = run_rounds_multi_seed(pol, batch_st, seeds)
+                    slots_blocks = _block_slots(
+                        pre["selections"], cfg.num_edge_servers, ends,
+                        spec.slot_bucket)
+                except Exception as e:  # noqa: BLE001 — degrade, don't die
+                    warnings.warn(
+                        f"bandit pre-scan failed for {name} "
+                        f"({type(e).__name__}: {e}); using the budget "
+                        "slot bound instead of exact per-block capacity",
+                        stacklevel=2)
+                    # the policy's own budget (it may override the env's):
+                    # the bound must cover whatever its solver can pack
+                    slots_blocks = [slot_capacity(
+                        pol.spec.budget, batch_st.costs,
+                        cfg.num_clients)] * len(ends)
+            out = _run_fused(pol, spec, slots_blocks, batch, loss_fn,
+                             logits_fn, stacked, base_keys, edge0,
+                             scan_rounds, test_x, test_y, seeds, ends)
+        else:
+            out = _run_host(pol, spec, loss_fn, logits_fn, data, edge0,
+                            rounds_per_seed, test_x, test_y, seeds, ends,
+                            slots_per_es)
+        (result.accuracy[name], result.loss[name], result.utilities[name],
+         result.participants[name], result.selections[name],
+         result.explored[name]) = out
+    return result
+
+
+def _run_fused(pol, spec, slots_blocks, batch, loss_fn, logits_fn, stacked,
+               base_keys, edge0, scan_rounds, test_x, test_y, seeds, ends):
+    """All seeds at once: one fused dispatch per eval interval. Blocks are
+    dispatched back-to-back with device outputs kept in flight; the host
+    only materializes after the last block is enqueued."""
+    pstate = stack_states(pol, seeds)
+    edge = jax.tree.map(jnp.copy, edge0)      # edge0 is reused per policy
+    outs = []
+    lo = 0
+    for hi, slots in zip(ends, slots_blocks):
+        fn = fused_block(pol, spec, slots, batch, loss_fn, logits_fn)
+        blk = Round(*(getattr(scan_rounds, f)[lo:hi]
+                      for f in Round._fields))
+        out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
+                 pstate, edge, blk, test_x, test_y)
+        pstate, edge = out.policy_state, out.edge_params
+        outs.append(out)
+        lo = hi
+    return (np.stack([np.asarray(o.accuracy) for o in outs], axis=1),
+            np.stack([np.asarray(o.loss) for o in outs], axis=1),
+            np.concatenate([np.asarray(o.utilities) for o in outs], axis=1),
+            np.concatenate([np.asarray(o.participants) for o in outs],
+                           axis=1),
+            np.concatenate([np.asarray(o.selections) for o in outs], axis=1),
+            np.concatenate([np.asarray(o.explored) for o in outs], axis=1))
+
+
+def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
+              test_x, test_y, seeds, ends, slots):
+    """Sequential fallback for host policies: per-seed adapter loop over
+    the same realized rounds, training through the host-loop batched
+    engine (per-block exact capacity unless ``slots`` pins one)."""
+    eval_fn = _eval_fn(logits_fn)
+    horizon = len(rounds_per_seed[0])
+    n = rounds_per_seed[0][0].contexts.shape[0]
+    accs = np.zeros((len(seeds), len(ends)))
+    losses = np.zeros((len(seeds), len(ends)))
+    utils = np.zeros((len(seeds), horizon))
+    parts = np.zeros((len(seeds), horizon))
+    sels = np.zeros((len(seeds), horizon, n), np.int64)
+    expl = np.zeros((len(seeds), horizon), bool)
+    for si, s in enumerate(seeds):
+        adapter = PolicyAdapter(pol, seed=s)
+        engine = BatchedRoundEngine(spec, loss_fn, data, s,
+                                    slots_per_es=slots)
+        edge = jax.tree.map(lambda a: jnp.copy(a[si]), edge0)
+        lo = 0
+        for ei, hi in enumerate(ends):
+            ts = list(range(lo, hi))
+            rds = rounds_per_seed[si][lo:hi]
+            assigns = []
+            for t, rd in zip(ts, rds):
+                assigns.append(adapter.step(rd))
+                expl[si, t] = adapter.last_explored
+            edge, p = engine.run_block(edge, assigns, rds, ts)
+            for k, t in enumerate(ts):
+                sels[si, t] = assigns[k]
+                utils[si, t] = realized_utility(
+                    assigns[k], rds[k], pol.spec.sqrt_utility)
+            parts[si, lo:hi] = np.asarray(p)
+            acc, loss = eval_fn(edge, test_x, test_y)
+            accs[si, ei], losses[si, ei] = float(acc), float(loss)
+            lo = hi
+    return accs, losses, utils, parts, sels, expl

@@ -31,9 +31,13 @@ Stage map to the paper (arXiv:2112.00925, Section III):
      global mean (``broadcast_global``), applied under a traced
      ``jnp.where`` so sync rounds live inside the scanned block.
 
-Client selection stays on the host (the bandit policy is inherently
-sequential in ``t``), so the batched backend makes *bitwise identical*
-policy decisions to the legacy loop; only the training math is batched.
+In this backend client selection runs on the host between blocks, so the
+batched backend makes *bitwise identical* policy decisions to the legacy
+loop while only the training math is batched. The fully device-resident
+path — policy select/update fused *inside* the scanned block and whole
+runs vmapped over seeds — lives in ``repro.experiment``, which reuses
+this module's sampling (``device_batch_indices``) and per-slot training
+(``slot_train``) bodies so the two backends cannot drift.
 
 Samplers: ``"device"`` (default) folds the round index into a base PRNG
 key, so sampling is reproducible and independent of block boundaries;
@@ -57,7 +61,8 @@ from repro.core.network import RoundData
 from repro.data.federated import FederatedDataset, StackedClients
 from repro.fed.client import local_sgd, local_sgd_multi
 from repro.fed.edge import broadcast_global, effective_mask_multi
-from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
+from repro.kernels.masked_aggregate.ops import (best_tile,
+                                                masked_aggregate_stacked)
 
 
 def resolve_kernel_mode(use_kernel: Optional[bool]) -> Tuple[bool, bool]:
@@ -89,6 +94,71 @@ class BatchedRoundSpec:
     seq_slots: bool = False  # lax.map over slots instead of vmap (big models)
 
 
+def bucketed_capacity(peak: int, bucket: int, num_clients: int) -> int:
+    """Slot capacity for an observed peak cohort: rounded up to ``bucket``
+    (bounding compiled shape variants), clamped to the client count. One
+    definition shared by the host-loop engine and the fused experiment
+    engine so their slot layouts — and the sampling keys derived from
+    them — can never diverge."""
+    b = max(bucket, 1)
+    return int(min(-(-max(peak, 1) // b) * b, num_clients))
+
+
+def device_batch_indices(base_key: jax.Array, t: jax.Array,
+                         client_idx: jax.Array, stacked_sizes: jax.Array,
+                         steps: int, batch: int) -> jax.Array:
+    """On-device minibatch indices for every (ES, slot) of one round.
+
+    Per-(round, ES, slot) keys: draws depend only on the slot's position
+    in the assignment, never on the padded capacity or block boundaries,
+    so results are stable across ``eval_every``, ``run()``/``round()``
+    call patterns — and across the host-loop and fused experiment
+    backends, which both route through this function.
+
+    client_idx: (M, S) int32; returns (M, S, steps, batch) indices, each
+    < the slot's client's true shard size (padding is never sampled).
+    """
+    m, slots = client_idx.shape
+    rkey = jax.random.fold_in(base_key, t)
+    n = stacked_sizes.shape[0]
+    uid = (jnp.arange(m)[:, None] * n
+           + jnp.arange(slots)[None, :])                # (M, S) stable ids
+    return jax.vmap(
+        lambda u, sz: jax.random.randint(
+            jax.random.fold_in(rkey, u), (steps, batch), 0, sz)
+    )(uid.reshape(-1), stacked_sizes[client_idx].reshape(-1)
+      ).reshape(m, slots, steps, batch)
+
+
+def slot_train(slot_params: Any, batches: Dict[str, jax.Array],
+               valid_flat: jax.Array, spec: BatchedRoundSpec,
+               loss_fn) -> Any:
+    """Eq. 2 local SGD for every flattened slot (leading axis = slots).
+
+    ``vmap`` via ``local_sgd_multi`` for small models; for large ones a
+    compiled ``lax.map`` with a per-slot ``lax.cond`` skip (per-slot conv
+    weights would lower to slow grouped convolutions under vmap).
+    Returns per-slot deltas with the same flattened leading axis.
+    """
+    if spec.seq_slots:
+        def one_slot(args):
+            p, b, v = args
+            return jax.lax.cond(
+                v,
+                lambda _: local_sgd(p, loss_fn, b, spec.lr,
+                                    unroll=spec.unroll),
+                lambda _: (jax.tree.map(jnp.zeros_like, p),
+                           jnp.zeros((), jnp.float32)),
+                None)
+
+        deltas, _ = jax.lax.map(one_slot,
+                                (slot_params, batches, valid_flat))
+        return deltas
+    deltas, _ = local_sgd_multi(slot_params, loss_fn, batches, spec.lr,
+                                per_client_params=True, unroll=spec.unroll)
+    return deltas
+
+
 @functools.lru_cache(maxsize=None)
 def _compiled_block(spec: BatchedRoundSpec, batch: int, host: bool, loss_fn):
     """One jitted block function per (spec, batch, sampler, loss) — shared by
@@ -106,19 +176,8 @@ def _compiled_block(spec: BatchedRoundSpec, batch: int, host: bool, loss_fn):
             if host:
                 idx = inp["batch_idx"]                      # (M, S, steps, B)
             else:
-                # per-(round, ES, slot) keys: draws depend only on the slot's
-                # position in the assignment, never on the padded capacity or
-                # block boundaries, so results are stable across eval_every
-                # and run()/round() call patterns
-                rkey = jax.random.fold_in(base_key, inp["t"])
-                n = stacked_sizes.shape[0]
-                uid = (jnp.arange(m)[:, None] * n
-                       + jnp.arange(slots)[None, :])        # (M, S) stable ids
-                idx = jax.vmap(
-                    lambda u, sz: jax.random.randint(
-                        jax.random.fold_in(rkey, u), (steps, batch), 0, sz)
-                )(uid.reshape(-1), stacked_sizes[ci].reshape(-1)
-                  ).reshape(m, slots, steps, batch)
+                idx = device_batch_indices(base_key, inp["t"], ci,
+                                           stacked_sizes, steps, batch)
             xb = stacked_x[ci[..., None, None], idx]        # (M,S,steps,B,..)
             yb = stacked_y[ci[..., None, None], idx]
             batches = {
@@ -129,29 +188,9 @@ def _compiled_block(spec: BatchedRoundSpec, batch: int, host: bool, loss_fn):
                 lambda a: jnp.broadcast_to(
                     a[:, None], (m, slots) + a.shape[1:]
                 ).reshape((m * slots,) + a.shape[1:]), edge_params)
-            if spec.seq_slots:
-                # per-slot weights make vmapped convs lower to grouped
-                # convolutions (slow on CPU); a compiled sequential map
-                # keeps the one-dispatch-per-block structure without them,
-                # and lax.cond skips padded slots at runtime
-                valid_flat = inp["valid"].reshape(m * slots) > 0
-
-                def one_slot(args):
-                    p, b, v = args
-                    return jax.lax.cond(
-                        v,
-                        lambda _: local_sgd(p, loss_fn, b, spec.lr,
-                                            unroll=spec.unroll),
-                        lambda _: (jax.tree.map(jnp.zeros_like, p),
-                                   jnp.zeros((), jnp.float32)),
-                        None)
-
-                deltas, _ = jax.lax.map(
-                    one_slot, (slot_params, batches, valid_flat))
-            else:
-                deltas, _ = local_sgd_multi(slot_params, loss_fn, batches,
-                                            spec.lr, per_client_params=True,
-                                            unroll=spec.unroll)
+            deltas = slot_train(slot_params, batches,
+                                inp["valid"].reshape(m * slots) > 0,
+                                spec, loss_fn)
             deltas = jax.tree.map(
                 lambda d: d.reshape((m, slots) + d.shape[1:]), deltas)
             w = effective_mask_multi(inp["arrived"], inp["tau"],
@@ -234,8 +273,8 @@ class BatchedRoundEngine:
         # for cheap-to-compile models (no padded-slot waste), coarse buckets
         # for expensive ones (few shape variants, each compiled once
         # process-wide through _compiled_block's jit cache)
-        b = max(self.spec.slot_bucket, 1)
-        return min(-(-max(peak, 1) // b) * b, self.num_clients)
+        return bucketed_capacity(peak, self.spec.slot_bucket,
+                                 self.num_clients)
 
     def _pack(self, assigns: Sequence[np.ndarray],
               rds: Sequence[RoundData], ts: Sequence[int],
@@ -287,22 +326,23 @@ class BatchedRoundEngine:
                   self.base_key, edge_params, inputs)
 
 
-def make_engine(exp, *, steps: int, batch_size: int,
-                loss_fn, data: FederatedDataset, seed: int,
-                sampler: str = "device", use_kernel: Optional[bool] = None,
-                slots_per_es: Optional[int] = None,
-                tile: int = 512,
-                param_count: Optional[int] = None) -> BatchedRoundEngine:
-    """Build a ``BatchedRoundEngine`` from an ``HFLExperimentConfig``.
+def make_round_spec(exp, *, steps: int, batch_size: int,
+                    use_kernel: Optional[bool] = None,
+                    tile: Optional[int] = None,
+                    param_count: Optional[int] = None) -> BatchedRoundSpec:
+    """Static round-spec shared by the host-loop and fused backends.
 
     ``param_count`` (per edge model) picks the compile-vs-runtime tradeoff:
     small models get a fully-unrolled local-SGD scan and exact slot
     capacity; large ones keep the rolled scan and bucket capacity by 8 so a
-    run compiles a single shape variant.
+    run compiles a single shape variant. ``tile=None`` defers to the
+    ``best_tile`` autotuner when the Pallas kernel is in play.
     """
     use_k, interpret = resolve_kernel_mode(use_kernel)
     small = param_count is not None and param_count < 100_000
-    spec = BatchedRoundSpec(
+    if tile is None:
+        tile = best_tile(param_count) if use_k and param_count else 512
+    return BatchedRoundSpec(
         num_edge_servers=exp.num_edge_servers,
         steps=steps, batch_size=batch_size, lr=exp.lr,
         z_min=exp.min_clients_z, t_es=exp.t_es,
@@ -310,5 +350,17 @@ def make_engine(exp, *, steps: int, batch_size: int,
         unroll=steps if small else 1,
         slot_bucket=1 if small else 8,
         seq_slots=not small)
+
+
+def make_engine(exp, *, steps: int, batch_size: int,
+                loss_fn, data: FederatedDataset, seed: int,
+                sampler: str = "device", use_kernel: Optional[bool] = None,
+                slots_per_es: Optional[int] = None,
+                tile: Optional[int] = None,
+                param_count: Optional[int] = None) -> BatchedRoundEngine:
+    """Build a ``BatchedRoundEngine`` from an ``HFLExperimentConfig``."""
+    spec = make_round_spec(exp, steps=steps, batch_size=batch_size,
+                           use_kernel=use_kernel, tile=tile,
+                           param_count=param_count)
     return BatchedRoundEngine(spec, loss_fn, data, seed, sampler=sampler,
                               slots_per_es=slots_per_es)

@@ -15,7 +15,9 @@ Two training backends share the public API (``round`` / ``run`` /
     the parity oracle for the batched path.
 
 Both backends run the selection policy on the host round-by-round, so
-policy decisions are bitwise identical across backends.
+policy decisions are bitwise identical across backends. For multi-seed
+sweeps with the policy step fused *inside* the compiled training scan
+(no host round-trips between evals), see ``repro.experiment``.
 """
 from __future__ import annotations
 
@@ -65,7 +67,8 @@ class HFLSimConfig:
     slots_per_es: Optional[int] = None   # None -> per-block capacity (exact
                                          # for small models, buckets of 8 for
                                          # large; see fed.batched.make_engine)
-    agg_tile: int = 512
+    agg_tile: Optional[int] = None       # None -> masked_aggregate best_tile
+                                         # autotune when the kernel is in play
 
 
 @dataclass

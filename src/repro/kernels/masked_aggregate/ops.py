@@ -10,11 +10,20 @@ points share one reduction implementation so the math cannot drift:
   * ``masked_aggregate_stacked``— all M edge servers at once: pytrees with
     a leading (M,) axis, deltas with (M, S) slot axes. Leaves are
     flattened and concatenated so each ES is one kernel launch over the
-    whole parameter vector.
+    whole parameter vector. Weights may also carry a leading seed axis
+    (``(B, M, S)`` with params ``(B, M, ...)`` / deltas ``(B, M, S, ...)``,
+    the fused multi-seed experiment engine's layout): seeds are folded
+    into the ES axis so the whole sweep is one batched reduction.
+
+``best_tile`` is the kernel's tile autotuner: callers that do not pin a
+tile (``repro.fed.batched.make_engine``, ``benchmarks/kernels_bench.py``)
+take its pick instead of a hardcoded 512.
 """
 from __future__ import annotations
 
-from typing import Any
+import functools
+import time
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +31,42 @@ import jax.numpy as jnp
 from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
 from repro.kernels.masked_aggregate.ref import (masked_aggregate_ref,
                                                masked_aggregate_ref_stacked)
+
+DEFAULT_TILE = 512
+
+
+@functools.lru_cache(maxsize=None)
+def best_tile(param_count: int,
+              candidates: Tuple[int, ...] = (256, 512, 1024, 2048)) -> int:
+    """Pick the kernel tile by timing candidates on the current backend.
+
+    Only meaningful where the compiled kernel actually runs (TPU): on
+    other backends the jnp oracle is the fast path and interpret-mode
+    timings say nothing about the lowered kernel, so the default tile is
+    returned without timing. Cached per parameter count, so a process
+    autotunes each model size once.
+    """
+    if jax.default_backend() != "tpu":
+        return DEFAULT_TILE
+    c = 16
+    d = max(int(param_count), max(candidates))
+    key = jax.random.PRNGKey(0)
+    param = jnp.zeros((d,), jnp.float32)
+    deltas = jax.random.normal(key, (c, d), jnp.float32)
+    w = jnp.ones((c,), jnp.float32)
+    best_us, pick = None, DEFAULT_TILE
+    for tile in candidates:
+        def call(tile=tile):
+            return masked_aggregate_kernel(param, deltas, w, tile=tile,
+                                           interpret=False)
+        call().block_until_ready()            # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            call().block_until_ready()
+        dt = (time.perf_counter() - t0) / 3
+        if best_us is None or dt < best_us:
+            best_us, pick = dt, tile
+    return pick
 
 
 def masked_aggregate_flat(param: jax.Array, deltas: jax.Array,
@@ -63,7 +108,27 @@ def masked_aggregate_stacked(edge_params: Any, deltas: Any,
     mask with denominator max(sum_s w[m, s], 1). Leaves are concatenated
     along the flattened parameter axis so the reduction is one
     (S,)x(S, D_total) contraction per ES.
+
+    With ``weights`` of rank 3 — ``(B, M, S)``, params ``(B, M, ...)``,
+    deltas ``(B, M, S, ...)`` — the leading seed/batch axis is folded
+    into the ES axis, every (seed, ES) pair aggregates under its own
+    mask, and the result keeps the ``(B, M, ...)`` layout.
     """
+    if weights.ndim == 3:
+        b, m3, s3 = weights.shape
+        leaves_p, treedef = jax.tree.flatten(edge_params)
+        leaves_d = treedef.flatten_up_to(deltas)
+        folded_p = jax.tree.unflatten(treedef, [
+            p.reshape((b * m3,) + p.shape[2:]) for p in leaves_p])
+        folded_d = jax.tree.unflatten(treedef, [
+            d.reshape((b * m3, s3) + d.shape[3:]) for d in leaves_d])
+        out = masked_aggregate_stacked(folded_p, folded_d,
+                                       weights.reshape(b * m3, s3),
+                                       use_kernel=use_kernel, tile=tile,
+                                       interpret=interpret)
+        return jax.tree.unflatten(treedef, [
+            o.reshape(p.shape)
+            for o, p in zip(treedef.flatten_up_to(out), leaves_p)])
     leaves_p, treedef = jax.tree.flatten(edge_params)
     leaves_d = treedef.flatten_up_to(deltas)
     m, s = weights.shape

@@ -16,13 +16,15 @@ from __future__ import annotations
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.policies.base import (FunctionalPolicy, PolicyAdapter, PolicySpec,
-                                 Round, round_from_data, stack_rounds)
+                                 Round, round_from_data, rounds_to_scan_axes,
+                                 stack_rounds)
 from repro.policies.baselines import CUCB, HostCOCS, LinUCB, Oracle, Random
 from repro.policies.cocs import COCS, COCSState
 from repro.policies.engine import (run_rounds, run_rounds_host,
-                                   run_rounds_multi_seed, stack_rounds_multi)
-from repro.policies.solvers import (flgreedy_assign, greedy_assign,
-                                    random_assign)
+                                   run_rounds_multi_seed, stack_rounds_multi,
+                                   stack_states, traced_utility)
+from repro.policies.solvers import (feasible_cohort_bound, flgreedy_assign,
+                                    greedy_assign, random_assign)
 
 _REGISTRY: Dict[str, Callable[..., FunctionalPolicy]] = {}
 
@@ -60,7 +62,9 @@ register("cocs-phased", lambda spec, **kw: HostCOCS(spec=spec, phased=True,
 __all__ = [
     "COCS", "COCSState", "CUCB", "FunctionalPolicy", "HostCOCS", "LinUCB",
     "Oracle", "PolicyAdapter", "PolicySpec", "Random", "Round", "available",
-    "flgreedy_assign", "greedy_assign", "make", "make_legacy", "random_assign",
-    "register", "round_from_data", "run_rounds", "run_rounds_host",
+    "feasible_cohort_bound", "flgreedy_assign", "greedy_assign", "make",
+    "make_legacy", "random_assign", "register", "round_from_data",
+    "rounds_to_scan_axes", "run_rounds", "run_rounds_host",
     "run_rounds_multi_seed", "stack_rounds", "stack_rounds_multi",
+    "stack_states", "traced_utility",
 ]

@@ -62,6 +62,14 @@ def stack_rounds(rounds) -> Round:
                    for f in Round._fields))
 
 
+def rounds_to_scan_axes(batch: Round) -> Round:
+    """(S, T, ...) multi-seed batch -> (T, S, ...) so ``lax.scan`` walks
+    rounds while the seed axis stays batched inside each step (the fused
+    experiment engine's layout)."""
+    return Round(*(np.moveaxis(np.asarray(getattr(batch, f)), 1, 0)
+                   for f in Round._fields))
+
+
 @dataclass(frozen=True)
 class PolicySpec:
     """Problem dimensions shared by every policy (the one ctor signature)."""

@@ -81,8 +81,7 @@ class COCS(FunctionalPolicy):
                                jnp.minimum(est + bonus, 1.0))
         values = jnp.where(under, optimistic, est)
         costs = jnp.asarray(rd.costs, values.dtype)
-        budgets = jnp.full(self.spec.num_edge_servers, self.spec.budget,
-                           values.dtype)
+        budgets = jnp.asarray(self.spec.budgets(), values.dtype)
         if self.spec.sqrt_utility:
             assign = flgreedy_assign(values, costs, budgets, eligible)
         else:
@@ -90,6 +89,9 @@ class COCS(FunctionalPolicy):
         return assign, {"explored": under.any()}
 
     def update(self, state: COCSState, rd, assign, aux=None) -> COCSState:
+        # cubes are derived from rd (not passed through aux) so update is
+        # correct for any (rd, assign) pairing; when select+update share a
+        # trace (fused step / scan engines) XLA CSE dedups the re-binning
         del aux
         counters, p_hat = state
         n, m = counters.shape[:2]

@@ -7,6 +7,12 @@ policy loop — select, update, utility accounting — as one compiled
 program per (policy config, horizon) pair. For jax-capable policies this
 replaces the sequential Python per-round driver; host policies fall back
 to the legacy loop via ``PolicyAdapter``.
+
+This engine covers *bandit-only* runs (no training in the loop). The
+device-resident experiment engine (``repro.experiment``) fuses the same
+select/update step into the HFL training scan; it reuses
+``stack_states`` / ``traced_utility`` below, and ``run_rounds_host``
+stays the bitwise parity oracle for both.
 """
 from __future__ import annotations
 
@@ -23,22 +29,38 @@ from repro.policies.base import (FunctionalPolicy, PolicyAdapter, Round,
                                  stack_rounds)
 
 
+def traced_utility(assign, outcomes, num_es: int, sqrt_utility: bool):
+    """Eq. 7-8 / Eq. 19 realized utility as a traced function.
+
+    Returns (utility, participants); shared by the bandit scan below and
+    the fused experiment engine so the accounting cannot drift from
+    ``repro.core.utility.realized_utility``.
+    """
+    n = assign.shape[0]
+    sel = assign >= 0
+    j = jnp.clip(assign, 0, num_es - 1)
+    arrived = jnp.where(sel, outcomes[jnp.arange(n), j], 0.0)
+    part = jnp.sum(arrived)
+    if sqrt_utility:
+        return jnp.sqrt(jnp.maximum(part, 0.0) / num_es), part
+    return part, part
+
+
+def stack_states(policy: FunctionalPolicy, seeds: Sequence[int]):
+    """Per-seed initial states stacked along a leading S axis."""
+    states = [policy.init(s) for s in seeds]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
 def _scan_fn(policy: FunctionalPolicy):
     """One compiled scan over a (T, ...) Round batch for one policy."""
 
     def step(state, rd: Round):
         assign, aux = policy.select(state, rd)
         new_state = policy.update(state, rd, assign, aux)
-        n = assign.shape[0]
-        sel = assign >= 0
-        j = jnp.clip(assign, 0, policy.spec.num_edge_servers - 1)
-        arrived = jnp.where(sel, rd.outcomes[jnp.arange(n), j], 0.0)
-        part = jnp.sum(arrived)
-        if policy.spec.sqrt_utility:
-            util = jnp.sqrt(jnp.maximum(part, 0.0)
-                            / policy.spec.num_edge_servers)
-        else:
-            util = part
+        util, part = traced_utility(assign, rd.outcomes,
+                                    policy.spec.num_edge_servers,
+                                    policy.spec.sqrt_utility)
         explored = aux.get("explored", jnp.zeros((), bool))
         return new_state, (assign, util, part, explored)
 
@@ -96,8 +118,7 @@ def run_rounds_multi_seed(policy: FunctionalPolicy,
     batch = (rounds_per_seed if isinstance(rounds_per_seed, Round)
              else stack_rounds_multi(rounds_per_seed))
     assert batch.costs.shape[0] == len(seeds)
-    states = [policy.init(s) for s in seeds]
-    state0 = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    state0 = stack_states(policy, seeds)
     out = _compiled(policy, True)(state0, batch)
     return {k: np.asarray(v) if k != "final_state" else v
             for k, v in out.items()}

@@ -19,11 +19,28 @@ feasible ESs per client in a random client order) with jax.random.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+
+def feasible_cohort_bound(budget: float, min_cost: float,
+                          num_clients: int) -> int:
+    """Largest per-ES cohort any budget-feasible assignment can produce.
+
+    Every solver here (and every legacy policy) only adds a client to an
+    ES while ``cost <= remaining budget``, so a cohort can never exceed
+    ``floor(B / min cost)``. This bound is what lets the fused experiment
+    engine pin a static slot capacity (``repro.experiment.packing``)
+    without seeing the assignments first.
+    """
+    if min_cost <= 0.0:
+        return int(num_clients)
+    return int(min(num_clients,
+                   max(1, math.floor(budget / min_cost + 1e-9))))
 
 
 @jax.jit

@@ -28,6 +28,31 @@ def test_env_step_stream_matches_rollout():
         np.testing.assert_array_equal(a.contexts, b.contexts)
 
 
+def test_rollout_multi_stacks_per_seed_rollouts():
+    from repro.policies import stack_rounds_multi
+
+    env = envs.make("paper")
+    seeds, horizon = [3, 4], 5
+    batch = env.rollout_multi(seeds, horizon)
+    assert batch.costs.shape[:2] == (len(seeds), horizon)
+    ref = stack_rounds_multi([env.rollout(s, horizon) for s in seeds])
+    np.testing.assert_array_equal(batch.outcomes, ref.outcomes)
+    np.testing.assert_array_equal(batch.latency, ref.latency)
+
+
+def test_env_step_shares_immutable_state():
+    """step() copies only what round() mutates: the heavy immutable
+    arrays (positions are rebound, prices/base profiles never touched)
+    stay shared between old and new states."""
+    env = envs.make("paper")
+    s0 = env.init(seed=1)
+    s1, _ = env.step(s0)
+    assert s1.sim is not s0.sim
+    assert s1.sim.price is s0.sim.price
+    assert s1.sim.base_bw is s0.sim.base_bw
+    assert s1.sim.rng is not s0.sim.rng
+
+
 def test_round_data_has_realized_latency():
     rd = envs.make("paper").rollout(0, 1)[0]
     assert rd.latency is not None

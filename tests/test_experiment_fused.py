@@ -1,0 +1,202 @@
+"""Fused device-resident experiment engine: traced packing parity with the
+host engine's ``_pack``, bitwise policy parity vs the sequential host
+oracle, seed-axis independence of the batched runs, and the seed-axis
+masked-aggregation path."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs, policies
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.core.network import RoundData
+from repro.data.federated import FederatedDataset
+from repro.experiment import run_experiment_sweep
+from repro.experiment.packing import pack_assignment, slot_capacity
+from repro.fed.batched import BatchedRoundEngine, make_round_spec
+from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
+from repro.models.logistic import make_loss_fn
+
+EXP = dc.replace(MNIST_CONVEX, lr=0.01)
+HORIZON = 8
+SEEDS = [0, 1]
+
+
+def _env():
+    return envs.make("paper", EXP)
+
+
+def _data():
+    return FederatedDataset.synthetic(EXP.num_clients, kind="mnist", seed=0)
+
+
+def _policy(name):
+    spec = policies.PolicySpec.from_experiment(EXP, HORIZON)
+    kw = ({"alpha": EXP.holder_alpha, "h_t": EXP.h_t}
+          if name == "cocs" else {})
+    return policies.make(name, spec, **kw)
+
+
+# -- traced packing ---------------------------------------------------------
+
+
+def _random_round(rng, n, m, t=0):
+    return RoundData(
+        t=t,
+        contexts=rng.random((n, m, 2)),
+        eligible=np.ones((n, m), bool),
+        costs=rng.uniform(0.5, 2.0, n),
+        outcomes=(rng.random((n, m)) < 0.6).astype(np.float64),
+        true_p=rng.random((n, m)),
+        compute=rng.uniform(2e6, 4e6, n),
+        bandwidth=rng.uniform(0.3e6, 1e6, n),
+        latency=rng.uniform(0.1, 5.0, (n, m)),
+    )
+
+
+def test_traced_pack_matches_host_pack():
+    """pack_assignment == BatchedRoundEngine._pack on random assignments:
+    same slot ordering, validity, arrived outcomes and latencies."""
+    rng = np.random.default_rng(7)
+    n, m = EXP.num_clients, EXP.num_edge_servers
+    data = _data()
+    spec = make_round_spec(EXP, steps=2, batch_size=8, param_count=7850)
+    engine = BatchedRoundEngine(spec, make_loss_fn("logreg"), data, seed=0)
+    for case in range(5):
+        assign = rng.integers(-1, m, n)
+        if case == 0:
+            assign[:] = -1                      # nobody selected
+        rd = _random_round(rng, n, m, t=case)
+        slots = max(1, int(np.max(np.bincount(assign[assign >= 0],
+                                              minlength=m), initial=1)))
+        host = engine._pack([assign], [rd], [case], slots)
+        ci, valid, arrived, tau = pack_assignment(
+            jnp.asarray(assign), jnp.asarray(rd.outcomes, jnp.float32),
+            jnp.asarray(rd.latency, jnp.float32), m, slots)
+        np.testing.assert_array_equal(np.asarray(ci), host["client_idx"][0])
+        np.testing.assert_array_equal(np.asarray(valid), host["valid"][0])
+        np.testing.assert_allclose(np.asarray(arrived), host["arrived"][0],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(tau), host["tau"][0],
+                                   rtol=1e-6)
+
+
+def test_slot_capacity_budget_bound():
+    costs = np.array([[0.5, 1.0, 2.0], [0.6, 0.9, 1.5]])
+    assert slot_capacity(3.5, costs, 50) == 7          # floor(3.5 / 0.5)
+    assert slot_capacity(1e9, costs, 50) == 50         # clamped to N
+    assert slot_capacity(0.1, costs, 50) == 1          # at least one slot
+
+
+# -- fused engine parity ----------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def shared_data():
+    return _data()
+
+
+@pytest.mark.parametrize("name", ["cocs", "oracle", "random"])
+def test_fused_policy_parity_bitwise(name, shared_data):
+    """Fused policy decisions match the sequential host driver bitwise for
+    every jax-capable policy, per seed, on identical realized rounds."""
+    env = _env()
+    pol = _policy(name)
+    res = run_experiment_sweep({name: pol}, env, SEEDS, HORIZON,
+                               eval_every=4, data=shared_data)
+    for i, s in enumerate(SEEDS):
+        host = policies.run_rounds_host(pol, env.rollout(s, HORIZON),
+                                        seed=s)
+        np.testing.assert_array_equal(res.selections[name][i],
+                                      host["selections"])
+        np.testing.assert_allclose(res.utilities[name][i],
+                                   host["utilities"], rtol=1e-5)
+        np.testing.assert_array_equal(res.explored[name][i],
+                                      host["explored"])
+
+
+def test_fused_seed_axis_independence(shared_data):
+    """Row i of a batched S=4 sweep == the S=1 sweep run with seed i alone:
+    no cross-seed leakage through batching, packing or sampling."""
+    env = _env()
+    pol = _policy("cocs")
+    seeds = [0, 1, 2, 3]
+    multi = run_experiment_sweep({"cocs": pol}, env, seeds, HORIZON,
+                                 eval_every=4, data=shared_data)
+    for i, s in enumerate(seeds):
+        single = run_experiment_sweep({"cocs": pol}, env, [s], HORIZON,
+                                      eval_every=4, data=shared_data)
+        np.testing.assert_array_equal(single.selections["cocs"][0],
+                                      multi.selections["cocs"][i])
+        np.testing.assert_allclose(single.accuracy["cocs"][0],
+                                   multi.accuracy["cocs"][i], atol=1e-5)
+        np.testing.assert_allclose(single.participants["cocs"][0],
+                                   multi.participants["cocs"][i])
+
+
+def test_fused_matches_hfl_simulation(shared_data):
+    """Full-loop parity: the fused sweep reproduces HFLSimulation's batched
+    backend (same env, same shared data, same eval cadence) — participants
+    identical, accuracies equal to float tolerance."""
+    from repro.core.utility import make_policies
+    from repro.fed.hfl import HFLSimConfig, HFLSimulation
+
+    env = _env()
+    pol = _policy("cocs")
+    res = run_experiment_sweep({"cocs": pol}, env, SEEDS, HORIZON,
+                               eval_every=4, data=shared_data)
+    for i, s in enumerate(SEEDS):
+        adapter = make_policies(EXP, horizon=HORIZON, seed=s,
+                                which=["COCS"])["COCS"]
+        cfg = HFLSimConfig(exp=EXP, rounds=HORIZON, eval_every=4, seed=s)
+        hist = HFLSimulation(cfg, adapter, data=shared_data,
+                             sim=env.make_sim(s)).run()
+        assert list(res.eval_rounds) == hist.rounds
+        np.testing.assert_allclose(res.accuracy["cocs"][i], hist.accuracy,
+                                   atol=1e-4)
+        eval_idx = np.asarray(res.eval_rounds) - 1
+        np.testing.assert_allclose(
+            res.participants["cocs"][i][eval_idx], hist.participants)
+
+
+def test_host_policy_fallback(shared_data):
+    """Non-jax policies run through the sequential fallback with the same
+    result schema (and still produce per-round selections)."""
+    env = _env()
+    pol = _policy("cucb")
+    res = run_experiment_sweep({"cucb": pol}, env, [0], 4, eval_every=2,
+                               data=shared_data)
+    assert res.selections["cucb"].shape == (1, 4, EXP.num_clients)
+    assert res.accuracy["cucb"].shape == (1, 2)
+    assert np.all(res.participants["cucb"] >= 0)
+
+
+# -- seed-axis masked aggregation ------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_masked_aggregate_seed_axis(use_kernel):
+    """(S, M, ...) stacked aggregation == per-seed masked_aggregate_stacked
+    on both the jnp oracle and the kernel (interpret) path."""
+    rng = np.random.default_rng(11)
+    s, m, slots = 3, 2, 4
+    params = {"w": jnp.asarray(rng.standard_normal((s, m, 300)),
+                               jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((s, m, 7)), jnp.float32)}
+    deltas = {"w": jnp.asarray(rng.standard_normal((s, m, slots, 300)),
+                               jnp.float32),
+              "b": jnp.asarray(rng.standard_normal((s, m, slots, 7)),
+                               jnp.float32)}
+    w = jnp.asarray((rng.random((s, m, slots)) < 0.6), jnp.float32)
+    out = masked_aggregate_stacked(params, deltas, w, use_kernel=use_kernel,
+                                   tile=128, interpret=True)
+    for i in range(s):
+        per_seed = masked_aggregate_stacked(
+            jax.tree.map(lambda a: a[i], params),
+            jax.tree.map(lambda a: a[i], deltas), w[i])
+        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda o: o[i], out)),
+                        jax.tree.leaves(per_seed)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
