@@ -3,13 +3,15 @@ baseline.
 
     python benchmarks/check_regression.py \
         --baseline /tmp/bench_baseline.json --current BENCH_quick.json \
-        --entry fig4_sweep_fused --relative-to fig4_sweep_seq \
+        --entry fig4_sweep_fused:fig4_sweep_seq \
+        --entry env_rollout_device:env_rollout_host \
         --max-ratio 1.5
 
-With ``--relative-to`` the guarded quantity is ``entry / reference``
+With a reference (the global ``--relative-to``, or per-entry as
+``--entry NAME:REF``) the guarded quantity is ``entry / reference``
 within each file, so a committed baseline measured on different hardware
-still guards correctly — machine speed cancels out and only the fused
-engine's *relative* cost vs the sequential loop is checked. Timing guard
+still guards correctly — machine speed cancels out and only the guarded
+row's *relative* cost vs its same-run reference is checked. Timing guard
 with generous slack: shared CI runners are noisy, so only a
 >``max_ratio`` blowup fails. Skips cleanly (exit 0) when the baseline
 file/entries are absent — a new entry has no trajectory to regress — or
@@ -53,11 +55,13 @@ def main(argv=None) -> int:
     ap.add_argument("--current", required=True,
                     help="freshly produced BENCH_*.json")
     ap.add_argument("--entry", action="append", default=None,
-                    help="entry name(s) to guard (repeatable); default "
-                         "fig4_sweep_fused")
+                    help="entry name(s) to guard (repeatable), optionally "
+                         "NAME:REFERENCE to normalize by a same-file row; "
+                         "default fig4_sweep_fused")
     ap.add_argument("--relative-to", default=None,
-                    help="normalize each entry by this row's timing in the "
-                         "same file (hardware-independent guard)")
+                    help="normalize entries (without their own :REFERENCE) "
+                         "by this row's timing in the same file "
+                         "(hardware-independent guard)")
     ap.add_argument("--max-ratio", type=float, default=1.5,
                     help="fail when current/baseline exceeds this")
     args = ap.parse_args(argv)
@@ -66,12 +70,14 @@ def main(argv=None) -> int:
     baseline = _load(args.baseline)
     current = _load(args.current)
     failures = 0
-    for name in entries:
-        base = _metric(baseline, name, args.relative_to)
+    for spec in entries:
+        name, _, ref = spec.partition(":")
+        ref = ref or args.relative_to
+        base = _metric(baseline, name, ref)
         if base is None:
             print(f"{name}: no usable baseline entry — skipping")
             continue
-        cur = _metric(current, name, args.relative_to)
+        cur = _metric(current, name, ref)
         if cur is None:
             print(f"{name}: missing/errored in current run — FAIL")
             failures += 1
@@ -88,7 +94,7 @@ def main(argv=None) -> int:
             failures += 1
             continue
         ratio = cur / base
-        unit = (f"x {args.relative_to}" if args.relative_to else "us")
+        unit = (f"x {ref}" if ref else "us")
         verdict = "OK" if ratio <= args.max_ratio else "REGRESSION"
         print(f"{name}: {base:.3g}{unit} -> {cur:.3g}{unit} "
               f"({ratio:.2f}x, limit {args.max_ratio:.2f}x) {verdict}")

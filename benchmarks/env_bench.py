@@ -1,0 +1,131 @@
+"""Environment realization: host ``rollout_multi`` vs the device-resident
+simulator (``repro.sim``) across a (clients x seeds x horizon) grid.
+
+The host path realizes Eq. 4-6 observables with float64 numpy, one seed
+and one round at a time, and writes them into a stacked (S, T, ...)
+batch; the device path compiles the same generator (shared counter-based
+draws) to one scan-over-rounds x vmap-over-seeds XLA program. Both sides
+are warmed first and timed in interleaved A/B repetitions (min per side)
+so CPU-share throttling cannot bias a row. Parity is asserted in-row:
+device outcomes must match the host oracle away from the deadline
+boundary.
+
+Fixed-name rows ``env_rollout_host`` / ``env_rollout_device`` are the CI
+guard pair (``check_regression.py --entry env_rollout_device with
+``env_rollout_host`` as its same-run normalizer, so runner speed cancels).
+``env_rollout_device_1k`` and ``env_fused_device_1k`` record the
+large-cohort presets that only exist device-side — the latter is the
+acceptance row: a 1000-client preset end-to-end through the fused
+experiment engine with env generation on device.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import FULL, Row
+from repro import envs, experiment, sim
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.data.federated import FederatedDataset
+from repro.sim import draws
+
+# (suffix, clients, edge servers, seeds, horizon); the first entry is the
+# unsuffixed guard pair at the paper scale
+GRID = [("", 50, 3, 4, 40), ("_n200", 200, 6, 2, 20)]
+if FULL:
+    GRID.append(("_n500", 500, 8, 4, 60))
+REPS = 2 if FULL else 3
+
+
+def _parity(host_batch, device_sr, deadline: float) -> None:
+    db = device_sr.round
+    lat_h = np.asarray(host_batch.latency)
+    boundary = np.abs(lat_h - deadline) < 1e-4 * deadline
+    ok = (np.asarray(host_batch.outcomes)
+          == np.asarray(db.outcomes)) | boundary
+    assert ok.all(), "device outcomes diverged from the host oracle"
+    np.testing.assert_allclose(np.asarray(host_batch.costs),
+                               np.asarray(db.costs), rtol=1e-4)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for suffix, n, m, s, t in GRID:
+        cfg = dc.replace(MNIST_CONVEX, num_clients=n, num_edge_servers=m)
+        henv = envs.make("paper", cfg)
+        denv = sim.make("paper", cfg)
+        seeds = list(range(s))
+
+        def host_run(henv=henv, seeds=seeds, t=t):
+            # measure the cold realizer: the process-wide block cache of
+            # shared draws (repro.sim.draws) would otherwise let repeat
+            # rollouts of the same seeds skip draw generation entirely,
+            # which the device side (draws inside jit) cannot do
+            draws._block_cache.clear()
+            return henv.rollout_multi(seeds, t)
+
+        def device_run(denv=denv, seeds=seeds, t=t):
+            return jax.block_until_ready(denv.rollout_device(seeds, t))
+
+        hb = host_run()                       # warm host draw jits
+        t0 = time.perf_counter()
+        db = device_run()                     # warm (compile)
+        compile_s = time.perf_counter() - t0
+        _parity(hb, db, cfg.deadline_s)
+        host_s, dev_s = [], []
+        for _ in range(REPS):                 # interleaved A/B timing
+            t0 = time.perf_counter()
+            host_run()
+            host_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            device_run()
+            dev_s.append(time.perf_counter() - t0)
+        us_h, us_d = min(host_s) * 1e6, min(dev_s) * 1e6
+        shape = f"N={n};M={m};S={s};T={t}"
+        rows.append((f"env_rollout_host{suffix}", us_h, shape))
+        rows.append((f"env_rollout_device{suffix}", us_d,
+                     f"{shape};speedup_vs_host={us_h / max(us_d, 1e-9):.2f}x;"
+                     f"compile_s={compile_s:.2f}"))
+
+    # -- large-cohort presets: device-only territory ------------------------
+    env1k = sim.make("metropolis-1k")
+    s1k, t1k = (4, 20) if FULL else (2, 8)
+    seeds1k = list(range(s1k))
+    jax.block_until_ready(env1k.rollout_device(seeds1k, t1k))   # compile
+    t0 = time.perf_counter()
+    sr = jax.block_until_ready(env1k.rollout_device(seeds1k, t1k))
+    us_1k = (time.perf_counter() - t0) * 1e6
+    n_rounds = s1k * t1k
+    rows.append((
+        "env_rollout_device_1k", us_1k,
+        f"N={env1k.spec.num_clients};M={env1k.spec.num_edge_servers};"
+        f"S={s1k};T={t1k};us_per_round={us_1k / n_rounds:.0f};"
+        f"mean_elig={float(np.asarray(sr.round.eligible).mean()):.3f}"))
+
+    # acceptance row: >=1000 clients end-to-end through the fused engine
+    # with env generation inside the compiled per-interval scan
+    horizon = 6 if FULL else 2
+    data = FederatedDataset.synthetic(env1k.cfg.num_clients, kind="mnist",
+                                      samples_per_client=40,
+                                      test_samples=500, seed=0)
+
+    def fused_1k():
+        return experiment.run_experiment_sweep(
+            ["cocs"], env1k, seeds=[0], horizon=horizon,
+            eval_every=horizon, data=data)
+
+    fused_1k()                                # warm (compile)
+    t0 = time.perf_counter()
+    res = fused_1k()
+    us_f = (time.perf_counter() - t0) * 1e6
+    parts = float(np.mean(res.participants["cocs"]))
+    rows.append((
+        "env_fused_device_1k", us_f,
+        f"N={env1k.spec.num_clients};horizon={horizon};"
+        f"mean_participants={parts:.0f};"
+        f"final_acc={float(res.final_accuracy('cocs')[0]):.3f}"))
+    return rows

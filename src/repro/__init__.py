@@ -2,3 +2,12 @@
 reproduced as a production-grade multi-pod JAX framework."""
 
 __version__ = "0.1.0"
+
+
+def __getattr__(name: str):
+    # lazy subpackage access: ``repro.envs`` / ``repro.sim`` /
+    # ``repro.policies`` / ``repro.experiment`` without eager jax imports
+    if name in ("envs", "sim", "policies", "experiment", "fed"):
+        import importlib
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

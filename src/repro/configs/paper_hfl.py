@@ -40,6 +40,25 @@ class HFLExperimentConfig:
 
 MNIST_CONVEX = HFLExperimentConfig(name="mnist-convex")
 
+# Large-cohort variants for the device-resident environment simulator
+# (``repro.sim``): client populations far beyond what the host path can
+# stack as (S, T, N, M) observable arrays. Budgets are scaled so each
+# edge server admits a realistic handful of clients per round (the slot
+# capacity the fused engine pins stays bounded).
+METROPOLIS_1K = HFLExperimentConfig(
+    name="mnist-metropolis-1k",
+    num_clients=1000,
+    num_edge_servers=12,
+    budget=12.0,
+)
+
+BURSTY_1K = HFLExperimentConfig(
+    name="mnist-bursty-1k",
+    num_clients=1024,
+    num_edge_servers=8,
+    budget=8.0,
+)
+
 CIFAR10_NONCONVEX = HFLExperimentConfig(
     name="cifar10-nonconvex",
     update_bits=18.7e6,

@@ -12,6 +12,13 @@ Models, per edge-aggregation round:
 
 Contexts exposed to policies: phi = (normalized downlink rate, normalized
 compute) in [0, 1]^2 — exactly the paper's two observable dimensions.
+
+Randomness comes from the counter-based schedule in ``repro.sim.draws``,
+addressed by ``(seed, t)`` rather than a sequential generator: the same
+float32 draws feed both this float64 numpy oracle and the float32
+device simulator (``repro.sim``), so the two realize the same rounds to
+float tolerance. ``round(t)`` is consequently pure in its randomness —
+only the mobility positions are carried state.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.paper_hfl import HFLExperimentConfig
+from repro.sim.draws import host_init_draws, host_round_draws
 
 
 @dataclass
@@ -40,6 +48,34 @@ def _dbm_to_watt(dbm: float) -> float:
     return 10 ** (dbm / 10.0) / 1000.0
 
 
+def es_positions(num_es: int) -> np.ndarray:
+    """ES positions on a circle of radius 1.5 km (float64)."""
+    ang = np.linspace(0, 2 * np.pi, num_es, endpoint=False)
+    return np.stack([1.5 * np.cos(ang), 1.5 * np.sin(ang)], -1)
+
+
+def path_loss_gain(d_km, floor_km: float = 0.01, xp=np):
+    """Linear distance-only channel gain: 128.1 + 37.6 log10(d) dB.
+
+    Backend-agnostic (``xp=numpy`` float64 on the host oracle,
+    ``xp=jax.numpy`` float32 in ``repro.sim``) so the channel constants
+    live in exactly one place."""
+    pl_db = 128.1 + 37.6 * xp.log10(xp.maximum(d_km, floor_km))
+    return 10.0 ** (-pl_db / 10.0)
+
+
+def context_rate_hi(cfg: HFLExperimentConfig) -> float:
+    """Context-normalization constant (min-max scaling, Sec. IV): the
+    Eq. 4 rate at bandwidth_high, d = 0.05 km, |h|^2 = 4 — computed in
+    float64 with the exact host formulas. The device simulator
+    (``repro.sim.spec``) reuses this so its float32 contexts normalize
+    against the identical constant."""
+    g = 4.0 * path_loss_gain(0.05)
+    snr = (_dbm_to_watt(cfg.tx_power_dbm) * g
+           / (_dbm_to_watt(cfg.noise_dbm_per_hz) * cfg.bandwidth_high))
+    return float(cfg.bandwidth_high * np.log2(1.0 + snr))
+
+
 class HFLNetworkSim:
     """Deterministic given (cfg, seed). One call to ``round(t)`` per round."""
 
@@ -47,35 +83,37 @@ class HFLNetworkSim:
                  mc_true_p: int = 128, mobility: float = 0.15,
                  jitter: float = 0.30):
         self.cfg = cfg
+        self.seed = int(seed)
         self.mobility = mobility
-        self.rng = np.random.default_rng(seed)
         self.mc_true_p = mc_true_p
         n, m = cfg.num_clients, cfg.num_edge_servers
         # ES positions on a circle; area = bounding box of coverage discs
-        ang = np.linspace(0, 2 * np.pi, m, endpoint=False)
-        self.es_pos = np.stack([1.5 * np.cos(ang), 1.5 * np.sin(ang)], -1)
+        self.es_pos = es_positions(m)
         self.area = 1.5 + cfg.cell_radius_km
-        self.client_pos = self.rng.uniform(-self.area, self.area, (n, 2))
-        self.price = self.rng.uniform(cfg.price_low, cfg.price_high, n)
+        di = host_init_draws(self.seed, n)
+        self.init_draws = di
+        self.client_pos = -self.area + di.pos_u * (2.0 * self.area)
+        self.price = cfg.price_low + di.price_u * (cfg.price_high
+                                                   - cfg.price_low)
         # persistent per-client resource profile (heterogeneous clients);
         # per-round availability jitters around it — this is what makes
         # contexts informative (Holder-smooth, recurring) rather than iid
-        self.base_bw = self.rng.uniform(cfg.bandwidth_low, cfg.bandwidth_high, n)
-        self.base_comp = self.rng.uniform(cfg.compute_low, cfg.compute_high, n)
+        self.base_bw = cfg.bandwidth_low + di.bw_u * (cfg.bandwidth_high
+                                                      - cfg.bandwidth_low)
+        self.base_comp = cfg.compute_low + di.comp_u * (cfg.compute_high
+                                                        - cfg.compute_low)
         self.jitter = jitter
         self.noise_psd_w = _dbm_to_watt(cfg.noise_dbm_per_hz)
         self.tx_w = _dbm_to_watt(cfg.tx_power_dbm)
         # context normalization ranges (min-max feature scaling, Sec. IV)
-        self._rate_hi = float(self._rate(cfg.bandwidth_high, 0.05, 4.0))
+        self._rate_hi = context_rate_hi(cfg)
         self._rate_lo = 0.0
 
     # -- channel helpers ----------------------------------------------------
 
     def _gain0(self, d_km: np.ndarray) -> np.ndarray:
         """Distance-only part of the channel gain (path loss, linear)."""
-        pl_db = 128.1 + 37.6 * np.log10(np.maximum(np.asarray(d_km, float),
-                                                   0.01))
-        return 10 ** (-pl_db / 10.0)
+        return path_loss_gain(np.asarray(d_km, float))
 
     def _gain(self, d_km, fading: np.ndarray,
               g0: Optional[np.ndarray] = None) -> np.ndarray:
@@ -105,15 +143,16 @@ class HFLNetworkSim:
 
     # -- per-round sampling ---------------------------------------------------
 
-    def _move_clients(self):
-        step = self.rng.normal(0.0, self.mobility, self.client_pos.shape)
+    def _move_clients(self, move):
+        step = self.mobility * move
         self.client_pos = np.clip(self.client_pos + step,
                                   -self.area, self.area)
 
     def round(self, t: int) -> RoundData:
         c = self.cfg
         n, m = c.num_clients, c.num_edge_servers
-        self._move_clients()
+        dr = host_round_draws(self.seed, t, n, m, self.mc_true_p)
+        self._move_clients(dr.move)
         d = np.linalg.norm(self.client_pos[:, None] - self.es_pos[None],
                            axis=-1)                           # (N, M) km
         eligible = d <= c.cell_radius_km
@@ -121,12 +160,10 @@ class HFLNetworkSim:
         stranded = ~eligible.any(axis=1)
         if stranded.any():
             eligible[stranded, np.argmin(d[stranded], axis=1)] = True
-        bandwidth = np.clip(
-            self.base_bw * (1 + self.jitter * self.rng.standard_normal(n)),
-            c.bandwidth_low, c.bandwidth_high)
-        compute = np.clip(
-            self.base_comp * (1 + self.jitter * self.rng.standard_normal(n)),
-            c.compute_low, c.compute_high)
+        bandwidth = np.clip(self.base_bw * (1 + self.jitter * dr.bw_n),
+                            c.bandwidth_low, c.bandwidth_high)
+        compute = np.clip(self.base_comp * (1 + self.jitter * dr.comp_n),
+                          c.compute_low, c.compute_high)
         # rental price per MHz of the resources the client brings this round
         # (pricing b_n(f_n) ~ U[0.5,2] per MHz, Table I). cost_scale is the
         # free unit constant, chosen so B=3.5 admits ~2-3 clients per ES —
@@ -135,10 +172,8 @@ class HFLNetworkSim:
         # realized fading for this round (shared DT/UT draw per pair);
         # the path-loss gain is distance-only, computed once per round
         g0 = self._gain0(d)
-        fad_dt = self.rng.exponential(1.0, (n, m))
-        fad_ut = self.rng.exponential(1.0, (n, m))
         tau = self._latency(bandwidth[:, None], compute[:, None], d,
-                            fad_dt, fad_ut, g0)
+                            dr.fad_dt, dr.fad_ut, g0)
         outcomes = (tau <= c.deadline_s).astype(np.float64)
         # contexts: (normalized mean downlink rate, normalized compute)
         mean_rate = self._rate(bandwidth[:, None], d, 1.0, g0)  # E[|h|^2]=1
@@ -147,11 +182,9 @@ class HFLNetworkSim:
         contexts = np.stack(
             [phi_rate, np.broadcast_to(phi_comp[:, None], (n, m))], axis=-1)
         # ground-truth participation probability via Monte Carlo over fading
-        k = self.mc_true_p
-        f1 = self.rng.exponential(1.0, (k, n, m))
-        f2 = self.rng.exponential(1.0, (k, n, m))
         tau_mc = self._latency(bandwidth[None, :, None],
-                               compute[None, :, None], d[None], f1, f2, g0)
+                               compute[None, :, None], d[None],
+                               dr.mc_dt, dr.mc_ut, g0)
         true_p = (tau_mc <= c.deadline_s).mean(axis=0)
         return RoundData(t=t, contexts=contexts, eligible=eligible,
                          costs=costs, outcomes=outcomes, true_p=true_p,

@@ -6,14 +6,18 @@
     rounds = env.rollout(seed, horizon)  # fast path, no state copies
 
 ``step`` is referentially transparent at host level: stepping the same
-state twice yields the same RoundData and old states stay replayable. It
-copies only the state ``round()`` actually advances — the RNG and the
-mobility positions — not the whole simulator (large immutable arrays such
-as client shards/prices are shared between states). ``rollout`` advances
-one simulator in place, and ``rollout_multi`` realizes a whole seed sweep
-into one stacked ``(S, T, ...)`` ``Round`` batch — the host-side data
-preparation the device-resident engines (``repro.policies.engine``,
-``repro.experiment``) consume.
+state twice yields the same RoundData and old states stay replayable.
+Randomness is counter-based (``repro.sim.draws``), addressed by
+``(seed, t)``, so the only state ``round()`` advances is the mobility
+positions — ``step`` copies those and nothing else (large immutable
+arrays such as client shards/prices are shared between states).
+``rollout`` advances one simulator in place, and ``rollout_multi``
+realizes a whole seed sweep directly into one preallocated stacked
+``(S, T, ...)`` ``Round`` batch — the host-side data preparation the
+device-resident engines (``repro.policies.engine``, ``repro.experiment``)
+consume. The fully device-resident twin of this module — the same round
+generator as jitted float32 JAX, scannable over rounds and batched over
+seeds — is ``repro.sim``; this host implementation is its parity oracle.
 
 RoundData now carries the realized per-pair latencies (Eq. 5), so
 downstream consumers (e.g. the deadline-masked edge aggregation in
@@ -25,6 +29,8 @@ from __future__ import annotations
 import copy
 from dataclasses import dataclass
 from typing import List, Optional, Sequence
+
+import numpy as np
 
 from repro.configs.paper_hfl import HFLExperimentConfig
 from repro.core.network import HFLNetworkSim, RoundData
@@ -56,12 +62,11 @@ class HFLEnv:
     def step(self, state: EnvState,
              t: Optional[int] = None) -> tuple:
         """(state, t?) -> (new_state, RoundData). Pure: copies only the
-        mutable sim state (RNG, client positions) — ``round()`` rebinds
-        rather than mutates everything else, so the heavy immutable
-        arrays are shared and stepping stays O(mutable state), not
-        O(simulator size)."""
+        mutable sim state (the client positions) — draws are counter-based
+        and ``round()`` rebinds rather than mutates everything else, so
+        the heavy immutable arrays are shared and stepping stays
+        O(mutable state), not O(simulator size)."""
         sim = copy.copy(state.sim)
-        sim.rng = copy.deepcopy(state.sim.rng)
         sim.client_pos = state.sim.client_pos.copy()
         tt = state.t if t is None else t
         rd = sim.round(tt)
@@ -74,7 +79,22 @@ class HFLEnv:
 
     def rollout_multi(self, seeds: Sequence[int], horizon: int):
         """Realize a whole seed sweep as one stacked ``(S, T, ...)``
-        ``Round`` batch (see ``repro.policies.stack_rounds_multi``)."""
-        from repro.policies.engine import stack_rounds_multi
-        return stack_rounds_multi(
-            [self.rollout(s, horizon) for s in seeds])
+        ``Round`` batch (the ``repro.policies.stack_rounds_multi``
+        layout). Each round is written straight into preallocated stacked
+        arrays — no per-round ``RoundData`` lists, no stack-afterwards
+        copy, so peak memory is one batch (plus one round) and the
+        realize loop is the only host cost."""
+        from repro.policies.base import Round, round_from_data
+        out = None
+        for si, s in enumerate(seeds):
+            sim = self.make_sim(s)
+            for t in range(horizon):
+                view = round_from_data(sim.round(t))
+                if out is None:
+                    out = Round(*(np.empty((len(seeds), horizon)
+                                           + np.shape(leaf),
+                                           np.asarray(leaf).dtype)
+                                  for leaf in view))
+                for dst, leaf in zip(out, view):
+                    dst[si, t] = leaf
+        return out

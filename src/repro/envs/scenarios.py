@@ -18,6 +18,15 @@ the paper default:
   * ``flash-crowd``    — periodic flash sales: every ``surge_period``
                          rounds a surge cohort's rental cost collapses for
                          ``surge_len`` rounds (non-stationary pricing).
+  * bursty arrival     — ``arrival_period > 0`` staggers clients into
+                         periodic availability windows (duty-cycled
+                         eligibility): populations churn in waves, the
+                         regime the large-cohort device presets
+                         (``repro.sim``) stress at 1000+ clients.
+
+All scenario randomness (tier membership, surge cohort, arrival phases)
+comes from the shared counter-based draw schedule (``repro.sim.draws``),
+so the device simulator realizes identical scenarios.
 """
 from __future__ import annotations
 
@@ -42,6 +51,11 @@ class ScenarioSpec:
     surge_len: int = 10
     surge_frac: float = 0.3
     surge_discount: float = 0.3
+    # bursty arrival: clients are only available during a periodic window
+    # of ``arrival_duty * arrival_period`` rounds at a per-client phase
+    # (arrival_period == 0 disables)
+    arrival_period: int = 0
+    arrival_duty: float = 0.5
 
 
 SCENARIOS: Dict[str, ScenarioSpec] = {
@@ -57,6 +71,32 @@ SCENARIOS: Dict[str, ScenarioSpec] = {
 }
 
 
+def tier_edges(price_tiers) -> np.ndarray:
+    """Cumulative tier probabilities as float32 (the exact comparison
+    values the device sim uses, so tier membership matches bitwise)."""
+    w = np.array([w for _, w in price_tiers], np.float64)
+    return (np.cumsum(w) / w.sum()).astype(np.float32)
+
+
+def tiered_prices(price_tiers, price_u: np.ndarray) -> np.ndarray:
+    """Map the shared U[0,1) price draw onto discrete tier prices."""
+    values = np.array([p for p, _ in price_tiers], np.float64)
+    idx = np.searchsorted(tier_edges(price_tiers),
+                          np.asarray(price_u, np.float32), side="right")
+    return values[np.minimum(idx, len(values) - 1)]
+
+
+def arrival_phases(phase_u: np.ndarray, period: int) -> np.ndarray:
+    """Per-client integer arrival phase in [0, period).
+
+    The product floors in float32 — the exact arithmetic the device sim
+    performs — because a float64 product can land just below an integer
+    the float32 one rounds up to, shifting a client's duty window by one
+    round and breaking bitwise eligibility parity."""
+    prod = np.asarray(phase_u, np.float32) * np.float32(period)
+    return np.minimum(prod.astype(np.int64), period - 1)
+
+
 class ScenarioSim(HFLNetworkSim):
     """HFLNetworkSim with scenario knobs applied."""
 
@@ -66,14 +106,17 @@ class ScenarioSim(HFLNetworkSim):
                          jitter=spec.jitter, **kw)
         self.spec = spec
         n = cfg.num_clients
+        di = self.init_draws
         if spec.price_tiers is not None:
-            prices = np.array([p for p, _ in spec.price_tiers])
-            weights = np.array([w for _, w in spec.price_tiers], float)
-            self.price = self.rng.choice(prices, size=n,
-                                         p=weights / weights.sum())
+            self.price = tiered_prices(spec.price_tiers, di.price_u)
         if spec.surge_period > 0:
             k = max(1, int(round(spec.surge_frac * n)))
-            self.surge_cohort = self.rng.choice(n, size=k, replace=False)
+            self.surge_cohort = np.asarray(di.perm[:k])
+        if spec.arrival_period > 0:
+            self.arrival_phase = arrival_phases(di.phase_u,
+                                                spec.arrival_period)
+            self.arrival_len = max(1, int(round(spec.arrival_duty
+                                                * spec.arrival_period)))
 
     def round(self, t: int) -> RoundData:
         rd = super().round(t)
@@ -81,4 +124,8 @@ class ScenarioSim(HFLNetworkSim):
         if s.surge_period > 0 and (t % s.surge_period) < s.surge_len:
             rd.costs = rd.costs.copy()
             rd.costs[self.surge_cohort] *= s.surge_discount
+        if s.arrival_period > 0:
+            active = ((t - self.arrival_phase) % s.arrival_period
+                      < self.arrival_len)
+            rd.eligible = rd.eligible & active[:, None]
         return rd

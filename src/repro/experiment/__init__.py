@@ -8,16 +8,25 @@ as one compiled ``lax.scan`` block per eval interval, batched over seeds.
                                           seeds=range(8), horizon=150)
     res.final_accuracy("cocs")          # (S,)
 
+    # env="device": Eq. 4-6 context generation inside the compiled scan
+    res = experiment.run_experiment_sweep(
+        ["cocs"], "device:metropolis-1k", seeds=range(8), horizon=150)
+
 Policy decisions match the sequential host oracle
 (``repro.policies.run_rounds_host``) bitwise; training math matches the
 host-loop batched backend (``repro.fed.batched``), whose sampling and
-per-slot training bodies it shares.
+per-slot training bodies it shares. Under a device env
+(``repro.sim.DeviceEnv`` or a ``"device[:preset]"`` string) the round
+observables are generated *inside* the per-interval block
+(``fused_block_device``) — no host pre-realization — and reproduce the
+host-env policy decisions bitwise (shared counter-based draws).
 """
 from __future__ import annotations
 
-from repro.experiment.fused import BlockOut, fused_block
+from repro.experiment.fused import (BlockOut, fused_block,
+                                    fused_block_device)
 from repro.experiment.packing import pack_assignment, slot_capacity
 from repro.experiment.sweep import SweepResult, run_experiment_sweep
 
-__all__ = ["BlockOut", "SweepResult", "fused_block", "pack_assignment",
-           "run_experiment_sweep", "slot_capacity"]
+__all__ = ["BlockOut", "SweepResult", "fused_block", "fused_block_device",
+           "pack_assignment", "run_experiment_sweep", "slot_capacity"]

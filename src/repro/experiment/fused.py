@@ -3,6 +3,7 @@
 One jitted call covers an entire eval interval for *all seeds at once*:
 
     lax.scan over rounds of
+        [env="device"] Eq. 4-6 context generation (repro.sim)     [env]
         select (P2/P3 solver)  ->  update (CC-MAB estimators)   [policy]
         traced packing         ->  on-device batch sampling
         Eq. 2 local SGD        ->  Eq. 6 deadline masks
@@ -16,14 +17,24 @@ flatten into one ``local_sgd_multi`` call and the aggregation routes
 through ``masked_aggregate_stacked``'s (S, M, ...) path, so the Pallas
 kernel sees ordinary stacked shapes instead of relying on batching rules.
 
-Carries (policy state, edge params) are donated, so a run's device
-residency is: one dispatch per eval interval, zero host round-trips
-inside it.
+Two block variants share one round body (``_train_round_step``):
+
+* ``fused_block`` scans a host-realized ``Round`` batch with (T, S, ...)
+  leaves — the env observables were stacked on host;
+* ``fused_block_device`` scans a (T,) array of round indices and
+  generates each round's observables *inside* the scan with
+  ``repro.sim.core.round_batch`` — no pre-realization, no (S, T, ...)
+  host arrays; the env's only carried state (mobility positions) rides
+  in the block carry and flows between blocks via ``BlockOut.env_pos``.
+
+Carries (policy state, edge params, env positions) are donated, so a
+run's device residency is: one dispatch per eval interval, zero host
+round-trips inside it.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +58,79 @@ class BlockOut(NamedTuple):
     explored: jax.Array      # (S, T) bool
     accuracy: jax.Array      # (S,) test accuracy at block end
     loss: jax.Array          # (S,) test loss at block end
+    env_pos: Optional[jax.Array] = None  # (S, N, 2) device-env carry
+
+
+def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
+                      slots: int, batch: int, loss_fn):
+    """One training round for all seeds: ``(pstate, edge, rd, data...) ->
+    (pstate', edge', outs)``. Shared by the host-rounds and device-env
+    block variants so the two paths cannot drift."""
+    m, steps = spec.num_edge_servers, spec.steps
+    sqrt_u = policy.spec.sqrt_utility
+
+    def step(pstate, edge, rd, stacked_x, stacked_y, stacked_sizes,
+             base_keys):
+        n_seeds = base_keys.shape[0]
+        assign, aux = jax.vmap(policy.select)(pstate, rd)
+        new_pstate = jax.vmap(policy.update)(pstate, rd, assign, aux)
+        ci, valid, arrived, tau = jax.vmap(
+            pack_assignment, in_axes=(0, 0, 0, None, None))(
+                assign, rd.outcomes, rd.latency, m, slots)
+        idx = jax.vmap(device_batch_indices,
+                       in_axes=(0, 0, 0, None, None, None))(
+            base_keys, rd.t, ci, stacked_sizes, steps, batch)
+        xb = stacked_x[ci[..., None, None], idx]  # (S,M,slots,steps,B,..)
+        yb = stacked_y[ci[..., None, None], idx]
+        flat = n_seeds * m * slots
+        batches = {
+            "x": xb.reshape((flat, steps, batch) + xb.shape[5:]),
+            "y": yb.reshape(flat, steps, batch),
+        }
+        slot_params = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[:, :, None], (n_seeds, m, slots) + a.shape[2:]
+            ).reshape((flat,) + a.shape[2:]), edge)
+        deltas = slot_train(slot_params, batches,
+                            valid.reshape(flat) > 0, spec, loss_fn)
+        deltas = jax.tree.map(
+            lambda d: d.reshape((n_seeds, m, slots) + d.shape[1:]),
+            deltas)
+        w = effective_mask_multi(
+            arrived.reshape(n_seeds * m, slots),
+            tau.reshape(n_seeds * m, slots),
+            valid.reshape(n_seeds * m, slots),
+            spec.z_min).reshape(n_seeds, m, slots)
+        new_edge = masked_aggregate_stacked(
+            edge, deltas, w, use_kernel=spec.use_kernel,
+            tile=spec.tile, interpret=spec.interpret)
+        sync = ((rd.t[0] + 1) % spec.t_es) == 0
+        synced = jax.vmap(broadcast_global)(new_edge)
+        new_edge = jax.tree.map(
+            lambda a, c: jnp.where(sync, a, c), synced, new_edge)
+        parts = jnp.sum(arrived * valid, axis=(1, 2))     # (S,)
+        util = jnp.sqrt(parts / m) if sqrt_u else parts
+        explored = (aux.get("explored",
+                            jnp.zeros((n_seeds,), bool))
+                    if isinstance(aux, dict)
+                    else jnp.zeros((n_seeds,), bool))
+        return new_pstate, new_edge, (assign, util, parts, explored)
+
+    return step
+
+
+def _block_eval(logits_fn, edge, test_x, test_y):
+    """Batched eval: global model per seed = mean over its M edge models."""
+    global_params = jax.tree.map(lambda a: jnp.mean(a, axis=1), edge)
+    logits = jax.vmap(lambda p: logits_fn(p, test_x))(global_params)
+    acc = jax.vmap(accuracy, in_axes=(0, None))(logits, test_y)
+    loss = jax.vmap(softmax_xent, in_axes=(0, None))(logits, test_y)
+    return acc, loss
+
+
+def _swap(a):
+    # scan stacks per-round outputs on the leading axis: (T, S) -> (S, T)
+    return jnp.swapaxes(a, 0, 1)
 
 
 @functools.lru_cache(maxsize=None)
@@ -61,73 +145,66 @@ def fused_block(policy: FunctionalPolicy, spec: BatchedRoundSpec,
     a leading (S,) seed axis. Cached on value-hashable statics so every
     sweep over an equivalent configuration shares one executable.
     """
-    m, steps = spec.num_edge_servers, spec.steps
-    sqrt_u = policy.spec.sqrt_utility
+    round_step = _train_round_step(policy, spec, slots, batch, loss_fn)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
               policy_state, edge_params, rounds, test_x, test_y):
-        n_seeds = base_keys.shape[0]
 
         def step(carry, rd):
             pstate, edge = carry
-            assign, aux = jax.vmap(policy.select)(pstate, rd)
-            new_pstate = jax.vmap(policy.update)(pstate, rd, assign, aux)
-            ci, valid, arrived, tau = jax.vmap(
-                pack_assignment, in_axes=(0, 0, 0, None, None))(
-                    assign, rd.outcomes, rd.latency, m, slots)
-            idx = jax.vmap(device_batch_indices,
-                           in_axes=(0, 0, 0, None, None, None))(
-                base_keys, rd.t, ci, stacked_sizes, steps, batch)
-            xb = stacked_x[ci[..., None, None], idx]  # (S,M,slots,steps,B,..)
-            yb = stacked_y[ci[..., None, None], idx]
-            flat = n_seeds * m * slots
-            batches = {
-                "x": xb.reshape((flat, steps, batch) + xb.shape[5:]),
-                "y": yb.reshape(flat, steps, batch),
-            }
-            slot_params = jax.tree.map(
-                lambda a: jnp.broadcast_to(
-                    a[:, :, None], (n_seeds, m, slots) + a.shape[2:]
-                ).reshape((flat,) + a.shape[2:]), edge)
-            deltas = slot_train(slot_params, batches,
-                                valid.reshape(flat) > 0, spec, loss_fn)
-            deltas = jax.tree.map(
-                lambda d: d.reshape((n_seeds, m, slots) + d.shape[1:]),
-                deltas)
-            w = effective_mask_multi(
-                arrived.reshape(n_seeds * m, slots),
-                tau.reshape(n_seeds * m, slots),
-                valid.reshape(n_seeds * m, slots),
-                spec.z_min).reshape(n_seeds, m, slots)
-            new_edge = masked_aggregate_stacked(
-                edge, deltas, w, use_kernel=spec.use_kernel,
-                tile=spec.tile, interpret=spec.interpret)
-            sync = ((rd.t[0] + 1) % spec.t_es) == 0
-            synced = jax.vmap(broadcast_global)(new_edge)
-            new_edge = jax.tree.map(
-                lambda a, c: jnp.where(sync, a, c), synced, new_edge)
-            parts = jnp.sum(arrived * valid, axis=(1, 2))     # (S,)
-            util = jnp.sqrt(parts / m) if sqrt_u else parts
-            explored = (aux.get("explored",
-                                jnp.zeros((n_seeds,), bool))
-                        if isinstance(aux, dict)
-                        else jnp.zeros((n_seeds,), bool))
-            return (new_pstate, new_edge), (assign, util, parts, explored)
+            pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
+                                            stacked_y, stacked_sizes,
+                                            base_keys)
+            return (pstate, edge), outs
 
         (pstate, edge), (sel, util, parts, explored) = jax.lax.scan(
             step, (policy_state, edge_params), rounds)
-        # batched eval: global model per seed = mean over its M edge models
-        global_params = jax.tree.map(lambda a: jnp.mean(a, axis=1), edge)
-        logits = jax.vmap(lambda p: logits_fn(p, test_x))(global_params)
-        acc = jax.vmap(accuracy, in_axes=(0, None))(logits, test_y)
-        loss = jax.vmap(softmax_xent, in_axes=(0, None))(logits, test_y)
-        # scan stacks per-round outputs on the leading axis: (T, S, ...)
+        acc, loss = _block_eval(logits_fn, edge, test_x, test_y)
         return BlockOut(
             policy_state=pstate, edge_params=edge,
-            selections=jnp.swapaxes(sel, 0, 1),
-            utilities=jnp.swapaxes(util, 0, 1),
-            participants=jnp.swapaxes(parts, 0, 1),
-            explored=jnp.swapaxes(explored, 0, 1),
+            selections=_swap(sel), utilities=_swap(util),
+            participants=_swap(parts), explored=_swap(explored),
             accuracy=acc, loss=loss)
 
     return jax.jit(block, donate_argnums=(4, 5))
+
+
+@functools.lru_cache(maxsize=None)
+def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
+                       slots: int, batch: int, loss_fn, logits_fn,
+                       sim_spec):
+    """``fused_block`` with the environment *inside* the compiled region.
+
+    Returns ``block(stacked_x, stacked_y, stacked_sizes, base_keys,
+    policy_state, edge_params, env_pos, seeds, statics, ts, test_x,
+    test_y) -> BlockOut``: ``ts`` is the (T,) int32 array of round
+    indices this block covers, ``seeds``/``statics``/``env_pos`` carry
+    the per-seed env identity and mobility state (leading (S,) axis).
+    Each scan step realizes its round with ``repro.sim`` before the
+    shared policy+training body runs — no host-realized observables.
+    """
+    from repro.sim.core import round_batch
+    round_step = _train_round_step(policy, spec, slots, batch, loss_fn)
+
+    def block(stacked_x, stacked_y, stacked_sizes, base_keys,
+              policy_state, edge_params, env_pos, seeds, statics,
+              ts, test_x, test_y):
+
+        def step(carry, t):
+            pstate, edge, pos = carry
+            pos, rd = round_batch(sim_spec, seeds, statics, pos, t)
+            pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
+                                            stacked_y, stacked_sizes,
+                                            base_keys)
+            return (pstate, edge, pos), outs
+
+        (pstate, edge, pos), (sel, util, parts, explored) = jax.lax.scan(
+            step, (policy_state, edge_params, env_pos), ts)
+        acc, loss = _block_eval(logits_fn, edge, test_x, test_y)
+        return BlockOut(
+            policy_state=pstate, edge_params=edge,
+            selections=_swap(sel), utilities=_swap(util),
+            participants=_swap(parts), explored=_swap(explored),
+            accuracy=acc, loss=loss, env_pos=pos)
+
+    return jax.jit(block, donate_argnums=(4, 5, 6))

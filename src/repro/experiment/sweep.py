@@ -1,15 +1,28 @@
 """``run_experiment_sweep``: whole multi-seed HFL experiments, one
 compiled dispatch per eval interval.
 
-Host stages (once per sweep): realize env observables per seed
-(``env.rollout``), stack them into an (S, T, ...) ``Round`` batch, stack
-per-seed model/policy initial states. Device stages (the entire rest of
-the experiment): ``repro.experiment.fused.fused_block``.
+Two environment modes share the driver:
+
+* host env (``repro.envs.HFLEnv``): observables are realized per seed on
+  host (``env.rollout``), stacked into an (S, T, ...) ``Round`` batch and
+  scanned by ``fused_block``;
+* device env (``repro.sim.DeviceEnv``, or ``env="device"`` /
+  ``"device:<preset>"`` by string): context generation runs *inside* the
+  fused per-interval scan (``fused_block_device``) — no
+  ``stack_rounds_multi`` pre-realization, no (S, T, ...) host arrays —
+  which is what makes 1000-client cohorts feasible. Slot capacity comes
+  from a device-side bandit pre-scan (``repro.sim.engine``).
+
+With more than one accelerator the seed axis shards end-to-end: carries,
+per-seed env state and (host mode) the stacked rounds are placed with a
+``NamedSharding`` over a 1-D ``("seed",)`` mesh, so the jitted blocks
+partition across devices (GSPMD) with zero cross-seed communication.
 
 Policies that are not jax-capable (CUCB, LinUCB, phased COCS) fall back
-to a sequential per-seed loop over the same realized rounds, built on the
-host-loop batched backend — same packing semantics, same metrics, so a
-sweep can mix device and host policies in one result.
+to a sequential per-seed loop over the same realized rounds (device envs
+materialize them on demand), built on the host-loop batched backend —
+same packing semantics, same metrics, so a sweep can mix device and host
+policies in one result.
 """
 from __future__ import annotations
 
@@ -23,8 +36,7 @@ import numpy as np
 
 from repro.core.utility import _policy_kwargs, realized_utility
 from repro.data.federated import FederatedDataset
-from repro.envs.base import HFLEnv
-from repro.experiment.fused import fused_block
+from repro.experiment.fused import fused_block, fused_block_device
 from repro.experiment.packing import slot_capacity
 from repro.fed.batched import (BatchedRoundEngine, bucketed_capacity,
                                make_round_spec)
@@ -32,8 +44,7 @@ from repro.fed.hfl import _eval_fn
 from repro.models.logistic import make_loss_fn, make_model
 from repro.policies.base import (FunctionalPolicy, PolicyAdapter, Round,
                                  rounds_to_scan_axes)
-from repro.policies.engine import (run_rounds_multi_seed, stack_rounds_multi,
-                                   stack_states)
+from repro.policies.engine import (run_rounds_multi_seed, stack_states)
 
 
 @dataclass
@@ -91,25 +102,64 @@ def _block_slots(selections: np.ndarray, num_es: int, ends: List[int],
     return out
 
 
+def _seed_mesh(n_seeds: int, shard_seeds: Optional[bool]):
+    """A 1-D ("seed",) device mesh when sharding applies, else None."""
+    if shard_seeds is False:
+        return None
+    devices = jax.devices()
+    if len(devices) <= 1 or n_seeds % len(devices) != 0:
+        if shard_seeds:
+            warnings.warn(
+                f"seed-axis sharding requested but {n_seeds} seeds do not "
+                f"tile {len(devices)} device(s); running unsharded",
+                stacklevel=3)
+        return None
+    return jax.sharding.Mesh(np.array(devices), ("seed",))
+
+
+def _shard_seed_axis(tree, mesh, axis: int = 0):
+    """Place every leaf with its ``axis`` dimension split over the seed
+    mesh (no-op when the mesh is None)."""
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def put(a):
+        spec = [None] * jnp.ndim(a)
+        spec[axis] = "seed"
+        return jax.device_put(a, NamedSharding(mesh,
+                                               PartitionSpec(*spec)))
+    return jax.tree.map(put, tree)
+
+
 def run_experiment_sweep(policies: Union[Sequence[str],
                                          Dict[str, FunctionalPolicy]],
-                         env: HFLEnv, seeds: Sequence[int], horizon: int, *,
+                         env, seeds: Sequence[int], horizon: int, *,
                          model_kind: str = "logreg", batch_size: int = 32,
                          batches_per_epoch: int = 2, eval_every: int = 5,
                          data: Optional[FederatedDataset] = None,
                          use_kernel: Optional[bool] = None,
                          tile: Optional[int] = None,
-                         slots_per_es: Optional[int] = None) -> SweepResult:
+                         slots_per_es: Optional[int] = None,
+                         shard_seeds: Optional[bool] = None) -> SweepResult:
     """Run every policy for every seed over ``horizon`` training rounds.
 
     ``policies`` is either a dict name -> ``FunctionalPolicy`` or a list
     of registry names (constructed with the env config's COCS knobs, as
-    ``HFLSimulation`` does). Each seed gets its own realized environment
-    (``env.rollout(seed)``), model init (``PRNGKey(seed)``), sampler
-    stream and policy state — matching a ``HFLSimulation(seed=s)`` run
-    with the same shared ``data`` — and jax-capable policies execute all
-    seeds in one fused device program per eval interval.
+    ``HFLSimulation`` does). ``env`` is a host ``HFLEnv``, a device
+    ``repro.sim.DeviceEnv``, or a string selector (``"paper"``,
+    ``"device"``, ``"device:metropolis-1k"`` — see ``repro.sim.resolve``).
+    Each seed gets its own realized environment, model init
+    (``PRNGKey(seed)``), sampler stream and policy state — matching a
+    ``HFLSimulation(seed=s)`` run with the same shared ``data`` — and
+    jax-capable policies execute all seeds in one fused device program
+    per eval interval (with env generation in-scan under a device env).
     """
+    from repro import sim as simmod
+    from repro.sim.core import DeviceEnv
+
+    env = simmod.resolve(env)
+    device_env = isinstance(env, DeviceEnv)
     cfg = env.cfg
     seeds = [int(s) for s in seeds]
     if not isinstance(policies, dict):
@@ -119,10 +169,26 @@ def run_experiment_sweep(policies: Union[Sequence[str],
                                          **_policy_kwargs(cfg, name.lower()))
                     for name in policies}
 
-    # -- host-side data preparation (the only non-compiled stage) ----------
-    rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
-    batch_st = stack_rounds_multi(rounds_per_seed)          # (S, T, ...)
-    scan_rounds = rounds_to_scan_axes(batch_st)             # (T, S, ...)
+    mesh = _seed_mesh(len(seeds), shard_seeds)
+
+    # -- host-side data preparation ----------------------------------------
+    # (for a device env the observables never touch the host: only model/
+    #  policy initial states and the training data are staged here).
+    # Realize exactly once: host-fallback policies need per-round
+    # RoundData lists, fused policies the stacked batch — when both are
+    # in the sweep, stack from the lists instead of re-realizing.
+    any_host_pol = any(not p.jax_capable for p in policies.values())
+    any_jax_pol = any(p.jax_capable for p in policies.values())
+    rounds_per_seed = None          # host RoundData lists, realized lazily
+    batch_st = scan_rounds = None
+    if not device_env and any_jax_pol:
+        if any_host_pol:
+            from repro.policies.engine import stack_rounds_multi
+            rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
+            batch_st = stack_rounds_multi(rounds_per_seed)  # (S, T, ...)
+        else:
+            batch_st = env.rollout_multi(seeds, horizon)    # (S, T, ...)
+        scan_rounds = rounds_to_scan_axes(batch_st)         # (T, S, ...)
     kind = "mnist" if model_kind == "logreg" else "cifar"
     data = data or FederatedDataset.synthetic(cfg.num_clients, kind=kind,
                                               seed=0)
@@ -151,7 +217,25 @@ def run_experiment_sweep(policies: Union[Sequence[str],
     test_x = jnp.asarray(data.test_x)
     test_y = jnp.asarray(data.test_y)
     ends = _block_bounds(horizon, eval_every)
-    scan_rounds = jax.device_put(scan_rounds)   # slice per block on device
+    if device_env:
+        env_statics = simmod.init_statics_multi(env.spec, seeds)
+        env_seeds = jnp.asarray(np.asarray(seeds, np.uint32))
+        env_statics = _shard_seed_axis(env_statics, mesh)
+        env_seeds = _shard_seed_axis(env_seeds, mesh)
+    else:
+        # slice per block on device; seed axis (axis 1) sharded
+        scan_rounds = _shard_seed_axis(jax.device_put(scan_rounds), mesh,
+                                       axis=1)
+    base_keys = _shard_seed_axis(base_keys, mesh)
+    edge0 = _shard_seed_axis(edge0, mesh)
+
+    def _realized_rounds():
+        # host-policy fallback: per-round RoundData lists, realized once
+        # on demand (device envs materialize theirs from a device rollout)
+        nonlocal rounds_per_seed
+        if rounds_per_seed is None:
+            rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
+        return rounds_per_seed
 
     result = SweepResult(policies=list(policies), seeds=seeds,
                          eval_rounds=np.asarray(ends), accuracy={}, loss={},
@@ -166,7 +250,12 @@ def run_experiment_sweep(policies: Union[Sequence[str],
                 # falling back to the budget bound if the pre-scan fails
                 # (surfaced — padding then costs perf, never correctness)
                 try:
-                    pre = run_rounds_multi_seed(pol, batch_st, seeds)
+                    if device_env:
+                        from repro.sim.engine import run_bandit_device
+                        pre = run_bandit_device(pol, env.spec, seeds,
+                                                horizon)
+                    else:
+                        pre = run_rounds_multi_seed(pol, batch_st, seeds)
                     slots_blocks = _block_slots(
                         pre["selections"], cfg.num_edge_servers, ends,
                         spec.slot_bucket)
@@ -178,28 +267,62 @@ def run_experiment_sweep(policies: Union[Sequence[str],
                         stacklevel=2)
                     # the policy's own budget (it may override the env's):
                     # the bound must cover whatever its solver can pack
+                    min_cost = (env.spec.min_cost() if device_env
+                                else float(np.min(
+                                    np.asarray(batch_st.costs))))
                     slots_blocks = [slot_capacity(
-                        pol.spec.budget, batch_st.costs,
+                        pol.spec.budget, min_cost,
                         cfg.num_clients)] * len(ends)
-            out = _run_fused(pol, spec, slots_blocks, batch, loss_fn,
-                             logits_fn, stacked, base_keys, edge0,
-                             scan_rounds, test_x, test_y, seeds, ends)
+            pstate = _shard_seed_axis(stack_states(pol, seeds), mesh)
+            if device_env:
+                out = _run_fused_device(pol, spec, slots_blocks, batch,
+                                        loss_fn, logits_fn, stacked,
+                                        base_keys, pstate, edge0,
+                                        env.spec, env_seeds, env_statics,
+                                        test_x, test_y, ends)
+            else:
+                out = _run_fused(pol, spec, slots_blocks, batch, loss_fn,
+                                 logits_fn, stacked, base_keys, pstate,
+                                 edge0, scan_rounds, test_x, test_y, ends)
         else:
             out = _run_host(pol, spec, loss_fn, logits_fn, data, edge0,
-                            rounds_per_seed, test_x, test_y, seeds, ends,
-                            slots_per_es)
+                            _realized_rounds(), test_x, test_y, seeds,
+                            ends, slots_per_es)
+        if pol.jax_capable and slots_per_es is not None:
+            # a pinned capacity the solver exceeded would have silently
+            # dropped the overflow clients from training (pack_assignment
+            # scatters them into the discarded scratch slot) — fail loudly
+            # like the host-loop engine's _slots_for does
+            sels = out[4]
+            peak = max((sels == j).sum(axis=-1).max()
+                       for j in range(cfg.num_edge_servers))
+            if peak > slots_per_es:
+                raise ValueError(
+                    f"{name}: a round assigned {peak} clients to one ES "
+                    f"but slots_per_es={slots_per_es}; overflow clients "
+                    "were dropped from training — raise slots_per_es or "
+                    "leave it None for the exact pre-scan capacity")
         (result.accuracy[name], result.loss[name], result.utilities[name],
          result.participants[name], result.selections[name],
          result.explored[name]) = out
     return result
 
 
+def _collect_blocks(outs):
+    return (np.stack([np.asarray(o.accuracy) for o in outs], axis=1),
+            np.stack([np.asarray(o.loss) for o in outs], axis=1),
+            np.concatenate([np.asarray(o.utilities) for o in outs], axis=1),
+            np.concatenate([np.asarray(o.participants) for o in outs],
+                           axis=1),
+            np.concatenate([np.asarray(o.selections) for o in outs], axis=1),
+            np.concatenate([np.asarray(o.explored) for o in outs], axis=1))
+
+
 def _run_fused(pol, spec, slots_blocks, batch, loss_fn, logits_fn, stacked,
-               base_keys, edge0, scan_rounds, test_x, test_y, seeds, ends):
+               base_keys, pstate, edge0, scan_rounds, test_x, test_y, ends):
     """All seeds at once: one fused dispatch per eval interval. Blocks are
     dispatched back-to-back with device outputs kept in flight; the host
     only materializes after the last block is enqueued."""
-    pstate = stack_states(pol, seeds)
     edge = jax.tree.map(jnp.copy, edge0)      # edge0 is reused per policy
     outs = []
     lo = 0
@@ -212,13 +335,29 @@ def _run_fused(pol, spec, slots_blocks, batch, loss_fn, logits_fn, stacked,
         pstate, edge = out.policy_state, out.edge_params
         outs.append(out)
         lo = hi
-    return (np.stack([np.asarray(o.accuracy) for o in outs], axis=1),
-            np.stack([np.asarray(o.loss) for o in outs], axis=1),
-            np.concatenate([np.asarray(o.utilities) for o in outs], axis=1),
-            np.concatenate([np.asarray(o.participants) for o in outs],
-                           axis=1),
-            np.concatenate([np.asarray(o.selections) for o in outs], axis=1),
-            np.concatenate([np.asarray(o.explored) for o in outs], axis=1))
+    return _collect_blocks(outs)
+
+
+def _run_fused_device(pol, spec, slots_blocks, batch, loss_fn, logits_fn,
+                      stacked, base_keys, pstate, edge0, sim_spec,
+                      env_seeds, env_statics, test_x, test_y, ends):
+    """Device-env twin of ``_run_fused``: each block generates its own
+    rounds in-scan; the env's mobility positions thread through the
+    blocks as a donated carry (``BlockOut.env_pos``)."""
+    edge = jax.tree.map(jnp.copy, edge0)
+    pos = jnp.copy(env_statics.pos0)
+    outs = []
+    lo = 0
+    for hi, slots in zip(ends, slots_blocks):
+        fn = fused_block_device(pol, spec, slots, batch, loss_fn,
+                                logits_fn, sim_spec)
+        out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
+                 pstate, edge, pos, env_seeds, env_statics,
+                 jnp.arange(lo, hi, dtype=jnp.int32), test_x, test_y)
+        pstate, edge, pos = out.policy_state, out.edge_params, out.env_pos
+        outs.append(out)
+        lo = hi
+    return _collect_blocks(outs)
 
 
 def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,

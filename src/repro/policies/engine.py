@@ -52,8 +52,12 @@ def stack_states(policy: FunctionalPolicy, seeds: Sequence[int]):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
-def _scan_fn(policy: FunctionalPolicy):
-    """One compiled scan over a (T, ...) Round batch for one policy."""
+def policy_scan_step(policy: FunctionalPolicy):
+    """The one-round policy body shared by every scanned engine:
+    ``(state, rd) -> (state', (assign, utility, participants, explored))``.
+    Used by the bandit scan below, and by the device-env bandit engine
+    (``repro.sim.engine``) where ``rd`` is generated in-scan instead of
+    read from a stacked batch."""
 
     def step(state, rd: Round):
         assign, aux = policy.select(state, rd)
@@ -63,6 +67,13 @@ def _scan_fn(policy: FunctionalPolicy):
                                     policy.spec.sqrt_utility)
         explored = aux.get("explored", jnp.zeros((), bool))
         return new_state, (assign, util, part, explored)
+
+    return step
+
+
+def _scan_fn(policy: FunctionalPolicy):
+    """One compiled scan over a (T, ...) Round batch for one policy."""
+    step = policy_scan_step(policy)
 
     def run(state0, batch: Round):
         final, (assigns, utils, parts, explored) = jax.lax.scan(

@@ -1,0 +1,112 @@
+"""Device-resident environment simulator: scenario-preset HFL network
+environments realized on-accelerator (tier [4] of the architecture).
+
+    from repro import sim
+    env = sim.make("paper")              # device twin of envs.make("paper")
+    env = sim.make("metropolis-1k")      # 1000 clients / 12 ES — device-only
+    env = sim.make("bursty-arrival", arrival_period=20)   # knob override
+
+    state = env.init(seed)
+    state, rd = env.step(state)          # pure: the input state is unchanged
+    batch = env.rollout_device(seeds, horizon)   # (S, T, ...) on device
+
+``step`` is referentially transparent exactly like the host
+``repro.envs.base.HFLEnv`` contract: stepping the same state twice yields
+the same round and old states stay replayable — here because *all*
+randomness is counter-based (``repro.sim.draws``, addressed by
+``(seed, t)``) and the only carried state is the mobility positions.
+``rollout_device`` realizes a whole seed sweep as one compiled
+scan-over-rounds x vmap-over-seeds dispatch; ``rollout_multi`` /
+``rollout`` mirror the host environment's return types so the two are
+drop-in interchangeable, and ``host_env()`` returns the float64 numpy
+parity oracle over the same (config, scenario) — device rollouts match
+it pointwise to float32 tolerance on rates, latencies, outcomes and
+costs for every preset.
+
+Presets cover every host scenario (``paper``, ``static-clients``,
+``high-mobility``, ``tiered-pricing``, ``flash-crowd``) plus
+large-cohort, device-only settings (``metropolis-1k``,
+``bursty-arrival``) whose stacked observables do not fit the host path.
+The fused experiment engine consumes this module through
+``run_experiment_sweep(..., env=sim.make(...))`` (or ``env="device"``),
+generating contexts *inside* its compiled training blocks.
+
+Submodules are imported lazily (PEP 562): the host simulator imports
+``repro.sim.draws`` for the shared draw schedule, so this package must
+stay import-light to avoid a cycle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+_LAZY = {
+    "DeviceEnv": ("repro.sim.core", "DeviceEnv"),
+    "SimEnvState": ("repro.sim.core", "SimEnvState"),
+    "SimRound": ("repro.sim.core", "SimRound"),
+    "SimStatics": ("repro.sim.core", "SimStatics"),
+    "init_statics": ("repro.sim.core", "init_statics"),
+    "init_statics_multi": ("repro.sim.core", "init_statics_multi"),
+    "round_batch": ("repro.sim.core", "round_batch"),
+    "rollout_device": ("repro.sim.core", "rollout_device"),
+    "sim_round": ("repro.sim.core", "sim_round"),
+    "run_bandit_device": ("repro.sim.engine", "run_bandit_device"),
+    "PRESETS": ("repro.sim.spec", "PRESETS"),
+    "SimSpec": ("repro.sim.spec", "SimSpec"),
+}
+
+__all__ = ["available", "make", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    try:
+        modname, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(modname), attr)
+
+
+def available() -> Tuple[str, ...]:
+    from repro.sim.spec import PRESETS
+    return tuple(sorted(PRESETS))
+
+
+def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
+         **overrides):
+    """``repro.envs.make``-style factory for device environments.
+
+    ``name`` is a preset (see ``available()``), ``cfg`` overrides the
+    preset's experiment config, and scenario knobs can be overridden by
+    keyword (e.g. ``sim.make("paper", mobility=0.8)``).
+    """
+    from repro.sim.core import DeviceEnv
+    from repro.sim.spec import SimSpec, preset
+    use_cfg, scen = preset(name, cfg, **overrides)
+    return DeviceEnv(cfg=use_cfg, scenario=scen,
+                     spec=SimSpec.from_env(use_cfg, scen,
+                                           mc_true_p=mc_true_p))
+
+
+def resolve(env, cfg: Optional[object] = None):
+    """Resolve a string environment selector to an env object.
+
+    Strings pick environments by name: ``"device"`` / ``"device:<preset>"``
+    -> ``sim.make`` (device), ``"host:<scenario>"`` or a bare scenario
+    name -> ``repro.envs.make`` (host). Non-strings pass through, so
+    drivers can accept ``HFLEnv | DeviceEnv | str`` uniformly.
+    """
+    if not isinstance(env, str):
+        return env
+    key = env.lower()
+    if key == "device":
+        return make("paper", cfg)
+    if key.startswith("device:"):
+        return make(key.split(":", 1)[1], cfg)
+    from repro import envs
+    from repro.sim.spec import PRESETS
+    if key.startswith("host:"):
+        key = key.split(":", 1)[1]
+    if key in PRESETS and key not in envs.SCENARIOS:
+        return make(key, cfg)          # device-only presets
+    return envs.make(key, cfg)

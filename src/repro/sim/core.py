@@ -1,0 +1,284 @@
+"""Pure-JAX HFL environment generator: Eq. 4-6 context realization as
+jitted float32 functions, scannable over rounds and batched over seeds.
+
+The round generator mirrors ``repro.core.network.HFLNetworkSim.round``
+stage for stage — mobility update, client-ES association (+ stranded
+fix), Eq. 4 Shannon rates, Eq. 5 compute+transmission latencies, Eq. 6
+deadline outcomes, tiered/surge costs, context normalization, Monte-Carlo
+``true_p`` — consuming the *same* counter-based draws
+(``repro.sim.draws``), so a device rollout matches the host oracle
+pointwise to float32 tolerance rather than merely in distribution.
+
+Everything here is shape-static given a ``SimSpec``, so rollouts compile
+once per (spec, horizon) and the per-round generator can be fused into
+larger compiled regions (the experiment engine scans it inside its
+training blocks — ``repro.experiment.fused``).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_hfl import HFLExperimentConfig
+from repro.core.network import es_positions, path_loss_gain
+from repro.envs.scenarios import ScenarioSpec
+from repro.policies.base import Round
+from repro.sim import draws
+from repro.sim.spec import SimSpec
+
+
+class SimStatics(NamedTuple):
+    """Experiment-lifetime per-client arrays (float32, device-resident)."""
+    pos0: jax.Array           # (N, 2) initial positions
+    price: jax.Array          # (N,)
+    base_bw: jax.Array        # (N,)
+    base_comp: jax.Array      # (N,)
+    surge_mask: jax.Array     # (N,) bool — flash-crowd cohort
+    arrival_phase: jax.Array  # (N,) int32 — bursty-arrival phase
+
+
+class SimRound(NamedTuple):
+    """One realized round: the policy-facing ``Round`` fields plus the
+    per-client resource vectors (``RoundData``'s extra columns)."""
+    round: Round
+    compute: jax.Array        # (N,)
+    bandwidth: jax.Array      # (N,)
+
+
+def _es_pos(spec: SimSpec) -> jnp.ndarray:
+    return jnp.asarray(es_positions(spec.num_edge_servers), jnp.float32)
+
+
+def init_statics(spec: SimSpec, seed) -> SimStatics:
+    """Device twin of ``HFLNetworkSim.__init__``/``ScenarioSim.__init__``
+    (same draws, float32 math)."""
+    n = spec.num_clients
+    di = draws.init_draws(seed, n)
+    pos0 = -spec.area + di.pos_u * (2.0 * spec.area)
+    if spec.price_tier_values is not None:
+        edges = jnp.asarray(spec.price_tier_edges, jnp.float32)
+        values = jnp.asarray(spec.price_tier_values, jnp.float32)
+        idx = jnp.searchsorted(edges, di.price_u, side="right")
+        price = values[jnp.minimum(idx, len(values) - 1)]
+    else:
+        price = spec.price_low + di.price_u * (spec.price_high
+                                               - spec.price_low)
+    base_bw = spec.bandwidth_low + di.bw_u * (spec.bandwidth_high
+                                              - spec.bandwidth_low)
+    base_comp = spec.compute_low + di.comp_u * (spec.compute_high
+                                                - spec.compute_low)
+    if spec.surge_count > 0:
+        surge_mask = jnp.zeros((n,), bool).at[di.perm[:spec.surge_count]
+                                              ].set(True)
+    else:
+        surge_mask = jnp.zeros((n,), bool)
+    if spec.arrival_period > 0:
+        phase = jnp.minimum(
+            (di.phase_u * spec.arrival_period).astype(jnp.int32),
+            spec.arrival_period - 1)
+    else:
+        phase = jnp.zeros((n,), jnp.int32)
+    return SimStatics(pos0=pos0, price=price, base_bw=base_bw,
+                      base_comp=base_comp, surge_mask=surge_mask,
+                      arrival_phase=phase)
+
+
+def _shannon_rate(spec: SimSpec, bandwidth, fading, g0):
+    g = fading * g0
+    snr = spec.tx_w * g / (spec.noise_psd_w * bandwidth)
+    # log1p, not log2(1 + snr): at float32, 1 + snr rounds away up to
+    # ~eps/snr relative precision for the weak-channel tail, which the
+    # host float64 oracle would then expose as latency mismatches
+    return bandwidth * (jnp.log1p(snr) / jnp.log(2.0))
+
+
+def _latency(spec: SimSpec, bandwidth, compute, fad_dt, fad_ut, g0):
+    r_dt = _shannon_rate(spec, bandwidth, fad_dt, g0)
+    r_ut = _shannon_rate(spec, bandwidth, fad_ut, g0)
+    return (spec.update_bits / jnp.maximum(r_dt, 1e-9)
+            + spec.workload / jnp.maximum(compute, 1e-9)
+            + spec.update_bits / jnp.maximum(r_ut, 1e-9))
+
+
+def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
+              ) -> Tuple[jax.Array, SimRound]:
+    """One round of the network simulator: ``(pos, t) -> (pos', round)``.
+
+    Pure and shape-static: the only carried state is the (N, 2) mobility
+    positions; all randomness is re-derived from ``(seed, t)``.
+    """
+    n, m = spec.num_clients, spec.num_edge_servers
+    t = jnp.asarray(t, jnp.int32)
+    dr = draws.round_draws(seed, t, n, m, spec.mc_true_p)
+    pos = jnp.clip(pos + spec.mobility * dr.move, -spec.area, spec.area)
+    es = _es_pos(spec)
+    d = jnp.sqrt(jnp.sum((pos[:, None] - es[None]) ** 2, -1))   # (N, M) km
+    eligible = d <= spec.cell_radius_km
+    # stranded fix: a client covering no ES is attached to the nearest one
+    nearest = jax.nn.one_hot(jnp.argmin(d, axis=1), m, dtype=bool)
+    eligible = eligible | (~eligible.any(axis=1, keepdims=True) & nearest)
+    bandwidth = jnp.clip(statics.base_bw * (1 + spec.jitter * dr.bw_n),
+                         spec.bandwidth_low, spec.bandwidth_high)
+    compute = jnp.clip(statics.base_comp * (1 + spec.jitter * dr.comp_n),
+                       spec.compute_low, spec.compute_high)
+    costs = 2.0 * statics.price * bandwidth / 1e6
+    if spec.surge_period > 0:
+        surge_on = (t % spec.surge_period) < spec.surge_len
+        costs = jnp.where(surge_on & statics.surge_mask,
+                          costs * spec.surge_discount, costs)
+    if spec.arrival_period > 0:
+        active = ((t - statics.arrival_phase) % spec.arrival_period
+                  < spec.arrival_len)
+        eligible = eligible & active[:, None]
+    g0 = path_loss_gain(d, xp=jnp)
+    tau = _latency(spec, bandwidth[:, None], compute[:, None],
+                   dr.fad_dt, dr.fad_ut, g0)
+    outcomes = (tau <= spec.deadline_s).astype(jnp.float32)
+    mean_rate = _shannon_rate(spec, bandwidth[:, None], 1.0, g0)
+    phi_rate = jnp.clip(mean_rate / spec.rate_hi, 0.0, 1.0)
+    phi_comp = ((compute - spec.compute_low)
+                / (spec.compute_high - spec.compute_low))
+    contexts = jnp.stack(
+        [phi_rate, jnp.broadcast_to(phi_comp[:, None], (n, m))], axis=-1)
+    tau_mc = _latency(spec, bandwidth[None, :, None],
+                      compute[None, :, None], dr.mc_dt, dr.mc_ut, g0[None])
+    true_p = jnp.mean((tau_mc <= spec.deadline_s).astype(jnp.float32),
+                      axis=0)
+    rd = Round(t=t, contexts=contexts.astype(jnp.float32),
+               eligible=eligible, costs=costs.astype(jnp.float32),
+               outcomes=outcomes, true_p=true_p,
+               latency=tau.astype(jnp.float32))
+    return pos, SimRound(round=rd, compute=compute, bandwidth=bandwidth)
+
+
+def round_batch(spec: SimSpec, seeds, statics: SimStatics, pos, t
+                ) -> Tuple[jax.Array, Round]:
+    """Seed-batched round generation for fused scans: ``seeds``/``statics``
+    /``pos`` carry a leading (S,) axis, ``t`` is the shared scalar round
+    index. Returns ``(pos', Round)`` with (S, ...) leaves (``rd.t`` is
+    (S,), matching the stacked host layout)."""
+    pos, sr = jax.vmap(
+        lambda se, st, p: sim_round(spec, se, st, p, t))(seeds, statics, pos)
+    return pos, sr.round
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_rollout(spec: SimSpec, horizon: int, multi: bool):
+    def run(seed, t0):
+        statics = init_statics(spec, seed)
+
+        def step(pos, t):
+            pos, sr = sim_round(spec, seed, statics, pos, t)
+            return pos, sr
+
+        _, rounds = jax.lax.scan(step, statics.pos0,
+                                 t0 + jnp.arange(horizon, dtype=jnp.int32))
+        return rounds
+    if multi:
+        run = jax.vmap(run, in_axes=(0, None))
+    return jax.jit(run)
+
+
+def rollout_device(spec: SimSpec, seeds: Sequence[int], horizon: int,
+                   t0: int = 0) -> SimRound:
+    """Whole seed sweep on device: ``SimRound`` pytree with (S, T, ...)
+    leaves (single dispatch, one executable per (spec, horizon))."""
+    seed_arr = jnp.asarray(np.asarray(seeds, np.uint32))
+    return _compiled_rollout(spec, int(horizon), True)(
+        seed_arr, jnp.int32(t0))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_statics(spec: SimSpec, multi: bool):
+    fn = functools.partial(init_statics, spec)
+    return jax.jit(jax.vmap(fn) if multi else fn)
+
+
+def init_statics_multi(spec: SimSpec, seeds: Sequence[int]) -> SimStatics:
+    """Per-seed statics stacked on a leading (S,) axis (one dispatch)."""
+    return _compiled_statics(spec, True)(
+        jnp.asarray(np.asarray(seeds, np.uint32)))
+
+
+# -- the environment object -------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimEnvState:
+    seed: int
+    statics: SimStatics
+    pos: jax.Array
+    t: int = 0
+
+
+@dataclass(frozen=True)
+class DeviceEnv:
+    """Device-resident twin of ``repro.envs.base.HFLEnv``: same
+    (config, scenario) pairing and init/step/rollout contract, with the
+    round generator compiled to XLA instead of realized on host."""
+    cfg: HFLExperimentConfig
+    scenario: ScenarioSpec
+    spec: SimSpec
+
+    @property
+    def name(self) -> str:
+        return self.scenario.name
+
+    def host_env(self):
+        """The host parity oracle over the same (cfg, scenario)."""
+        from repro.envs.base import HFLEnv
+        return HFLEnv(cfg=self.cfg, spec=self.scenario)
+
+    def make_sim(self, seed: int = 0):
+        return self.host_env().make_sim(seed)
+
+    def init(self, seed: int = 0) -> SimEnvState:
+        statics = _compiled_statics(self.spec, False)(jnp.uint32(seed))
+        return SimEnvState(seed=int(seed), statics=statics,
+                           pos=statics.pos0, t=0)
+
+    def step(self, state: SimEnvState,
+             t: Optional[int] = None) -> Tuple[SimEnvState, Round]:
+        """Pure single-round step (eager dispatch of the jitted round)."""
+        tt = state.t if t is None else t
+        pos, sr = _jitted_round(self.spec)(
+            jnp.uint32(state.seed), state.statics, state.pos,
+            jnp.int32(tt))
+        return (SimEnvState(seed=state.seed, statics=state.statics,
+                            pos=pos, t=tt + 1), sr.round)
+
+    def rollout_device(self, seeds: Sequence[int],
+                       horizon: int) -> SimRound:
+        return rollout_device(self.spec, seeds, horizon)
+
+    def rollout_multi(self, seeds: Sequence[int], horizon: int) -> Round:
+        """Drop-in for ``HFLEnv.rollout_multi``: a stacked (S, T, ...)
+        ``Round`` batch — realized on device, leaves stay jnp arrays."""
+        return self.rollout_device(seeds, horizon).round
+
+    def rollout(self, seed: int, horizon: int) -> List:
+        """Host ``RoundData`` list (device-realized, then materialized) —
+        the interop path for host-state policies and legacy drivers."""
+        from repro.core.network import RoundData
+        sr = self.rollout_device([seed], horizon)
+        host = jax.tree.map(lambda a: np.asarray(a[0]), sr)
+        return [RoundData(t=int(host.round.t[i]),
+                          contexts=host.round.contexts[i],
+                          eligible=host.round.eligible[i],
+                          costs=host.round.costs[i],
+                          outcomes=host.round.outcomes[i],
+                          true_p=host.round.true_p[i],
+                          compute=host.compute[i],
+                          bandwidth=host.bandwidth[i],
+                          latency=host.round.latency[i])
+                for i in range(horizon)]
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_round(spec: SimSpec):
+    return jax.jit(functools.partial(sim_round, spec))

@@ -1,0 +1,157 @@
+"""Counter-based random-draw schedule shared by the host oracle and the
+device simulator.
+
+Every random quantity the HFL network simulator consumes — initial
+positions, pricing, resource profiles, per-round mobility steps, resource
+jitter, Rayleigh fading, the Monte-Carlo fading pairs behind ``true_p`` —
+is drawn here from a threefry key schedule addressed by ``(seed, t,
+tag)``. Draws are *unit-scale* (U[0,1), standard normal, Exp(1)); each
+consumer applies its own scaling in its own precision.
+
+Because the schedule is counter-based (no sequential generator state),
+the host simulator (``repro.core.network.HFLNetworkSim``, numpy float64
+math) and the device simulator (``repro.sim.core``, float32 XLA math
+inside ``jit``/``scan``/``vmap``) consume *bitwise identical* float32
+draws for the same ``(seed, t)`` — which is what makes device rollouts
+comparable to the host oracle pointwise (to float tolerance) rather than
+merely in distribution. Each draw has its own ``fold_in`` tag, so adding
+or skipping a draw never shifts any other stream.
+
+Host callers use ``host_init_draws`` / ``host_round_draws``: jitted once
+per shape, returning numpy float64 upcasts of the same float32 draws.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fold_in tags — frozen; append, never renumber
+_INIT, _ROUND = 0, 1
+_POS, _PRICE, _BW0, _COMP0, _PERM, _PHASE = 0, 1, 2, 3, 4, 5
+_MOVE, _BWJ, _COMPJ, _FDT, _FUT, _MCDT, _MCUT = 0, 1, 2, 3, 4, 5, 6
+
+
+class InitDraws(NamedTuple):
+    """Experiment-lifetime draws (all unit-scale)."""
+    pos_u: jax.Array     # (N, 2) U[0,1) — initial positions
+    price_u: jax.Array   # (N,)  U[0,1) — uniform price or tier selector
+    bw_u: jax.Array      # (N,)  U[0,1) — base bandwidth profile
+    comp_u: jax.Array    # (N,)  U[0,1) — base compute profile
+    perm: jax.Array      # (N,)  int32 permutation — surge cohort draw
+    phase_u: jax.Array   # (N,)  U[0,1) — bursty-arrival phase
+
+
+class RoundDraws(NamedTuple):
+    """Per-round draws (all unit-scale)."""
+    move: jax.Array      # (N, 2) std normal — mobility step
+    bw_n: jax.Array      # (N,)  std normal — bandwidth jitter
+    comp_n: jax.Array    # (N,)  std normal — compute jitter
+    fad_dt: jax.Array    # (N, M) Exp(1) — downlink Rayleigh |h|^2
+    fad_ut: jax.Array    # (N, M) Exp(1) — uplink Rayleigh |h|^2
+    mc_dt: jax.Array     # (K, N, M) Exp(1) — true_p Monte Carlo, downlink
+    mc_ut: jax.Array     # (K, N, M) Exp(1) — true_p Monte Carlo, uplink
+
+
+def init_key(seed) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed), _INIT)
+
+def round_key(seed, t) -> jax.Array:
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(seed), _ROUND), t)
+
+
+def init_draws(seed, n: int) -> InitDraws:
+    k = init_key(seed)
+    sub = functools.partial(jax.random.fold_in, k)
+    return InitDraws(
+        pos_u=jax.random.uniform(sub(_POS), (n, 2)),
+        price_u=jax.random.uniform(sub(_PRICE), (n,)),
+        bw_u=jax.random.uniform(sub(_BW0), (n,)),
+        comp_u=jax.random.uniform(sub(_COMP0), (n,)),
+        perm=jax.random.permutation(sub(_PERM), n).astype(jnp.int32),
+        phase_u=jax.random.uniform(sub(_PHASE), (n,)),
+    )
+
+
+def round_draws(seed, t, n: int, m: int, k_mc: int) -> RoundDraws:
+    k = round_key(seed, t)
+    sub = functools.partial(jax.random.fold_in, k)
+    return RoundDraws(
+        move=jax.random.normal(sub(_MOVE), (n, 2)),
+        bw_n=jax.random.normal(sub(_BWJ), (n,)),
+        comp_n=jax.random.normal(sub(_COMPJ), (n,)),
+        fad_dt=jax.random.exponential(sub(_FDT), (n, m)),
+        fad_ut=jax.random.exponential(sub(_FUT), (n, m)),
+        mc_dt=jax.random.exponential(sub(_MCDT), (k_mc, n, m)),
+        mc_ut=jax.random.exponential(sub(_MCUT), (k_mc, n, m)),
+    )
+
+
+# -- host access: jitted per shape, numpy float64 out -----------------------
+
+@functools.lru_cache(maxsize=32)
+def _jit_init(n: int):
+    return jax.jit(functools.partial(init_draws, n=n))
+
+
+@functools.lru_cache(maxsize=32)
+def _jit_round_block(n: int, m: int, k_mc: int, block: int):
+    """One dispatch realizing ``block`` consecutive rounds of draws
+    (leading (block,) axis) — per-round dispatch + transfer overhead is
+    what would otherwise dominate the host realizer."""
+    def fn(seed, t0):
+        ts = t0 + jnp.arange(block, dtype=jnp.int32)
+        return jax.vmap(
+            lambda t: round_draws(seed, t, n, m, k_mc))(ts)
+    return jax.jit(fn)
+
+
+def _to_host(tree):
+    return jax.tree.map(
+        lambda a: np.asarray(a, np.float64 if a.dtype == jnp.float32
+                             else a.dtype), tree)
+
+
+def host_init_draws(seed: int, n: int) -> InitDraws:
+    """Float64 numpy view of the float32 init draws for ``seed``."""
+    return _to_host(_jit_init(n)(jnp.uint32(seed)))
+
+
+# block-aligned cache of realized round draws, kept as float32 (the MC
+# fading tensors dominate; upcast happens per round on access). Bounded
+# FIFO: sequential consumers (rollouts, training loops) touch each block
+# exactly once per seed, so a handful of entries suffices.
+_BLOCK_TARGET = 2_000_000      # ~floats per cached block (f32: ~8 MB x2)
+_block_cache: "dict" = {}
+_BLOCK_CACHE_MAX = 8
+
+
+def _block_size(n: int, m: int, k_mc: int) -> int:
+    return max(1, min(32, _BLOCK_TARGET // max(1, k_mc * n * m)))
+
+
+def host_round_draws(seed: int, t: int, n: int, m: int,
+                     k_mc: int) -> RoundDraws:
+    """Float64 numpy view of the float32 round-``t`` draws for ``seed``.
+
+    Draws are realized in block-aligned batches of consecutive rounds
+    (one jitted dispatch per block, sized to ~``_BLOCK_TARGET`` floats)
+    and cached, so sequential ``round(t)`` consumers pay amortized
+    per-round cost close to the raw threefry throughput."""
+    block = _block_size(n, m, k_mc)
+    bi, off = divmod(int(t), block)
+    key = (int(seed), n, m, k_mc, bi)
+    blk = _block_cache.get(key)
+    if blk is None:
+        blk = jax.tree.map(np.asarray, _jit_round_block(n, m, k_mc, block)(
+            jnp.uint32(seed), jnp.int32(bi * block)))
+        while len(_block_cache) >= _BLOCK_CACHE_MAX:
+            _block_cache.pop(next(iter(_block_cache)))
+        _block_cache[key] = blk
+    return RoundDraws(*(np.asarray(a[off], np.float64)
+                        if a.dtype == np.float32 else a[off]
+                        for a in blk))

@@ -1,0 +1,66 @@
+"""Bandit engine over the device simulator: environment generation *and*
+policy select/update fused into one compiled scan, batched over seeds.
+
+Where ``repro.policies.engine`` scans a pre-realized (host-stacked)
+``Round`` batch, this engine realizes each round inside the scan step
+with ``repro.sim.core.sim_round`` and feeds it straight to the same
+policy body (``policy_scan_step``), so a whole multi-seed bandit sweep is
+one dispatch with zero host-realized observables — the pre-scan the
+fused experiment engine uses to size its slot capacity under
+``env="device"``, and the standalone engine for bandit-only sweeps at
+cohort sizes the host path cannot stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.policies.base import FunctionalPolicy
+from repro.policies.engine import policy_scan_step, stack_states
+from repro.sim.core import init_statics, sim_round
+from repro.sim.spec import SimSpec
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_bandit(policy: FunctionalPolicy, spec: SimSpec,
+                     horizon: int):
+    pstep = policy_scan_step(policy)
+
+    def run(seed, pstate0):
+        statics = init_statics(spec, seed)
+
+        def step(carry, t):
+            pos, pstate = carry
+            pos, sr = sim_round(spec, seed, statics, pos, t)
+            pstate, outs = pstep(pstate, sr.round)
+            return (pos, pstate), outs
+
+        (_, final), (assigns, utils, parts, explored) = jax.lax.scan(
+            step, (statics.pos0, pstate0),
+            jnp.arange(horizon, dtype=jnp.int32))
+        return {"selections": assigns, "utilities": utils,
+                "participants": parts, "explored": explored,
+                "final_state": final}
+
+    return jax.jit(jax.vmap(run, in_axes=(0, 0)))
+
+
+def run_bandit_device(policy: FunctionalPolicy, spec: SimSpec,
+                      seeds: Sequence[int],
+                      horizon: int) -> Dict[str, np.ndarray]:
+    """Multi-seed bandit sweep with on-device env generation. Matches
+    ``run_rounds_multi_seed(policy, env.rollout_multi(seeds, horizon),
+    seeds)`` up to env float32-vs-float64 realization tolerance; returns
+    host arrays with a leading S axis."""
+    if not policy.jax_capable:
+        raise ValueError(f"{policy.name} is a host policy; the device "
+                         "bandit engine requires jax-capable select/update")
+    seed_arr = jnp.asarray(np.asarray(seeds, np.uint32))
+    state0 = stack_states(policy, [int(s) for s in seeds])
+    out = _compiled_bandit(policy, spec, int(horizon))(seed_arr, state0)
+    return {k: np.asarray(v) if k != "final_state" else v
+            for k, v in out.items()}

@@ -1,0 +1,148 @@
+"""Static configuration for the device-resident environment simulator.
+
+``SimSpec`` flattens an ``(HFLExperimentConfig, ScenarioSpec)`` pair into
+one frozen, hashable bundle of numbers — dimensions, channel physics,
+scenario knobs — so it can ride as a ``jax.jit`` static argument and a
+``functools.lru_cache`` key. Derived constants that the host oracle
+computes in float64 (``rate_hi`` normalization, watt conversions, tier
+edges, surge cohort size, arrival window) are precomputed here *once, in
+float64, with the host's exact formulas*, so the device math starts from
+identical constants.
+
+``PRESETS`` names every scenario the host environment registry ships
+plus the large-cohort presets that only make sense device-side:
+
+  * the five host presets (``paper``, ``static-clients``,
+    ``high-mobility``, ``tiered-pricing``, ``flash-crowd``) at the paper
+    scale (N=50, M=3) — these are the parity surface vs
+    ``HFLNetworkSim``;
+  * ``metropolis-1k`` — 1000 clients / 12 edge servers, urban mobility:
+    a cohort whose ``(S, T, N, M)`` observable stack does not fit the
+    host path (the point of generating contexts inside the compiled
+    region);
+  * ``bursty-arrival`` — 1024 clients / 8 edge servers arriving in
+    duty-cycled waves (``arrival_period``): availability churns in
+    bursts, stressing selection under population churn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple
+
+from repro.configs.paper_hfl import (BURSTY_1K, METROPOLIS_1K, MNIST_CONVEX,
+                                     HFLExperimentConfig)
+from repro.envs.scenarios import SCENARIOS, ScenarioSpec, tier_edges
+
+
+@dataclass(frozen=True)
+class SimSpec:
+    """Everything static about one simulated network (hashable)."""
+    # dimensions
+    num_clients: int
+    num_edge_servers: int
+    # channel / latency physics (Eq. 4-6)
+    update_bits: float
+    workload: float
+    deadline_s: float
+    tx_w: float                 # transmit power, watts
+    noise_psd_w: float          # thermal noise PSD, watts/Hz
+    cell_radius_km: float
+    area: float                 # half-width of the bounding box, km
+    rate_hi: float              # context normalization (host float64 value)
+    # resource / pricing ranges
+    price_low: float
+    price_high: float
+    bandwidth_low: float
+    bandwidth_high: float
+    compute_low: float
+    compute_high: float
+    # scenario knobs
+    mobility: float
+    jitter: float
+    price_tier_values: Optional[Tuple[float, ...]] = None
+    price_tier_edges: Optional[Tuple[float, ...]] = None
+    surge_period: int = 0
+    surge_len: int = 10
+    surge_count: int = 0
+    surge_discount: float = 0.3
+    arrival_period: int = 0
+    arrival_len: int = 1
+    # true_p Monte-Carlo fidelity
+    mc_true_p: int = 128
+
+    def min_cost(self) -> float:
+        """Analytic lower bound on any realized per-client cost — the
+        device-mode replacement for scanning realized (S, T, N) cost
+        arrays when pinning slot capacity (``repro.experiment.packing``):
+        cost = 2 * price * bandwidth / 1e6, bandwidth >= bandwidth_low,
+        price >= the cheapest tier, times the flash-crowd discount."""
+        price = (min(self.price_tier_values) if self.price_tier_values
+                 else self.price_low)
+        cost = 2.0 * price * self.bandwidth_low / 1e6
+        if self.surge_period > 0:
+            cost *= self.surge_discount
+        return cost
+
+    @classmethod
+    def from_env(cls, cfg: HFLExperimentConfig, scen: ScenarioSpec,
+                 mc_true_p: int = 128) -> "SimSpec":
+        # derived constants come from the host oracle's own helpers so
+        # the two implementations can never desynchronize
+        from repro.core.network import _dbm_to_watt, context_rate_hi
+        rate_hi = context_rate_hi(cfg)
+        tx_w = _dbm_to_watt(cfg.tx_power_dbm)
+        noise_w = _dbm_to_watt(cfg.noise_dbm_per_hz)
+        tiers = scen.price_tiers
+        return cls(
+            num_clients=cfg.num_clients,
+            num_edge_servers=cfg.num_edge_servers,
+            update_bits=cfg.update_bits, workload=cfg.workload,
+            deadline_s=cfg.deadline_s, tx_w=tx_w, noise_psd_w=noise_w,
+            cell_radius_km=cfg.cell_radius_km,
+            area=1.5 + cfg.cell_radius_km, rate_hi=rate_hi,
+            price_low=cfg.price_low, price_high=cfg.price_high,
+            bandwidth_low=cfg.bandwidth_low,
+            bandwidth_high=cfg.bandwidth_high,
+            compute_low=cfg.compute_low, compute_high=cfg.compute_high,
+            mobility=scen.mobility, jitter=scen.jitter,
+            price_tier_values=(tuple(float(p) for p, _ in tiers)
+                               if tiers else None),
+            price_tier_edges=(tuple(float(e) for e in tier_edges(tiers))
+                              if tiers else None),
+            surge_period=scen.surge_period, surge_len=scen.surge_len,
+            surge_count=(max(1, int(round(scen.surge_frac
+                                          * cfg.num_clients)))
+                         if scen.surge_period > 0 else 0),
+            surge_discount=scen.surge_discount,
+            arrival_period=scen.arrival_period,
+            arrival_len=(max(1, int(round(scen.arrival_duty
+                                          * scen.arrival_period)))
+                         if scen.arrival_period > 0 else 1),
+            mc_true_p=mc_true_p,
+        )
+
+
+# large-cohort scenario knobs (device-first presets)
+METROPOLIS_SCEN = ScenarioSpec(name="metropolis-1k", mobility=0.3,
+                               jitter=0.4)
+BURSTY_SCEN = ScenarioSpec(name="bursty-arrival", mobility=0.2, jitter=0.3,
+                           arrival_period=40, arrival_duty=0.35)
+
+# name -> (default experiment config, scenario knobs)
+PRESETS: Dict[str, Tuple[HFLExperimentConfig, ScenarioSpec]] = {
+    **{name: (MNIST_CONVEX, scen) for name, scen in SCENARIOS.items()},
+    "metropolis-1k": (METROPOLIS_1K, METROPOLIS_SCEN),
+    "bursty-arrival": (BURSTY_1K, BURSTY_SCEN),
+}
+
+
+def preset(name: str, cfg: Optional[HFLExperimentConfig] = None,
+           **overrides) -> Tuple[HFLExperimentConfig, ScenarioSpec]:
+    key = name.lower()
+    if key not in PRESETS:
+        raise KeyError(f"unknown sim preset {name!r}; available: "
+                       f"{tuple(sorted(PRESETS))}")
+    default_cfg, scen = PRESETS[key]
+    if overrides:
+        scen = replace(scen, **overrides)
+    return (cfg or default_cfg), scen

@@ -43,14 +43,15 @@ def test_rollout_multi_stacks_per_seed_rollouts():
 def test_env_step_shares_immutable_state():
     """step() copies only what round() mutates: the heavy immutable
     arrays (positions are rebound, prices/base profiles never touched)
-    stay shared between old and new states."""
+    stay shared between old and new states. Randomness is counter-based
+    (repro.sim.draws), so the positions are the *only* mutable state."""
     env = envs.make("paper")
     s0 = env.init(seed=1)
     s1, _ = env.step(s0)
     assert s1.sim is not s0.sim
     assert s1.sim.price is s0.sim.price
     assert s1.sim.base_bw is s0.sim.base_bw
-    assert s1.sim.rng is not s0.sim.rng
+    assert s1.sim.client_pos is not s0.sim.client_pos
 
 
 def test_round_data_has_realized_latency():

@@ -161,6 +161,17 @@ def test_fused_matches_hfl_simulation(shared_data):
             res.participants["cocs"][i][eval_idx], hist.participants)
 
 
+def test_pinned_slot_overflow_raises(shared_data):
+    """A user-pinned slots_per_es the solver exceeds must fail loudly
+    (the fused packing would otherwise silently drop the overflow
+    clients; the host-loop engine raises for the same condition)."""
+    env = _env()
+    pol = _policy("oracle")
+    with pytest.raises(ValueError, match="slots_per_es"):
+        run_experiment_sweep({"oracle": pol}, env, [0], 4, eval_every=2,
+                             data=shared_data, slots_per_es=1)
+
+
 def test_host_policy_fallback(shared_data):
     """Non-jax policies run through the sequential fallback with the same
     result schema (and still produce per-round selections)."""

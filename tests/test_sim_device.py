@@ -1,0 +1,205 @@
+"""Device-resident environment simulator (``repro.sim``): pointwise
+parity vs the host ``HFLNetworkSim`` oracle on every preset, seed-axis
+independence, bitwise fused-policy-decision parity under a device env,
+the large-cohort presets, and the factory/resolve surface."""
+import dataclasses as dc
+
+import jax
+import numpy as np
+import pytest
+
+from repro import envs, policies, sim
+from repro.configs.paper_hfl import MNIST_CONVEX
+
+HOST_PRESETS = ["paper", "static-clients", "high-mobility",
+                "tiered-pricing", "flash-crowd"]
+SEEDS = [0, 1]
+HORIZON = 6
+
+
+def _np_round(batch):
+    return type(batch)(*(np.asarray(x) for x in batch))
+
+
+def _assert_round_parity(hb, db, deadline):
+    """Host float64 vs device float32 realization of the same rounds."""
+    np.testing.assert_array_equal(hb.t, db.t)
+    np.testing.assert_array_equal(hb.eligible, db.eligible)
+    np.testing.assert_allclose(hb.costs, db.costs, rtol=1e-5)
+    np.testing.assert_allclose(hb.contexts, db.contexts, atol=2e-5)
+    # Eq. 5 latencies; Eq. 4 rates enter via latency + the rate context
+    np.testing.assert_allclose(hb.latency, db.latency, rtol=2e-4)
+    # Eq. 6 outcomes: exact away from the deadline boundary, where a
+    # float32-vs-float64 ulp can legitimately flip the indicator
+    boundary = np.abs(hb.latency - deadline) < 1e-4 * deadline
+    assert ((hb.outcomes == db.outcomes) | boundary).all()
+    np.testing.assert_allclose(hb.true_p, db.true_p, atol=2.5 / 128)
+
+
+@pytest.mark.parametrize("name", HOST_PRESETS)
+def test_device_matches_host_oracle(name):
+    henv = envs.make(name)
+    denv = sim.make(name)
+    hb = henv.rollout_multi(SEEDS, HORIZON)
+    db = _np_round(denv.rollout_multi(SEEDS, HORIZON))
+    _assert_round_parity(hb, db, henv.cfg.deadline_s)
+
+
+def test_device_matches_host_bursty_arrival_small():
+    """The bursty-arrival dynamics (duty-cycled eligibility) also parity-
+    check at small scale, through the same shared draw schedule."""
+    denv = sim.make("bursty-arrival", cfg=MNIST_CONVEX)
+    hb = denv.host_env().rollout_multi(SEEDS, HORIZON)
+    db = _np_round(denv.rollout_multi(SEEDS, HORIZON))
+    _assert_round_parity(hb, db, MNIST_CONVEX.deadline_s)
+    # some client must actually be off-duty at some point
+    assert not np.asarray(db.eligible).any(-1).all()
+
+
+def test_seed_axis_independence():
+    """Row i of a vmapped S=4 device rollout == the single-seed rollout."""
+    denv = sim.make("paper")
+    multi = _np_round(denv.rollout_multi([0, 1, 2, 3], HORIZON))
+    for i, s in enumerate([0, 1, 2, 3]):
+        single = _np_round(denv.rollout_multi([s], HORIZON))
+        for name in multi._fields:
+            np.testing.assert_allclose(getattr(single, name)[0],
+                                       getattr(multi, name)[i],
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_device_step_matches_rollout_and_is_pure():
+    denv = sim.make("high-mobility")
+    s0 = denv.init(seed=5)
+    _, a = denv.step(s0)
+    _, b = denv.step(s0)          # same input state -> same round
+    np.testing.assert_array_equal(np.asarray(a.outcomes),
+                                  np.asarray(b.outcomes))
+    state, stepped = denv.init(seed=2), []
+    for _ in range(4):
+        state, rd = denv.step(state)
+        stepped.append(rd)
+    rolled = denv.rollout_device([2], 4).round
+    for i, rd in enumerate(stepped):
+        np.testing.assert_array_equal(np.asarray(rd.outcomes),
+                                      np.asarray(rolled.outcomes[0, i]))
+        np.testing.assert_array_equal(np.asarray(rd.contexts),
+                                      np.asarray(rolled.contexts[0, i]))
+
+
+def test_device_rollout_interop_round_data():
+    """DeviceEnv.rollout returns host RoundData lists (the host-policy
+    fallback path), consistent with its own device batch."""
+    denv = sim.make("paper")
+    rds = denv.rollout(3, 3)
+    batch = denv.rollout_device([3], 3)
+    assert [rd.t for rd in rds] == [0, 1, 2]
+    for i, rd in enumerate(rds):
+        np.testing.assert_array_equal(rd.outcomes,
+                                      np.asarray(batch.round.outcomes[0, i]))
+        np.testing.assert_array_equal(rd.bandwidth,
+                                      np.asarray(batch.bandwidth[0, i]))
+        assert rd.latency is not None
+
+
+# -- fused experiment integration ------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def shared_data():
+    from repro.data.federated import FederatedDataset
+    return FederatedDataset.synthetic(MNIST_CONVEX.num_clients,
+                                      kind="mnist", seed=0)
+
+
+@pytest.mark.parametrize("name", ["cocs", "oracle", "random"])
+def test_fused_device_env_policy_parity_bitwise(name, shared_data):
+    """run_experiment_sweep under env="device" reproduces the host-env
+    fused sweep's policy selections bitwise (and metrics to tolerance)."""
+    from repro.experiment import run_experiment_sweep
+
+    exp = dc.replace(MNIST_CONVEX, lr=0.01)
+    horizon = 8
+    spec = policies.PolicySpec.from_experiment(exp, horizon)
+    kw = ({"alpha": exp.holder_alpha, "h_t": exp.h_t}
+          if name == "cocs" else {})
+    pol = policies.make(name, spec, **kw)
+    host = run_experiment_sweep({name: pol}, envs.make("paper", exp),
+                                SEEDS, horizon, eval_every=4,
+                                data=shared_data)
+    dev = run_experiment_sweep({name: pol}, sim.make("paper", exp),
+                               SEEDS, horizon, eval_every=4,
+                               data=shared_data)
+    np.testing.assert_array_equal(host.selections[name],
+                                  dev.selections[name])
+    np.testing.assert_array_equal(host.explored[name], dev.explored[name])
+    np.testing.assert_allclose(host.participants[name],
+                               dev.participants[name])
+    np.testing.assert_allclose(host.accuracy[name], dev.accuracy[name],
+                               atol=1e-4)
+
+
+def test_sweep_env_by_string(shared_data):
+    """The sweep driver selects host vs device envs by string."""
+    from repro.experiment import run_experiment_sweep
+    from repro.sim.core import DeviceEnv
+
+    assert isinstance(sim.resolve("device"), DeviceEnv)
+    assert isinstance(sim.resolve("device:flash-crowd"), DeviceEnv)
+    assert isinstance(sim.resolve("metropolis-1k"), DeviceEnv)
+    assert not isinstance(sim.resolve("paper"), DeviceEnv)
+    res = run_experiment_sweep(["random"], "device", SEEDS, 4,
+                               eval_every=2, data=shared_data)
+    assert res.selections["random"].shape == (2, 4,
+                                              MNIST_CONVEX.num_clients)
+
+
+def test_host_policy_fallback_under_device_env(shared_data):
+    """Non-jax policies run under a device env via materialized rounds."""
+    from repro.experiment import run_experiment_sweep
+
+    spec = policies.PolicySpec.from_experiment(MNIST_CONVEX, 4)
+    pol = policies.make("cucb", spec)
+    res = run_experiment_sweep({"cucb": pol}, sim.make("paper"), [0], 4,
+                               eval_every=2, data=shared_data)
+    assert res.selections["cucb"].shape == (1, 4, MNIST_CONVEX.num_clients)
+    assert np.all(res.participants["cucb"] >= 0)
+
+
+# -- large-cohort presets ---------------------------------------------------
+
+
+def test_metropolis_1k_device_rollout():
+    """The 1000-client preset realizes on device (bandit-engine scale);
+    the policy engine consumes it directly."""
+    env = sim.make("metropolis-1k")
+    assert env.spec.num_clients >= 1000
+    spec = policies.PolicySpec.from_experiment(env.cfg, 3)
+    pol = policies.make("cocs", spec)
+    out = sim.run_bandit_device(pol, env.spec, [0], 3)
+    assert out["selections"].shape == (1, 3, env.spec.num_clients)
+    assert out["participants"].min() >= 0
+
+
+def test_sim_factory_surface():
+    assert set(envs.available()) <= set(sim.available())
+    assert "metropolis-1k" in sim.available()
+    with pytest.raises(KeyError):
+        sim.make("marsnet")
+    env = sim.make("paper", mobility=0.8)
+    assert env.scenario.mobility == 0.8
+    # spec is hashable (jit static) and stable across construction
+    assert hash(env.spec) == hash(sim.make("paper", mobility=0.8).spec)
+
+
+def test_shard_seed_axis_noop_single_device():
+    """The seed-axis sharding path is a no-op (but correct) when the
+    sweep does not tile the device count."""
+    from repro.experiment.sweep import _seed_mesh, _shard_seed_axis
+
+    mesh = _seed_mesh(3, None)
+    if len(jax.devices()) == 1:
+        assert mesh is None
+    tree = {"a": np.ones((3, 2))}
+    out = _shard_seed_axis(tree, mesh)
+    np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
