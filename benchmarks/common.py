@@ -1,15 +1,49 @@
 """Shared benchmark plumbing: every benchmark returns CSV rows
-(name, us_per_call, derived)."""
+(name, us_per_call, derived), and the figure benchmarks drive their
+experiments through the declarative facade (``run_policy_panel`` /
+``repro.run``) instead of hand-rolled per-benchmark loops."""
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 Row = Tuple[str, float, str]
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def run_policy_panel(cfg, horizon: int, seeds: Sequence[int],
+                     which: Optional[Sequence[str]] = None, *,
+                     scenario: str = "paper",
+                     budget: Optional[float] = None,
+                     deadline: Optional[float] = None,
+                     train=None, eval_every: int = 5,
+                     data=None) -> Dict[str, "object"]:
+    """Display-name -> ``RunResult`` panel over one shared realized env.
+
+    The common driver the figure benchmarks build on: one
+    ``ExperimentSpec`` per legacy policy display name (historical seed
+    offsets preserved), run through ``repro.run`` — the facade's rollout
+    cache keeps a single env realization across the panel.
+    """
+    from repro import api
+    from repro.core.utility import POLICY_TABLE
+
+    names = list(which or POLICY_TABLE)
+    out = {}
+    for name in names:
+        reg_name, offset = POLICY_TABLE[name]
+        spec = api.ExperimentSpec(
+            policy=api.PolicySpec(name=reg_name, budget=budget,
+                                  seed_offset=offset),
+            env=api.env_spec_from_config(cfg, scenario=scenario,
+                                         deadline=deadline),
+            train=train, eval=api.EvalSpec(eval_every=eval_every),
+            horizon=horizon, seeds=tuple(int(s) for s in seeds))
+        out[name] = api.run(spec, data=data)
+    return out
 
 
 def timed(fn: Callable, repeats: int = 1) -> Tuple[float, object]:

@@ -28,7 +28,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import FULL, Row
-from repro import envs, experiment, sim
+from repro import api, envs, sim
 from repro.configs.paper_hfl import MNIST_CONVEX
 from repro.data.federated import FederatedDataset
 from repro.sim import draws
@@ -91,6 +91,21 @@ def run() -> List[Row]:
                      f"{shape};speedup_vs_host={us_h / max(us_d, 1e-9):.2f}x;"
                      f"compile_s={compile_s:.2f}"))
 
+    # analytic Eq. 6 true_p: the MC fading pairs are the round
+    # generator's dominant draw cost; the exact-integral estimator
+    # removes them entirely (EnvSpec(true_p="analytic"))
+    n, m, s, t = GRID[-1][1:]
+    cfg_a = dc.replace(MNIST_CONVEX, num_clients=n, num_edge_servers=m)
+    denv_a = sim.make("paper", cfg_a, true_p="analytic")
+    seeds_a = list(range(s))
+    jax.block_until_ready(denv_a.rollout_device(seeds_a, t))    # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(denv_a.rollout_device(seeds_a, t))
+    us_a = (time.perf_counter() - t0) * 1e6
+    rows.append(("env_rollout_device_analytic", us_a,
+                 f"N={n};M={m};S={s};T={t};"
+                 f"speedup_vs_mc={us_d / max(us_a, 1e-9):.2f}x"))
+
     # -- large-cohort presets: device-only territory ------------------------
     env1k = sim.make("metropolis-1k")
     s1k, t1k = (4, 20) if FULL else (2, 8)
@@ -113,19 +128,24 @@ def run() -> List[Row]:
                                       samples_per_client=40,
                                       test_samples=500, seed=0)
 
-    def fused_1k():
-        return experiment.run_experiment_sweep(
-            ["cocs"], env1k, seeds=[0], horizon=horizon,
-            eval_every=horizon, data=data)
+    spec_1k = api.ExperimentSpec(
+        policy=api.PolicySpec("cocs"),
+        env=api.EnvSpec("metropolis-1k"),        # auto -> device backend
+        train=api.TrainSpec(), eval=api.EvalSpec(horizon),
+        horizon=horizon, seeds=(0,))
 
-    fused_1k()                                # warm (compile)
+    def fused_1k():
+        return api.run(spec_1k, data=data)
+
+    res = fused_1k()                          # warm (compile)
+    assert res.tier == 4 and res.env_backend == "device"
     t0 = time.perf_counter()
     res = fused_1k()
     us_f = (time.perf_counter() - t0) * 1e6
-    parts = float(np.mean(res.participants["cocs"]))
+    parts = float(np.mean(res.participants))
     rows.append((
         "env_fused_device_1k", us_f,
         f"N={env1k.spec.num_clients};horizon={horizon};"
         f"mean_participants={parts:.0f};"
-        f"final_acc={float(res.final_accuracy('cocs')[0]):.3f}"))
+        f"final_acc={float(res.final_accuracy()[0]):.3f}"))
     return rows

@@ -1,21 +1,28 @@
-"""Fig. 4c/4d: impact of the per-ES budget B on COCS utility."""
+"""Fig. 4c/4d: impact of the per-ES budget B on COCS utility — a
+declarative ``spec.grid(budget=[...])``: per policy, every budget runs
+device-batched next to the seed axis in one dispatch stack."""
 from __future__ import annotations
 
 from typing import List
 
 from benchmarks.common import FULL, Row, timed
+from repro import api
 from repro.configs.paper_hfl import MNIST_CONVEX
-from repro.core.utility import run_bandit_experiment
+
+BUDGETS = (3.5, 5.0, 10.0)
 
 
 def run() -> List[Row]:
     rows: List[Row] = []
     horizon = 200 if FULL else 120
-    for budget in (3.5, 5.0, 10.0):
-        us, res = timed(lambda: run_bandit_experiment(
-            MNIST_CONVEX, horizon=horizon, seed=2, which=["Oracle", "COCS"],
-            budget=budget))
-        rows.append((f"fig4cd_budget_{budget}", us,
-                     f"cocs_cum={res.cumulative('COCS')[-1]:.0f};"
-                     f"oracle_cum={res.cumulative('Oracle')[-1]:.0f}"))
+    base = api.ExperimentSpec(env=api.env_spec_from_config(MNIST_CONVEX),
+                              horizon=horizon, seeds=(2,))
+    grid = base.grid(policy=["oracle", "cocs"], budget=list(BUDGETS))
+    us, gres = timed(lambda: api.run(grid))
+    for j, budget in enumerate(BUDGETS):
+        oracle = gres.at(0, j).cumulative_utility()[0, -1]
+        cocs = gres.at(1, j).cumulative_utility()[0, -1]
+        rows.append((f"fig4cd_budget_{budget}", us / len(BUDGETS),
+                     f"cocs_cum={cocs:.0f};oracle_cum={oracle:.0f};"
+                     f"batched={','.join(gres.at(1, j).batched_axes)}"))
     return rows

@@ -1,21 +1,29 @@
-"""Fig. 4e/4f: impact of the deadline tau_dead on COCS utility."""
+"""Fig. 4e/4f: impact of the deadline tau_dead on COCS utility — a
+declarative ``spec.grid(deadline=[...])``: per-cell Eq. 6 outcomes are
+recomputed from the shared realized latencies, so the whole panel rides
+one env realization and one dispatch stack per policy."""
 from __future__ import annotations
 
 from typing import List
 
 from benchmarks.common import FULL, Row, timed
+from repro import api
 from repro.configs.paper_hfl import MNIST_CONVEX
-from repro.core.utility import run_bandit_experiment
+
+DEADLINES = (2.0, 4.0, 8.0)
 
 
 def run() -> List[Row]:
     rows: List[Row] = []
     horizon = 200 if FULL else 120
-    for deadline in (2.0, 4.0, 8.0):
-        us, res = timed(lambda: run_bandit_experiment(
-            MNIST_CONVEX, horizon=horizon, seed=2, which=["Oracle", "COCS"],
-            deadline=deadline))
-        rows.append((f"fig4ef_deadline_{deadline}", us,
-                     f"cocs_cum={res.cumulative('COCS')[-1]:.0f};"
-                     f"oracle_cum={res.cumulative('Oracle')[-1]:.0f}"))
+    base = api.ExperimentSpec(env=api.env_spec_from_config(MNIST_CONVEX),
+                              horizon=horizon, seeds=(2,))
+    grid = base.grid(policy=["oracle", "cocs"], deadline=list(DEADLINES))
+    us, gres = timed(lambda: api.run(grid))
+    for j, deadline in enumerate(DEADLINES):
+        oracle = gres.at(0, j).cumulative_utility()[0, -1]
+        cocs = gres.at(1, j).cumulative_utility()[0, -1]
+        rows.append((f"fig4ef_deadline_{deadline}", us / len(DEADLINES),
+                     f"cocs_cum={cocs:.0f};oracle_cum={oracle:.0f};"
+                     f"batched={','.join(gres.at(1, j).batched_axes)}"))
     return rows

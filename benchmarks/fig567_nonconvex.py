@@ -1,5 +1,6 @@
 """Fig. 5/6/7 + Table II (CIFAR column): non-convex HFL with the sqrt
-utility (Eq. 19) and FLGreedy-approximated selection.
+utility (Eq. 19) and FLGreedy-approximated selection, driven through the
+declarative facade (bandit panel + CNN training specs).
 
 The paper's CNN on CPU is slow; the quick mode trains the same CNN family on
 16x16x3 synthetic data and fewer rounds (REPRO_BENCH_FULL=1 restores 32x32
@@ -10,39 +11,37 @@ from __future__ import annotations
 import dataclasses as dc
 from typing import List
 
-
-from benchmarks.common import FULL, Row, timed
+from benchmarks.common import FULL, Row, run_policy_panel, timed
+from repro import api
 from repro.configs.paper_hfl import CIFAR10_NONCONVEX
-from repro.core.utility import make_policies, run_bandit_experiment
 from repro.data.federated import FederatedDataset
-from repro.fed.hfl import HFLSimConfig, HFLSimulation
 
 
 def run() -> List[Row]:
     rows: List[Row] = []
     horizon = 600 if FULL else 200
     # Fig. 5/6: cumulative sqrt-utility + regret
-    us, res = timed(lambda: run_bandit_experiment(
-        CIFAR10_NONCONVEX, horizon=horizon, seed=4))
-    for name in res.policies:
-        rows.append((f"fig5_nonconvex_utility_{name}",
-                     us / len(res.policies),
-                     f"cum_sqrt_utility={res.cumulative(name)[-1]:.1f};"
-                     f"regret={res.regret(name)[-1]:.1f}"))
+    us, panel = timed(lambda: run_policy_panel(CIFAR10_NONCONVEX, horizon,
+                                               seeds=(4,)))
+    cum = {name: res.cumulative_utility()[0, -1]
+           for name, res in panel.items()}
+    for name in panel:
+        rows.append((f"fig5_nonconvex_utility_{name}", us / len(panel),
+                     f"cum_sqrt_utility={cum[name]:.1f};"
+                     f"regret={cum['Oracle'] - cum[name]:.1f}"))
     # Fig. 7: CNN training accuracy for Oracle / COCS / Random
     rounds = 60 if FULL else 8
     exp = dc.replace(CIFAR10_NONCONVEX, lr=0.05)
-    policies = make_policies(exp, horizon=rounds, seed=0,
-                             which=["Oracle", "COCS", "Random"])
-    for name, pol in policies.items():
-        cfg = HFLSimConfig(exp=exp, model_kind="cnn", rounds=rounds,
-                           eval_every=max(rounds // 2, 1),
-                           batches_per_epoch=1, batch_size=8, seed=0)
-        data = FederatedDataset.synthetic(
-            exp.num_clients, kind="cifar" if FULL else "cifar_small",
-            samples_per_client=80 if FULL else 40,
-            test_samples=400 if FULL else 200, seed=0)
-        us, hist = timed(lambda: HFLSimulation(cfg, pol, data=data).run())
+    data = FederatedDataset.synthetic(
+        exp.num_clients, kind="cifar" if FULL else "cifar_small",
+        samples_per_client=80 if FULL else 40,
+        test_samples=400 if FULL else 200, seed=0)
+    train = api.TrainSpec(model="cnn", batch_size=8, batches_per_epoch=1)
+    cnn_panel = lambda name: run_policy_panel(
+        exp, rounds, seeds=(0,), which=[name], train=train,
+        eval_every=max(rounds // 2, 1), data=data)[name]
+    for name in ("Oracle", "COCS", "Random"):
+        us, res = timed(lambda: cnn_panel(name))
         rows.append((f"fig7_cnn_{name}", us,
-                     f"final_acc={hist.accuracy[-1]:.3f}"))
+                     f"final_acc={res.final_accuracy()[0]:.3f}"))
     return rows

@@ -1,0 +1,89 @@
+"""Config-grid execution: device-batched ``spec.grid`` vs sequential
+per-config runs (the Fig. 4 budget x deadline panel workload).
+
+``fig4_grid_fused`` runs a budget x deadline panel of policy-in-the-loop
+training through ``repro.run(grid)``: every (config cell, seed) pair is
+an element of ONE fused batch axis — one dispatch stack per eval
+interval for the whole panel. ``fig4_grid_seq`` runs the same cells as
+independent sequential ``repro.run`` calls (each still seed-batched —
+the strongest sequential baseline; its per-cell fused blocks and jit
+caches are shared process-wide).
+
+Both sides are warmed and timed in interleaved A/B repetitions (min per
+side) so CPU-share throttling cannot bias a row. Parity is asserted
+in-row: every batched cell must match its sequential run bitwise on
+selections and to float tolerance on final accuracy. On the 2-core CPU
+container both sides are compute-bound, so the recorded ratio mostly
+reflects removed per-cell dispatch/packing overhead; the
+panel-in-one-dispatch structure is built for accelerators (same caveat
+as ``fig4_sweep_fused``). Guarded by ``check_regression.py --entry
+fig4_grid_fused:fig4_grid_seq``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import FULL, Row
+from repro import api
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.data.federated import FederatedDataset
+
+SEEDS = (0, 1, 2, 3) if FULL else (0, 1)
+ROUNDS = 60 if FULL else 20
+BUDGETS = [2.5, 3.5, 5.0] if FULL else [2.5, 3.5]
+DEADLINES = [2.0, 3.0, 4.0] if FULL else [2.0, 3.0]
+REPS = 2 if FULL else 3
+
+
+def run() -> List[Row]:
+    import dataclasses as dc
+    exp = dc.replace(MNIST_CONVEX, lr=0.01)
+    data = FederatedDataset.synthetic(exp.num_clients, kind="mnist", seed=0)
+    base = api.ExperimentSpec(
+        policy=api.PolicySpec("cocs"), env=api.env_spec_from_config(exp),
+        train=api.TrainSpec(), eval=api.EvalSpec(5),
+        horizon=ROUNDS, seeds=SEEDS)
+    grid = base.grid(budget=BUDGETS, deadline=DEADLINES)
+    cells = grid.expand()
+
+    def fused_run():
+        return api.run(grid, data=data)
+
+    def seq_run():
+        return [api.run(cell, data=data) for cell in cells]
+
+    seq = seq_run()                              # warm per-cell caches
+    t0 = time.perf_counter()
+    gres = fused_run()                           # warm (compile)
+    compile_s = time.perf_counter() - t0
+    fused_s, seq_s = [], []
+    for _ in range(REPS):                        # interleaved A/B timing
+        t0 = time.perf_counter()
+        seq = seq_run()
+        seq_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        gres = fused_run()
+        fused_s.append(time.perf_counter() - t0)
+    us_seq, us_fused = min(seq_s) * 1e6, min(fused_s) * 1e6
+
+    # in-row parity: batched grid == sequential per-config, hard-fail
+    sel_match = all(np.array_equal(g.selections, s.selections)
+                    for g, s in zip(gres.results, seq))
+    acc_diff = max(float(np.abs(g.accuracy - s.accuracy).max())
+                   for g, s in zip(gres.results, seq))
+    assert sel_match, "grid selections diverged from sequential runs"
+    assert acc_diff < 5e-3, \
+        f"grid accuracy off by {acc_diff} vs sequential runs"
+    n_cells = len(cells)
+    speedup = us_seq / max(us_fused, 1e-9)
+    shape = (f"cells={n_cells};seeds={len(SEEDS)};rounds={ROUNDS};"
+             f"batch_elems={n_cells * len(SEEDS)}")
+    return [
+        ("fig4_grid_seq", us_seq, shape),
+        ("fig4_grid_fused", us_fused,
+         f"{shape};speedup={speedup:.2f}x;selection_bitwise=1;"
+         f"final_acc_maxdiff={acc_diff:.2e};compile_s={compile_s:.2f}"),
+    ]

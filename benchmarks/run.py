@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.ablation_phased",
     "benchmarks.engine_sweep",
     "benchmarks.sweep_training",
+    "benchmarks.grid_bench",
     "benchmarks.env_bench",
     "benchmarks.kernels_bench",
     "benchmarks.roofline_report",

@@ -33,7 +33,7 @@ from typing import List
 import numpy as np
 
 from benchmarks.common import FULL, Row
-from repro import envs, experiment, policies
+from repro import api, envs, policies
 from repro.configs.paper_hfl import MNIST_CONVEX
 from repro.core.utility import make_policies
 from repro.data.federated import FederatedDataset
@@ -64,10 +64,14 @@ def run() -> List[Row]:
             hists.append(sim.run())
         return hists
 
+    fused_spec = api.ExperimentSpec(
+        policy=api.PolicySpec("cocs"),
+        env=api.env_spec_from_config(exp),
+        train=api.TrainSpec(), eval=api.EvalSpec(EVAL_EVERY),
+        horizon=ROUNDS, seeds=tuple(SEEDS))
+
     def fused_run():
-        return experiment.run_experiment_sweep(
-            {"COCS": pol}, env, SEEDS, ROUNDS, eval_every=EVAL_EVERY,
-            data=data)
+        return api.run(fused_spec, data=data)
 
     seq_run()                                   # warm shared jit caches
     t0 = time.perf_counter()
@@ -87,12 +91,12 @@ def run() -> List[Row]:
     # parity: policy decisions vs the sequential host oracle (bitwise),
     # final accuracy vs the per-seed simulations (float tolerance)
     sel_match = all(
-        np.array_equal(res.selections["COCS"][i],
+        np.array_equal(res.selections[i],
                        policies.run_rounds_host(
                            pol, env.rollout(s, ROUNDS),
                            seed=s)["selections"])
         for i, s in enumerate(SEEDS))
-    acc_diff = max(abs(res.accuracy["COCS"][i][-1] - h.accuracy[-1])
+    acc_diff = max(abs(res.accuracy[i][-1] - h.accuracy[-1])
                    for i, h in enumerate(hists))
     # hard-fail the module (run.py emits an ERROR row and exits 1) rather
     # than bury a parity break in the derived string
@@ -107,5 +111,5 @@ def run() -> List[Row]:
         ("fig4_sweep_fused", us_fused,
          f"speedup={speedup:.1f}x;selection_bitwise={int(sel_match)};"
          f"final_acc_maxdiff={acc_diff:.2e};compile_s={compile_s:.2f};"
-         f"mean_final_acc={np.mean(res.accuracy['COCS'][:, -1]):.3f}"),
+         f"mean_final_acc={np.mean(res.final_accuracy()):.3f}"),
     ]

@@ -11,9 +11,8 @@ preset. Envs are selected by string — ``"device:<preset>"`` routes to
 """
 import numpy as np
 
-from repro import policies, sim
+from repro import api, policies, sim
 from repro.data.federated import FederatedDataset
-from repro.experiment import run_experiment_sweep
 
 
 def main():
@@ -22,16 +21,23 @@ def main():
     print(f"device env '{env.name}': N={n} clients, M={m} edge servers, "
           f"budget B={env.cfg.budget}/ES")
 
-    # full experiment: env generation inside the compiled training scan
+    # full experiment: env generation inside the compiled training scan.
+    # "metropolis-1k" only exists device-side, so the facade auto-selects
+    # the device backend (tier 4) from the spec alone.
     data = FederatedDataset.synthetic(n, kind="mnist",
                                       samples_per_client=40,
                                       test_samples=500, seed=0)
-    res = run_experiment_sweep(["cocs", "random"], env, seeds=[0, 1],
-                               horizon=10, eval_every=5, data=data)
-    for name in res.policies:
+    for name in ("cocs", "random"):
+        spec = api.ExperimentSpec(policy=api.PolicySpec(name),
+                                  env=api.EnvSpec("metropolis-1k"),
+                                  train=api.TrainSpec(),
+                                  eval=api.EvalSpec(5),
+                                  horizon=10, seeds=(0, 1))
+        res = api.run(spec, data=data)
+        assert res.tier == 4 and res.env_backend == "device"
         print(f"  {name:8s} mean participants/round "
-              f"{res.participants[name].mean():6.1f}   final acc "
-              f"{res.final_accuracy(name).mean():.3f}")
+              f"{res.participants.mean():6.1f}   final acc "
+              f"{res.final_accuracy().mean():.3f}")
 
     # bandit-only at scale: sim + policy fused in one dispatch
     benv = sim.make("bursty-arrival")

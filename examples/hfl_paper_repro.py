@@ -3,16 +3,20 @@
 Trains logistic regression over N=50 non-IID clients (2 labels each) for a
 few hundred HFL rounds with COCS vs Oracle vs Random selection, with real
 local SGD, deadline-masked edge aggregation (Eq. 6) and periodic global
-aggregation — the full system, end to end.
+aggregation — the full system, end to end, described as one declarative
+spec per policy and executed by ``repro.run`` on the fused tier.
 
     PYTHONPATH=src python examples/hfl_paper_repro.py [--rounds 200]
 """
 import argparse
 import dataclasses as dc
 
+import numpy as np
+
+import repro
+from repro import api
 from repro.configs.paper_hfl import MNIST_CONVEX
-from repro.core.utility import make_policies
-from repro.fed.hfl import HFLSimConfig, HFLSimulation
+from repro.core.utility import POLICY_TABLE
 
 
 def main():
@@ -23,19 +27,27 @@ def main():
     args = ap.parse_args()
 
     exp = dc.replace(MNIST_CONVEX, lr=args.lr)
-    policies = make_policies(exp, horizon=args.rounds, seed=args.seed,
-                             which=["Oracle", "COCS", "Random"])
+    env = api.env_spec_from_config(exp)
+    # seed-keyed synthetic data, matching the historical HFLSimulation
+    # default so results stay comparable to pre-facade runs
+    from repro.data.federated import FederatedDataset
+    data = FederatedDataset.synthetic(exp.num_clients, kind="mnist",
+                                      seed=args.seed)
     target = 0.70
     print(f"{'policy':8s} {'final acc':>10s} {'rounds->70%':>12s} "
           f"{'mean participants':>18s}")
-    for name, pol in policies.items():
-        cfg = HFLSimConfig(exp=exp, rounds=args.rounds, eval_every=2,
-                           seed=args.seed)
-        hist = HFLSimulation(cfg, pol).run()
-        r70 = hist.rounds_to_accuracy(target)
-        import numpy as np
-        print(f"{name:8s} {hist.accuracy[-1]:10.4f} {str(r70):>12s} "
-              f"{np.mean(hist.participants):18.1f}")
+    for name in ("Oracle", "COCS", "Random"):
+        reg_name, offset = POLICY_TABLE[name]
+        spec = api.ExperimentSpec(
+            policy=api.PolicySpec(reg_name, seed_offset=offset),
+            env=env, train=api.TrainSpec(), eval=api.EvalSpec(2),
+            horizon=args.rounds, seeds=(args.seed,))
+        res = repro.run(spec, data=data)
+        acc = res.accuracy[0]
+        hit = np.nonzero(acc >= target)[0]
+        r70 = int(res.eval_rounds[hit[0]]) if hit.size else None
+        print(f"{name:8s} {acc[-1]:10.4f} {str(r70):>12s} "
+              f"{np.mean(res.participants):18.1f}")
 
 
 if __name__ == "__main__":

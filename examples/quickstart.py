@@ -1,15 +1,22 @@
-"""Quickstart: COCS client selection on the paper's simulated HFL network.
+"""Quickstart: COCS client selection via the declarative experiment API.
 
-Runs the bandit layer only (no model training): 200 edge-aggregation rounds,
-all 5 policies, prints cumulative utilities and COCS's regret — a 10-second
-tour of the paper's core contribution.
+One serializable ``ExperimentSpec`` describes an experiment; ``repro.run``
+compiles it to the right execution tier automatically (here: the jitted
+bandit engine — no training in the loop). A ``spec.grid(...)`` runs a
+whole config panel with the budget axis device-batched next to seeds —
+a ~10-second tour of the paper's core contribution.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(The historical entry points ``run_bandit_experiment`` /
+``run_bandit_sweep`` / ``run_experiment_sweep`` / ``HFLSimulation``
+still work as deprecation shims over this facade.)
 """
 import numpy as np
 
+import repro
+from repro import api
 from repro.configs.paper_hfl import MNIST_CONVEX
-from repro.core import run_bandit_experiment, run_bandit_sweep
 
 
 def main():
@@ -17,22 +24,46 @@ def main():
     print(f"Simulating {horizon} HFL rounds, N=50 clients, M=3 edge servers,"
           f" budget B={MNIST_CONVEX.budget}/ES, deadline "
           f"{MNIST_CONVEX.deadline_s}s")
-    res = run_bandit_experiment(MNIST_CONVEX, horizon=horizon, seed=0)
+    base = api.ExperimentSpec(env=api.EnvSpec("paper"), horizon=horizon,
+                              seeds=(0,))
+    print(f"spec (JSON round-trippable): {base.to_json()[:68]}...")
+
+    results = {}
+    for name in ("oracle", "cocs", "cucb", "linucb", "random"):
+        spec = api.ExperimentSpec(policy=api.PolicySpec(name),
+                                  env=base.env, horizon=horizon, seeds=(0,))
+        results[name] = repro.run(spec)     # tier auto-selected: 1 (bandit)
     print(f"\n{'policy':10s} {'cum utility':>12s} {'mean clients/round':>20s}")
-    for name in res.policies:
-        print(f"{name:10s} {res.cumulative(name)[-1]:12.0f} "
-              f"{res.participants[name].mean():20.2f}")
-    r = res.regret("COCS")
+    for name, res in results.items():
+        print(f"{name:10s} {res.cumulative_utility()[0, -1]:12.0f} "
+              f"{res.participants.mean():20.2f}")
+    r = (results["oracle"].cumulative_utility()
+         - results["cocs"].cumulative_utility())[0]
     print(f"\nCOCS regret vs realized-X oracle: {r[-1]:.0f} "
           f"(slope {r[-1]/horizon:.2f}/round)")
     print("Expected ordering (paper Fig. 3a): "
           "Oracle > COCS > {LinUCB, CUCB, Random}")
-    # multi-seed regret bands via the jitted scan x vmap engine
-    sweep = run_bandit_sweep(MNIST_CONVEX, horizon=horizon,
-                             seeds=range(4), which=["Oracle", "COCS"])
-    gap = np.cumsum(sweep["Oracle"] - sweep["COCS"], axis=1)[:, -1]
+
+    # multi-seed regret bands: the seed axis is batched inside one
+    # compiled scan; a budget grid batches config cells the same way
+    sweep = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                               env=base.env, horizon=horizon,
+                               seeds=(0, 1, 2, 3))
+    oracle = api.ExperimentSpec(policy=api.PolicySpec("oracle"),
+                                env=base.env, horizon=horizon,
+                                seeds=(0, 1, 2, 3))
+    gap = (repro.run(oracle).cumulative_utility()[:, -1]
+           - repro.run(sweep).cumulative_utility()[:, -1])
     print(f"\n4-seed COCS regret (jitted sweep): "
           f"{gap.mean():.0f} +/- {gap.std():.0f}")
+
+    grid = sweep.grid(budget=[2.0, 3.5, 5.0])
+    gres = repro.run(grid)                  # one dispatch, budgets x seeds
+    cum = gres.cumulative_utility().mean(axis=-1)
+    print("\nbudget grid (device-batched axis "
+          f"{gres.results[0].batched_axes}):")
+    for b, c in zip((2.0, 3.5, 5.0), np.atleast_1d(cum)):
+        print(f"  B={b:4.1f}  4-seed mean cum utility {c:8.0f}")
 
 
 if __name__ == "__main__":

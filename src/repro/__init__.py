@@ -6,8 +6,13 @@ __version__ = "0.1.0"
 
 def __getattr__(name: str):
     # lazy subpackage access: ``repro.envs`` / ``repro.sim`` /
-    # ``repro.policies`` / ``repro.experiment`` without eager jax imports
-    if name in ("envs", "sim", "policies", "experiment", "fed"):
+    # ``repro.policies`` / ``repro.experiment`` / ``repro.api`` without
+    # eager jax imports
+    if name in ("api", "envs", "sim", "policies", "experiment", "fed"):
         import importlib
         return importlib.import_module(f"repro.{name}")
+    if name == "run":
+        # the facade: repro.run(ExperimentSpec(...)) -> RunResult
+        from repro.api import run
+        return run
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,45 @@
+"""Declarative experiment API: one serializable spec, one entry point.
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        policy=api.PolicySpec("cocs"),
+        env=api.EnvSpec("paper", true_p="analytic"),
+        train=api.TrainSpec(model="logreg"),
+        horizon=150, seeds=(0, 1, 2, 3))
+
+    res = api.run(spec)              # or repro.run(spec)
+    res.tier                         # 3: fused policy+training+eval
+    res.final_accuracy()             # (S,)
+    api.ExperimentSpec.from_json(spec.to_json())  # lossless round trip
+
+    panel = spec.grid(budget=[2.5, 3.5, 5.0], deadline=[2.0, 3.0])
+    gres = api.run(panel)            # whole Fig. 4 panel, one dispatch
+    gres.final_accuracy()            # (3, 2, S)                per interval
+
+``run`` auto-selects the execution tier from what the spec requires —
+[1] bandit-only scan, [2] host-loop training, [3] fused experiments,
+[4] device-env fused — and returns structured metrics plus provenance
+(resolved spec, tier, draw-schedule id). Grids over the
+shape-preserving axes (budget, deadline) are stacked and vmapped on
+device next to the seed axis; other axes fall back to sequential runs
+behind the same result type. The legacy entry points
+(``run_bandit_experiment``, ``run_bandit_sweep``,
+``run_experiment_sweep``, ``HFLSimulation``) survive as deprecation
+shims over this facade.
+"""
+from __future__ import annotations
+
+from repro.api.grid import GridResult, run_grid
+from repro.api.run import (RunResult, build_env, build_policy,
+                           resolve_config, run, select_tier)
+from repro.api.spec import (GRID_AXES, EnvSpec, EvalSpec, ExperimentGrid,
+                            ExperimentSpec, PolicySpec, TrainSpec,
+                            env_spec_from_config)
+
+__all__ = [
+    "EnvSpec", "EvalSpec", "ExperimentGrid", "ExperimentSpec", "GRID_AXES",
+    "GridResult", "PolicySpec", "RunResult", "TrainSpec", "build_env",
+    "build_policy", "env_spec_from_config", "resolve_config", "run",
+    "run_grid", "select_tier",
+]

@@ -1,0 +1,24 @@
+"""Once-per-process deprecation warnings for the legacy entry points.
+
+The historical drivers (``run_bandit_experiment``, ``run_bandit_sweep``,
+``run_experiment_sweep``, ``HFLSimulation``) survive as thin shims over
+the ``repro.run`` facade / its engines; each warns exactly once per
+process so migrating callers see the pointer without drowning parity
+suites (which exercise the shims on purpose) in repeats.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Set
+
+_warned: Set[str] = set()
+
+
+def warn_deprecated(name: str, replacement: str) -> None:
+    if name in _warned:
+        return
+    _warned.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} instead "
+        "(see repro.api / ROADMAP 'Entry points')",
+        DeprecationWarning, stacklevel=3)

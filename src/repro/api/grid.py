@@ -1,0 +1,322 @@
+"""Device-batched config-axis grids: budget x deadline panels next to
+the seed axis inside one fused per-interval scan.
+
+A ``spec.grid(budget=[...], deadline=[...], policy=[...])`` expands into
+cells (``repro.api.spec``). This module executes them:
+
+  * cells that differ only in the *batchable* axes (``budget``,
+    ``deadline`` — both shape-preserving) are flattened cell-major into
+    the existing batch axis of the fused engines, ``B = G * S``
+    elements, and run as ONE dispatch stack per eval interval — a whole
+    Fig. 4 panel in the wall-clock of a single configuration, shardable
+    over the same 1-D ``("seed",)`` mesh as a plain sweep;
+  * any other axis (policy, scenario, model, ...) and host-state
+    policies fall back to sequential ``repro.run`` per cell behind the
+    same ``GridResult`` type.
+
+How the batchable axes thread through without shape changes:
+
+  * **budget** is policy-side only — it becomes a (B,) scalar array fed
+    to the solver through ``select_with_budgets`` (the env's cost
+    realization never depends on it);
+  * **deadline** only thresholds Eq. 6: per-cell outcomes are recomputed
+    from the realized Eq. 5 latencies. On the host path this happens in
+    float64 *before* the float32 cast — bitwise the rounds a sequential
+    run with that ``deadline_s`` would realize; on the device path the
+    in-scan float32 comparison is identical to a per-config ``SimSpec``.
+    (``true_p`` keeps the base-deadline value in grid batches; no
+    registry policy consumes it at select/update time.)
+
+Parity contract (tested): a batched grid cell reproduces the equivalent
+sequential ``repro.run`` bitwise on policy selections and to float
+tolerance on training metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.api.spec import GRID_AXES, ExperimentGrid, ExperimentSpec
+from repro.api.run import (RunResult, build_env, build_policy,
+                           cached_rollout, run, select_tier)
+
+
+@dataclass
+class GridResult:
+    """Per-cell results of a grid run, in expansion order (C order over
+    the grid axes, last axis fastest)."""
+    grid: ExperimentGrid
+    cells: Tuple[ExperimentSpec, ...]
+    results: List[RunResult]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.grid.shape
+
+    def __getitem__(self, i: int) -> RunResult:
+        return self.results[i]
+
+    def at(self, *idx: int) -> RunResult:
+        """Result at integer grid coordinates (one index per axis)."""
+        flat = int(np.ravel_multi_index(idx, self.shape))
+        return self.results[flat]
+
+    def final_accuracy(self) -> np.ndarray:
+        """(grid shape) + (S,) final test accuracies."""
+        return np.stack([r.final_accuracy() for r in self.results]
+                        ).reshape(self.shape + (-1,))
+
+    def cumulative_utility(self) -> np.ndarray:
+        """(grid shape) + (S,) final cumulative utilities."""
+        return np.stack([r.cumulative_utility()[:, -1]
+                         for r in self.results]).reshape(self.shape + (-1,))
+
+
+def _group_key(cell: ExperimentSpec) -> ExperimentSpec:
+    """The cell with its batchable coordinates cleared: cells sharing
+    this key differ only in (budget, deadline) and can batch together."""
+    return replace(cell, policy=replace(cell.policy, budget=None),
+                   env=replace(cell.env, deadline=None))
+
+
+def run_grid(grid: ExperimentGrid, *, data=None) -> GridResult:
+    cells = grid.expand()
+    batchable = tuple(name for name, _ in grid.axes if GRID_AXES[name][0])
+    results: List[Optional[RunResult]] = [None] * len(cells)
+
+    groups: Dict[ExperimentSpec, List[int]] = {}
+    for i, cell in enumerate(cells):
+        groups.setdefault(_group_key(cell), []).append(i)
+
+    for key, idxs in groups.items():
+        group = [cells[i] for i in idxs]
+        batched = None
+        if batchable and len(group) > 1:
+            batched = _run_group_batched(key, group, batchable, data)
+        if batched is None:
+            for i in idxs:
+                results[i] = run(cells[i], data=data)
+        else:
+            for i, r in zip(idxs, batched):
+                results[i] = r
+    return GridResult(grid=grid, cells=cells, results=results)
+
+
+def _run_group_batched(key: ExperimentSpec, group: List[ExperimentSpec],
+                       batchable: Tuple[str, ...],
+                       data) -> Optional[List[RunResult]]:
+    """One device-batched run for a group of (budget, deadline) cells,
+    or None when the group cannot batch (host policy / host-loop tier)."""
+    from repro.sim.draws import SCHEDULE_ID
+
+    env = build_env(key.env)
+    cfg = env.cfg
+    policy = build_policy(key.policy, cfg, key.horizon)
+    tier = select_tier(key, policy, env)
+    if not policy.jax_capable:
+        return None              # host-state policy (any tier): sequential
+    seeds = [int(s) for s in key.seeds]
+    pol_seeds = [s + key.policy.seed_offset for s in seeds]
+    n_seeds = len(seeds)
+    budgets = np.asarray([c.policy.budget if c.policy.budget is not None
+                          else cfg.budget for c in group], np.float32)
+    deadlines = np.asarray([c.env.deadline if c.env.deadline is not None
+                            else cfg.deadline_s for c in group], np.float32)
+    # flatten cell-major: element b = g * S + s
+    budgets_b = np.repeat(budgets, n_seeds)
+    deadlines_b = np.repeat(deadlines, n_seeds)
+    pol_seeds_b = list(np.tile(np.asarray(pol_seeds, np.int64), len(group)))
+
+    from repro.sim.core import DeviceEnv
+    device = isinstance(env, DeviceEnv)
+    if tier == 1:
+        out = _bandit_grid(policy, env, device, seeds, pol_seeds_b,
+                           key.horizon, budgets_b, deadlines_b, len(group))
+        eval_block = None
+    else:
+        out, eval_block = _fused_grid(key, policy, env, device, seeds,
+                                      pol_seeds_b, budgets_b, deadlines_b,
+                                      len(group), data)
+
+    results = []
+    for g, cell in enumerate(group):
+        lo, hi = g * n_seeds, (g + 1) * n_seeds
+        rr = RunResult(
+            spec=cell, tier=tier,
+            env_backend="device" if device else "host",
+            draw_schedule=SCHEDULE_ID,
+            selections=out["selections"][lo:hi],
+            utilities=out["utilities"][lo:hi],
+            participants=out["participants"][lo:hi],
+            explored=out["explored"][lo:hi],
+            batched_axes=batchable)
+        if eval_block is not None:
+            rr.eval_rounds = eval_block["eval_rounds"]
+            rr.accuracy = eval_block["accuracy"][lo:hi]
+            rr.loss = eval_block["loss"][lo:hi]
+        results.append(rr)
+    return results
+
+
+# -- grid round batches ------------------------------------------------------
+
+
+def _host_grid_batch(env, seeds, horizon: int, deadlines_cells):
+    """(B, T, ...) host-realized ``Round`` batch, cell-major, with each
+    cell's Eq. 6 outcomes recomputed in float64 from the realized Eq. 5
+    latencies — bitwise the rounds a sequential run with that deadline
+    would realize (latencies, costs, contexts and eligibility do not
+    depend on the deadline)."""
+    from repro.policies.base import Round, stack_rounds
+
+    per_seed = []
+    for s in seeds:
+        rds = cached_rollout(env, s, horizon)
+        base = stack_rounds(list(rds))                     # (T, ...) f32
+        lat64 = np.stack([rd.latency for rd in rds])       # (T, N, M) f64
+        per_seed.append((base, lat64))
+    elements = []
+    for d in deadlines_cells:
+        for base, lat64 in per_seed:
+            elements.append(base._replace(
+                outcomes=(lat64 <= float(d)).astype(np.float32)))
+    return Round(*(np.stack([getattr(e, f) for e in elements])
+                   for f in Round._fields))
+
+
+def _bandit_grid(policy, env, device: bool, seeds, pol_seeds_b,
+                 horizon: int, budgets_b, deadlines_b, n_cells: int):
+    """Tier-1 grid: one compiled scan over flattened (cell, seed)."""
+    from repro.policies import run_rounds_grid
+
+    if device:
+        from repro.sim.engine import run_bandit_device_grid
+        seeds_b = np.tile(np.asarray(seeds, np.uint32), n_cells)
+        return run_bandit_device_grid(policy, env.spec, seeds_b, budgets_b,
+                                      deadlines_b, horizon, pol_seeds_b)
+    deadlines_cells = deadlines_b[::len(seeds)]
+    batch = _host_grid_batch(env, seeds, horizon, deadlines_cells)
+    return run_rounds_grid(policy, batch, budgets_b, pol_seeds_b)
+
+
+# -- fused training grid -----------------------------------------------------
+
+
+def _fused_grid(key: ExperimentSpec, policy, env, device: bool, seeds,
+                pol_seeds_b, budgets_b, deadlines_b, n_cells: int, data):
+    """Tiers 3/4 over the flattened grid batch: the sweep engine's fused
+    path with config cells folded into the batch axis. Returns
+    (per-round outs dict with (B, ...) arrays, eval dict)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.experiment.fused import (fused_block_device_grid,
+                                        fused_block_grid)
+    from repro.experiment.packing import slot_capacity
+    from repro.experiment.sweep import (_block_bounds, _block_slots,
+                                        _collect_blocks, _seed_mesh,
+                                        _shard_seed_axis, prepare_training)
+    from repro.policies.base import Round, rounds_to_scan_axes
+    from repro.policies.engine import stack_states
+
+    cfg = env.cfg
+    horizon, train = key.horizon, key.train
+    n_seeds = len(seeds)
+    b_total = n_cells * n_seeds
+    mesh = _seed_mesh(b_total, key.shard_seeds)
+    deadlines_cells = deadlines_b[::n_seeds]
+
+    # one shared setup path with the sweep engine (data kind, per-seed
+    # model init, sampler key convention), tiled cell-major over the
+    # cells so element (g, s) is bitwise the single-config run with
+    # seed s
+    setup = prepare_training(cfg, train.model_kind, train.batch_size,
+                             train.batches_per_epoch, data, seeds,
+                             use_kernel=train.use_kernel)
+    stacked, batch = setup.stacked, setup.batch
+    loss_fn, logits_fn, spec = setup.loss_fn, setup.logits_fn, setup.spec
+    test_x, test_y = setup.test_x, setup.test_y
+
+    def tile_cells(a):
+        return jnp.tile(a, (n_cells,) + (1,) * (a.ndim - 1))
+
+    edge0 = jax.tree.map(tile_cells, setup.edge_seed)
+    base_keys = tile_cells(setup.base_keys)
+    ends = _block_bounds(horizon, key.eval.eval_every)
+    budgets_arr = jnp.asarray(budgets_b)
+
+    # slot capacity: exact grid pre-scan on host envs, analytic budget
+    # bound under device envs (no (B, T, N, M) materialization)
+    if train.slots_per_es is not None:
+        slots_blocks = [int(train.slots_per_es)] * len(ends)
+    elif device:
+        slots_blocks = [slot_capacity(
+            float(np.max(budgets_b)), env.spec.min_cost(),
+            cfg.num_clients)] * len(ends)
+    else:
+        pre = _bandit_grid(policy, env, False, seeds, pol_seeds_b,
+                           horizon, budgets_b, deadlines_b, n_cells)
+        slots_blocks = _block_slots(pre["selections"],
+                                    cfg.num_edge_servers, ends,
+                                    spec.slot_bucket)
+
+    pstate = _shard_seed_axis(stack_states(policy, pol_seeds_b), mesh)
+    edge = _shard_seed_axis(edge0, mesh)
+    base_keys = _shard_seed_axis(base_keys, mesh)
+    outs, lo = [], 0
+    if device:
+        from repro.sim import init_statics_multi
+        statics = jax.tree.map(tile_cells,
+                               init_statics_multi(env.spec, seeds))
+        env_seeds = jnp.tile(jnp.asarray(np.asarray(seeds, np.uint32)),
+                             n_cells)
+        statics = _shard_seed_axis(statics, mesh)
+        env_seeds = _shard_seed_axis(env_seeds, mesh)
+        pos = jnp.copy(statics.pos0)
+        deadlines_arr = jnp.asarray(deadlines_b)
+        for hi, slots in zip(ends, slots_blocks):
+            fn = fused_block_device_grid(policy, spec, slots, batch,
+                                         loss_fn, logits_fn, env.spec)
+            out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
+                     pstate, edge, pos, env_seeds, statics,
+                     jnp.arange(lo, hi, dtype=jnp.int32), test_x, test_y,
+                     budgets_arr, deadlines_arr)
+            pstate, edge, pos = (out.policy_state, out.edge_params,
+                                 out.env_pos)
+            outs.append(out)
+            lo = hi
+    else:
+        grid_batch = _host_grid_batch(env, seeds, horizon, deadlines_cells)
+        scan_rounds = rounds_to_scan_axes(grid_batch)      # (T, B, ...)
+        scan_rounds = _shard_seed_axis(jax.device_put(scan_rounds), mesh,
+                                       axis=1)
+        for hi, slots in zip(ends, slots_blocks):
+            fn = fused_block_grid(policy, spec, slots, batch, loss_fn,
+                                  logits_fn)
+            blk = Round(*(getattr(scan_rounds, f)[lo:hi]
+                          for f in Round._fields))
+            out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
+                     pstate, edge, blk, test_x, test_y, budgets_arr)
+            pstate, edge = out.policy_state, out.edge_params
+            outs.append(out)
+            lo = hi
+    acc, loss, utils, parts, sels, expl = _collect_blocks(outs)
+    if train.slots_per_es is not None:
+        # same loud-failure contract as the sweep engine: a pinned
+        # capacity the solver exceeded silently dropped clients
+        peak = max((sels == j).sum(axis=-1).max()
+                   for j in range(cfg.num_edge_servers))
+        if peak > train.slots_per_es:
+            raise ValueError(
+                f"a grid round assigned {peak} clients to one ES but "
+                f"slots_per_es={train.slots_per_es}; raise it or leave "
+                "it None for the computed capacity")
+    return ({"selections": sels, "utilities": utils, "participants": parts,
+             "explored": expl},
+            {"eval_rounds": np.asarray(ends), "accuracy": acc,
+             "loss": loss})
+
+
+__all__ = ["GridResult", "run_grid"]

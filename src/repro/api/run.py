@@ -1,0 +1,247 @@
+"""``repro.run(spec) -> RunResult``: one entry point for every tier.
+
+The facade compiles a declarative ``ExperimentSpec`` down to the right
+execution engine:
+
+    tier 1  bandit-only        no ``TrainSpec``: jitted policy scan over
+                               realized rounds (vmapped over seeds; the
+                               device-sim fused bandit under a device env)
+    tier 2  host-loop          training with a host-state policy (CUCB,
+                               LinUCB, phased COCS): sequential per-seed
+                               loop over the batched training engine
+    tier 3  fused              training with a jax-capable policy:
+                               policy+training+eval in one compiled block
+                               per eval interval, seeds batched
+    tier 4  device-env fused   tier 3 with Eq. 4-6 context generation
+                               inside the compiled scan (``repro.sim``)
+
+and returns structured per-seed metrics plus provenance: the resolved
+spec, the tier that actually ran, and the draw-schedule id that pins the
+randomness contract. ``run`` also accepts an ``ExperimentGrid``
+(``spec.grid(...)``) and dispatches to the device-batched grid engine
+(``repro.api.grid``).
+
+Policy decisions reproduce the legacy entry points bitwise: tier 1
+matches ``policies.run_rounds`` / ``run_rounds_multi_seed`` on the same
+realized rounds, tiers 2-4 delegate to the same sweep engine the old
+``run_experiment_sweep`` exposed.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.spec import EnvSpec, ExperimentGrid, ExperimentSpec, PolicySpec
+
+
+@dataclass
+class RunResult:
+    """Structured result of one ``repro.run``: metrics + provenance.
+
+    Leading axes: S seeds (in ``spec.seeds`` order), T rounds, E evals.
+    ``accuracy``/``loss``/``eval_rounds`` are None for bandit-only runs.
+    ``batched_axes`` names the grid axes this run was device-batched
+    over (empty outside ``repro.api.grid``).
+    """
+    spec: ExperimentSpec                 # resolved spec (provenance)
+    tier: int                            # 1..4, see module docstring
+    env_backend: str                     # "host" | "device"
+    draw_schedule: str                   # randomness-contract id
+    selections: np.ndarray               # (S, T, N) int
+    utilities: np.ndarray                # (S, T)
+    participants: np.ndarray             # (S, T)
+    explored: np.ndarray                 # (S, T) bool
+    eval_rounds: Optional[np.ndarray] = None   # (E,) 1-based round ids
+    accuracy: Optional[np.ndarray] = None      # (S, E)
+    loss: Optional[np.ndarray] = None          # (S, E)
+    batched_axes: Tuple[str, ...] = ()
+
+    def final_accuracy(self) -> np.ndarray:
+        if self.accuracy is None:
+            raise ValueError("bandit-only run: no accuracy recorded "
+                             "(add a TrainSpec)")
+        return self.accuracy[:, -1]
+
+    def cumulative_utility(self) -> np.ndarray:
+        return np.cumsum(self.utilities, axis=1)
+
+
+# -- spec resolution ---------------------------------------------------------
+
+
+def _device_only(scenario: str) -> bool:
+    from repro import envs
+    from repro.sim.spec import PRESETS
+    return scenario in PRESETS and scenario not in envs.SCENARIOS
+
+
+def resolve_config(env_spec: EnvSpec):
+    """The fully-resolved ``HFLExperimentConfig`` an ``EnvSpec`` implies
+    (named config or scenario default, plus overrides and deadline)."""
+    import dataclasses as dc
+
+    from repro.configs.paper_hfl import MNIST_CONVEX, get_config
+    from repro.sim.spec import PRESETS
+
+    scen = env_spec.scenario.lower()
+    if env_spec.config is not None:
+        cfg = get_config(env_spec.config)
+    elif scen in PRESETS:
+        cfg = PRESETS[scen][0]
+    else:
+        cfg = MNIST_CONVEX
+    if env_spec.overrides:
+        cfg = dc.replace(cfg, **dict(env_spec.overrides))
+    if env_spec.deadline is not None:
+        cfg = dc.replace(cfg, deadline_s=float(env_spec.deadline))
+    return cfg
+
+
+def build_env(env_spec: EnvSpec):
+    """EnvSpec -> ``repro.envs.HFLEnv`` | ``repro.sim.DeviceEnv``."""
+    from repro import envs, sim
+
+    scen = env_spec.scenario.lower()
+    use_device = (env_spec.backend == "device"
+                  or (env_spec.backend == "auto" and _device_only(scen)))
+    cfg = resolve_config(env_spec)
+    if use_device:
+        return sim.make(scen, cfg, mc_true_p=env_spec.mc_true_p,
+                        true_p=env_spec.true_p)
+    return envs.make(scen, cfg, true_p=env_spec.true_p)
+
+
+def build_policy(policy_spec: PolicySpec, cfg, horizon: int):
+    """PolicySpec -> registry ``FunctionalPolicy`` (config-default COCS
+    knobs exactly as the legacy drivers applied them, unless overridden
+    in ``options``)."""
+    from repro import policies
+    from repro.core.utility import _policy_kwargs
+
+    pspec = policies.PolicySpec.from_experiment(
+        cfg, horizon, budget=policy_spec.budget)
+    kw = dict(_policy_kwargs(cfg, policy_spec.name.lower()))
+    kw.update(dict(policy_spec.options))
+    return policies.make(policy_spec.name, pspec, **kw)
+
+
+def select_tier(spec: ExperimentSpec, policy, env) -> int:
+    from repro.sim.core import DeviceEnv
+    if spec.train is None:
+        return 1
+    if not policy.jax_capable:
+        return 2
+    return 4 if isinstance(env, DeviceEnv) else 3
+
+
+# -- realized-round caches ---------------------------------------------------
+# Frozen env objects hash by value, so repeated runs over the same
+# (env, seed, horizon) — e.g. the multi-policy legacy shims, or a parity
+# test re-running a spec — share one realization instead of re-drawing.
+
+@functools.lru_cache(maxsize=8)
+def cached_rollout(env, seed: int, horizon: int) -> tuple:
+    return tuple(env.rollout(seed, horizon))
+
+
+@functools.lru_cache(maxsize=4)
+def _cached_batch(env, seeds: Tuple[int, ...], horizon: int):
+    from repro.policies import stack_rounds_multi
+    return stack_rounds_multi([cached_rollout(env, s, horizon)
+                               for s in seeds])
+
+
+# -- the facade --------------------------------------------------------------
+
+
+def run(spec, *, data=None):
+    """Run one ``ExperimentSpec`` (or an ``ExperimentGrid``).
+
+    ``data`` optionally supplies a shared ``FederatedDataset`` for
+    training tiers (datasets are runtime objects, not part of the
+    serialized spec; default: synthetic data keyed on the model kind).
+    """
+    if isinstance(spec, ExperimentGrid):
+        from repro.api.grid import run_grid
+        return run_grid(spec, data=data)
+    if not isinstance(spec, ExperimentSpec):
+        raise TypeError("repro.run expects an ExperimentSpec or "
+                        f"ExperimentGrid, got {type(spec).__name__}")
+
+    from repro.sim.core import DeviceEnv
+    from repro.sim.draws import SCHEDULE_ID
+
+    env = build_env(spec.env)
+    policy = build_policy(spec.policy, env.cfg, spec.horizon)
+    tier = select_tier(spec, policy, env)
+    backend = "device" if isinstance(env, DeviceEnv) else "host"
+    seeds = [int(s) for s in spec.seeds]
+    pol_seeds = [s + spec.policy.seed_offset for s in seeds]
+
+    if tier == 1:
+        out = _run_bandit(policy, env, seeds, pol_seeds, spec.horizon,
+                          backend)
+        return RunResult(spec=spec, tier=tier, env_backend=backend,
+                         draw_schedule=SCHEDULE_ID, **out)
+
+    from repro.experiment.sweep import sweep_experiments
+    name = spec.policy.name
+    res = sweep_experiments(
+        {name: policy}, env, seeds, spec.horizon,
+        model_kind=spec.train.model_kind,
+        batch_size=spec.train.batch_size,
+        batches_per_epoch=spec.train.batches_per_epoch,
+        eval_every=spec.eval.eval_every, data=data,
+        use_kernel=spec.train.use_kernel,
+        slots_per_es=spec.train.slots_per_es,
+        shard_seeds=spec.shard_seeds,
+        policy_seed_offset=spec.policy.seed_offset)
+    return RunResult(
+        spec=spec, tier=tier, env_backend=backend,
+        draw_schedule=SCHEDULE_ID,
+        selections=res.selections[name], utilities=res.utilities[name],
+        participants=res.participants[name], explored=res.explored[name],
+        eval_rounds=np.asarray(res.eval_rounds),
+        accuracy=res.accuracy[name], loss=res.loss[name])
+
+
+def _run_bandit(policy, env, seeds: Sequence[int],
+                pol_seeds: Sequence[int], horizon: int, backend: str):
+    """Tier-1 engines, matching the legacy drivers' dispatch exactly:
+    single-seed jax policies run the unbatched scan (bitwise the old
+    ``run_rounds`` path), multi-seed ones the vmapped scan, device envs
+    the fused sim+policy scan, and host policies the sequential loop."""
+    from repro import policies as P
+
+    if policy.jax_capable:
+        if backend == "device":
+            from repro.sim.engine import run_bandit_device
+            out = run_bandit_device(policy, env.spec, seeds, horizon,
+                                    policy_seeds=pol_seeds)
+        elif len(seeds) == 1:
+            one = P.run_rounds(policy,
+                               list(cached_rollout(env, seeds[0], horizon)),
+                               seed=pol_seeds[0])
+            out = {k: (v[None] if k != "final_state" else v)
+                   for k, v in one.items()}
+        else:
+            batch = _cached_batch(env, tuple(seeds), horizon)
+            out = P.run_rounds_multi_seed(policy, batch, pol_seeds)
+    else:
+        per_seed = [P.run_rounds_host(
+            policy, list(cached_rollout(env, s, horizon)), seed=ps)
+            for s, ps in zip(seeds, pol_seeds)]
+        out = {k: np.stack([o[k] for o in per_seed])
+               for k in ("selections", "utilities", "participants",
+                         "explored")}
+    return {"selections": np.asarray(out["selections"]),
+            "utilities": np.asarray(out["utilities"]),
+            "participants": np.asarray(out["participants"]),
+            "explored": np.asarray(out["explored"])}
+
+
+__all__ = ["RunResult", "build_env", "build_policy", "cached_rollout",
+           "resolve_config", "run", "select_tier"]

@@ -1,0 +1,328 @@
+"""Declarative experiment descriptions: one frozen, JSON-round-trippable
+``ExperimentSpec`` for every execution tier.
+
+An ``ExperimentSpec`` bundles *what* to run — selection policy, network
+environment, optional training, evaluation cadence, seeds — without
+saying *how*; ``repro.run`` compiles it to the right engine (bandit
+scan, host loop, fused experiment, device-env fused) automatically.
+Everything is a frozen dataclass of plain values (strings, numbers,
+tuples), so a spec is hashable, usable as a jit static argument, and
+round-trips losslessly through ``to_dict``/``from_dict`` and JSON — an
+experiment *is* its serialized description, which is what makes sweeps
+comparable across machines and PRs.
+
+``spec.grid(budget=[...], deadline=[...], policy=[...])`` expands a spec
+into a config grid (``ExperimentGrid``). Axis values are applied with
+``replace`` on the relevant sub-spec; the last-named axis varies fastest
+in the expansion (C order over the kwargs). The ``budget`` and
+``deadline`` axes are *batchable*: they preserve every array shape, so
+``repro.run`` stacks them next to the seed axis inside one fused device
+program (see ``repro.api.grid``); any other axis falls back to
+sequential per-cell runs behind the same result type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+
+def _pairs(kv) -> Tuple[Tuple[str, Any], ...]:
+    """Normalize a mapping / iterable of pairs into a hashable tuple."""
+    if isinstance(kv, Mapping):
+        return tuple((str(k), v) for k, v in kv.items())
+    return tuple((str(k), v) for k, v in (kv or ()))
+
+
+def _spec_dict(obj) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        if dataclasses.is_dataclass(v):
+            v = _spec_dict(v)
+        elif isinstance(v, tuple):
+            if v and all(isinstance(e, tuple) and len(e) == 2
+                         and isinstance(e[0], str) for e in v):
+                v = dict(v)             # option pairs -> JSON object
+            else:
+                v = list(v)
+        out[f.name] = v
+    return out
+
+
+def _from_dict(cls, d: Mapping[str, Any], nested=()):
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise ValueError(f"{cls.__name__}: unknown field(s) "
+                         f"{sorted(unknown)}; expected {sorted(names)}")
+    kw = dict(d)
+    for key, sub in nested:
+        if kw.get(key) is not None:
+            kw[key] = sub.from_dict(kw[key])
+    for key in ("options", "overrides"):
+        if key in names and key in kw:
+            kw[key] = _pairs(kw[key])
+    for key in ("seeds",):
+        if key in names and key in kw:
+            kw[key] = tuple(int(s) for s in kw[key])
+    return cls(**kw)
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """Which selection policy, and the knobs that are *policy-side*.
+
+    ``budget`` overrides the per-ES budget the policy's solver sees
+    (``None`` -> the experiment config's ``budget``); the environment's
+    cost realization never depends on it, which is what makes ``budget``
+    a shape-preserving (batchable) grid axis. ``options`` are extra
+    registry-constructor kwargs (e.g. ``{"alpha": 1.0, "h_t": 5}``);
+    omitted COCS knobs default from the experiment config exactly as the
+    legacy drivers did. ``seed_offset`` shifts the policy init seed
+    relative to each env seed (the legacy per-policy-name seeding).
+    """
+    name: str = "cocs"
+    budget: Optional[float] = None
+    seed_offset: int = 0
+    options: Tuple[Tuple[str, Any], ...] = ()
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _spec_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PolicySpec":
+        return _from_dict(cls, d)
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    """Which network environment, on which backend.
+
+    ``scenario`` names a preset (host scenarios or device-only cohorts —
+    see ``repro.envs.available()`` / ``repro.sim.available()``);
+    ``backend="auto"`` picks the device simulator exactly when the
+    scenario only exists there. ``config`` names a registered
+    ``HFLExperimentConfig`` (``repro.configs.paper_hfl.CONFIGS``;
+    ``None`` -> the scenario's default), ``overrides`` replace individual
+    config fields, and ``deadline`` is sugar for overriding
+    ``deadline_s`` — kept explicit because it is the paper's Fig. 4 axis
+    and batchable in grids. ``true_p`` picks the ground-truth
+    participation estimator: ``"mc"`` (Monte-Carlo fading pairs) or
+    ``"analytic"`` (exact Eq. 6 integral, ``repro.sim.truep``).
+    """
+    scenario: str = "paper"
+    backend: str = "auto"            # "auto" | "host" | "device"
+    config: Optional[str] = None
+    deadline: Optional[float] = None
+    true_p: str = "mc"               # "mc" | "analytic"
+    mc_true_p: int = 128
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _spec_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "EnvSpec":
+        return _from_dict(cls, d)
+
+
+@dataclass(frozen=True)
+class TrainSpec:
+    """HFL training in the loop (omit for a bandit-only run).
+
+    ``transposed_gemm`` opts into the transposed local-SGD parameter
+    layout (``model="logreg"`` only): the slot-batched backward
+    ``dW = x^T g`` einsum dominates CPU training, and the transposed
+    layout turns it into a natural GEMM (~1.3x on the isolated step).
+    Parity-tested against the default layout; policy decisions are
+    unaffected either way.
+    """
+    model: str = "logreg"            # "logreg" | "cnn"
+    batch_size: int = 32
+    batches_per_epoch: int = 2
+    transposed_gemm: bool = False
+    use_kernel: Optional[bool] = None
+    slots_per_es: Optional[int] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _spec_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "TrainSpec":
+        return _from_dict(cls, d)
+
+    @property
+    def model_kind(self) -> str:
+        if self.transposed_gemm:
+            if self.model != "logreg":
+                raise ValueError("transposed_gemm only applies to the "
+                                 "logreg model")
+            return "logreg-t"
+        return self.model
+
+
+@dataclass(frozen=True)
+class EvalSpec:
+    """Test-set evaluation cadence (one fused eval per ``eval_every``
+    training rounds, plus one after the final round)."""
+    eval_every: int = 5
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _spec_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "EvalSpec":
+        return _from_dict(cls, d)
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """One complete, serializable experiment description."""
+    policy: PolicySpec = field(default_factory=PolicySpec)
+    env: EnvSpec = field(default_factory=EnvSpec)
+    train: Optional[TrainSpec] = None
+    eval: EvalSpec = field(default_factory=EvalSpec)
+    horizon: int = 200
+    seeds: Tuple[int, ...] = (0,)
+    shard_seeds: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.horizon <= 0:
+            raise ValueError("horizon must be positive")
+        if not self.seeds:
+            raise ValueError("seeds must be non-empty")
+        if self.env.true_p not in ("mc", "analytic"):
+            raise ValueError(f"unknown true_p mode {self.env.true_p!r}")
+        if self.env.backend not in ("auto", "host", "device"):
+            raise ValueError(f"unknown env backend {self.env.backend!r}")
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _spec_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return _from_dict(cls, d, nested=(("policy", PolicySpec),
+                                          ("env", EnvSpec),
+                                          ("train", TrainSpec),
+                                          ("eval", EvalSpec)))
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    # -- grids -------------------------------------------------------------
+
+    def grid(self, **axes) -> "ExperimentGrid":
+        """Config grid over this spec: ``spec.grid(budget=[...],
+        deadline=[...], policy=[...])``. Axis order is the kwargs order;
+        the last axis varies fastest in ``expand()``."""
+        for name in axes:
+            if name not in GRID_AXES:
+                raise KeyError(f"unknown grid axis {name!r}; available: "
+                               f"{tuple(sorted(GRID_AXES))}")
+        return ExperimentGrid(
+            base=self,
+            axes=tuple((name, tuple(values))
+                       for name, values in axes.items()))
+
+
+# axis name -> (batchable?, apply(spec, value) -> spec). Batchable axes
+# preserve every array shape, so their cells stack next to the seed axis
+# inside one fused device program; the rest run sequentially per cell.
+GRID_AXES: Dict[str, Tuple[bool, Any]] = {
+    "policy": (False, lambda s, v: replace(
+        s, policy=v if isinstance(v, PolicySpec)
+        else replace(s.policy, name=str(v), options=()))),
+    "budget": (True, lambda s, v: replace(
+        s, policy=replace(s.policy, budget=float(v)))),
+    "deadline": (True, lambda s, v: replace(
+        s, env=replace(s.env, deadline=float(v)))),
+    "scenario": (False, lambda s, v: replace(
+        s, env=replace(s.env, scenario=str(v)))),
+    "true_p": (False, lambda s, v: replace(
+        s, env=replace(s.env, true_p=str(v)))),
+    "model": (False, lambda s, v: replace(
+        s, train=replace(s.train or TrainSpec(), model=str(v)))),
+    "horizon": (False, lambda s, v: replace(s, horizon=int(v))),
+}
+
+
+def env_spec_from_config(cfg, scenario: str = "paper",
+                         backend: str = "auto",
+                         deadline: Optional[float] = None,
+                         true_p: str = "mc") -> EnvSpec:
+    """``EnvSpec`` for an in-memory ``HFLExperimentConfig`` object.
+
+    Serializable specs reference configs by *name*; an ad-hoc config
+    (e.g. ``dc.replace(MNIST_CONVEX, lr=0.01)``) is expressed as its
+    registered base plus field ``overrides`` — the bridge the legacy
+    shims and benchmarks use to route arbitrary config objects through
+    the declarative API without losing round-trippability.
+    """
+    from repro.configs.paper_hfl import CONFIGS, MNIST_CONVEX
+
+    base = CONFIGS.get(getattr(cfg, "name", ""), MNIST_CONVEX)
+    overrides = tuple(
+        (f.name, getattr(cfg, f.name))
+        for f in dataclasses.fields(cfg)
+        if getattr(cfg, f.name) != getattr(base, f.name))
+    return EnvSpec(scenario=scenario, backend=backend, config=base.name,
+                   deadline=deadline, true_p=true_p, overrides=overrides)
+
+
+@dataclass(frozen=True)
+class ExperimentGrid:
+    """A base spec plus named config axes; itself JSON-round-trippable.
+
+    ``expand()`` materializes the cells as full ``ExperimentSpec``s in C
+    order (last axis fastest); ``repro.run`` accepts the grid directly
+    and batches the batchable-axis cells on device.
+    """
+    base: ExperimentSpec
+    axes: Tuple[Tuple[str, Tuple[Any, ...]], ...]
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return tuple(len(values) for _, values in self.axes)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(name for name, _ in self.axes)
+
+    def coords(self) -> Tuple[Tuple[Any, ...], ...]:
+        """Axis-value coordinates of every cell, in expansion order."""
+        return tuple(itertools.product(*(v for _, v in self.axes)))
+
+    def expand(self) -> Tuple[ExperimentSpec, ...]:
+        cells = []
+        for combo in self.coords():
+            spec = self.base
+            for (name, _), value in zip(self.axes, combo):
+                spec = GRID_AXES[name][1](spec, value)
+            cells.append(spec)
+        return tuple(cells)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"base": self.base.to_dict(),
+                "axes": [[name, list(values)] for name, values in self.axes]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentGrid":
+        return cls(base=ExperimentSpec.from_dict(d["base"]),
+                   axes=tuple((str(name), tuple(values))
+                              for name, values in d["axes"]))
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentGrid":
+        return cls.from_dict(json.loads(s))

@@ -73,3 +73,16 @@ CIFAR10_NONCONVEX = HFLExperimentConfig(
     lr=0.1,
     utility="sqrt",
 )
+
+# named registry: what lets a serialized ExperimentSpec (repro.api) refer
+# to an experiment configuration by string and round-trip through JSON
+CONFIGS = {c.name: c for c in (MNIST_CONVEX, CIFAR10_NONCONVEX,
+                               METROPOLIS_1K, BURSTY_1K)}
+
+
+def get_config(name: str) -> HFLExperimentConfig:
+    key = name.lower()
+    if key not in CONFIGS:
+        raise KeyError(f"unknown experiment config {name!r}; available: "
+                       f"{tuple(sorted(CONFIGS))}")
+    return CONFIGS[key]

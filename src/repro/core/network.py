@@ -81,11 +81,14 @@ class HFLNetworkSim:
 
     def __init__(self, cfg: HFLExperimentConfig, seed: int = 0,
                  mc_true_p: int = 128, mobility: float = 0.15,
-                 jitter: float = 0.30):
+                 jitter: float = 0.30, true_p_mode: str = "mc"):
+        if true_p_mode not in ("mc", "analytic"):
+            raise ValueError(f"unknown true_p mode {true_p_mode!r}")
         self.cfg = cfg
         self.seed = int(seed)
         self.mobility = mobility
         self.mc_true_p = mc_true_p
+        self.true_p_mode = true_p_mode
         n, m = cfg.num_clients, cfg.num_edge_servers
         # ES positions on a circle; area = bounding box of coverage discs
         self.es_pos = es_positions(m)
@@ -151,7 +154,11 @@ class HFLNetworkSim:
     def round(self, t: int) -> RoundData:
         c = self.cfg
         n, m = c.num_clients, c.num_edge_servers
-        dr = host_round_draws(self.seed, t, n, m, self.mc_true_p)
+        analytic = self.true_p_mode == "analytic"
+        # analytic true_p consumes no MC fading pairs; tags are
+        # counter-based so every other draw stream is unchanged
+        dr = host_round_draws(self.seed, t, n, m,
+                              0 if analytic else self.mc_true_p)
         self._move_clients(dr.move)
         d = np.linalg.norm(self.client_pos[:, None] - self.es_pos[None],
                            axis=-1)                           # (N, M) km
@@ -181,11 +188,19 @@ class HFLNetworkSim:
         phi_comp = (compute - c.compute_low) / (c.compute_high - c.compute_low)
         contexts = np.stack(
             [phi_rate, np.broadcast_to(phi_comp[:, None], (n, m))], axis=-1)
-        # ground-truth participation probability via Monte Carlo over fading
-        tau_mc = self._latency(bandwidth[None, :, None],
-                               compute[None, :, None], d[None],
-                               dr.mc_dt, dr.mc_ut, g0)
-        true_p = (tau_mc <= c.deadline_s).mean(axis=0)
+        # ground-truth participation probability: exact Eq. 6 integral
+        # (repro.sim.truep, float64 here) or Monte Carlo over fading
+        if analytic:
+            from repro.sim.truep import analytic_true_p
+            true_p = analytic_true_p(
+                bandwidth[:, None], compute[:, None], g0, tx_w=self.tx_w,
+                noise_psd_w=self.noise_psd_w, update_bits=c.update_bits,
+                workload=c.workload, deadline_s=c.deadline_s)
+        else:
+            tau_mc = self._latency(bandwidth[None, :, None],
+                                   compute[None, :, None], d[None],
+                                   dr.mc_dt, dr.mc_ut, g0)
+            true_p = (tau_mc <= c.deadline_s).mean(axis=0)
         return RoundData(t=t, contexts=contexts, eligible=eligible,
                          costs=costs, outcomes=outcomes, true_p=true_p,
                          compute=compute, bandwidth=bandwidth, latency=tau)

@@ -1,13 +1,12 @@
-"""Utility / regret accounting (Eq. 7-8, 11, 19, 21) and the bandit
-experiment drivers shared by benchmarks and tests.
+"""Utility / regret accounting (Eq. 7-8, 11, 19, 21) and the legacy
+bandit experiment drivers.
 
-``run_bandit_experiment`` keeps its historical signature but now runs on
-the unified policy/environment API: rounds are realized once by a
-``repro.envs`` environment and jax-capable policies (COCS, Oracle,
-Random) execute as a single jitted ``lax.scan`` over the round batch;
-host policies (CUCB, LinUCB, phased COCS) fall back to the sequential
-driver on the same rounds. ``run_bandit_sweep`` vmaps the scan over many
-seeds for batched regret curves.
+``run_bandit_experiment`` / ``run_bandit_sweep`` keep their historical
+signatures as *deprecated shims* over the declarative facade
+(``repro.run`` + ``repro.api.ExperimentSpec``): each legacy call builds
+the equivalent spec (per-policy seed offsets preserved via
+``POLICY_TABLE``) and reproduces the old drivers' policy decisions
+bitwise. New code should construct specs directly.
 """
 from __future__ import annotations
 
@@ -80,6 +79,22 @@ def make_policies(cfg: HFLExperimentConfig, horizon: int, seed: int = 0,
     return out
 
 
+def _shim_spec(cfg: HFLExperimentConfig, name: str, horizon: int,
+               seeds, budget, deadline, scenario: str):
+    """One legacy (policy display name, config) pair as an
+    ``ExperimentSpec`` — preserving the historical per-policy seed
+    offsets, so the shims reproduce the old drivers bitwise."""
+    from repro import api
+
+    reg_name, offset = POLICY_TABLE[name]
+    return api.ExperimentSpec(
+        policy=api.PolicySpec(name=reg_name, budget=budget,
+                              seed_offset=offset),
+        env=api.env_spec_from_config(cfg, scenario=scenario,
+                                     backend="host", deadline=deadline),
+        horizon=horizon, seeds=tuple(int(s) for s in seeds))
+
+
 def run_bandit_experiment(cfg: HFLExperimentConfig, horizon: int,
                           seed: int = 0,
                           which: Optional[List[str]] = None,
@@ -87,25 +102,23 @@ def run_bandit_experiment(cfg: HFLExperimentConfig, horizon: int,
                           deadline: Optional[float] = None,
                           scenario: str = "paper",
                           ) -> ExperimentResult:
-    """Run all policies against the SAME realized network (shared sim seed)."""
-    import dataclasses as dc
+    """Deprecated shim over ``repro.run``: all policies against the SAME
+    realized network (shared sim seed; the facade's rollout cache keeps
+    one realization across the per-policy runs)."""
+    from repro import api
+    from repro.api.deprecation import warn_deprecated
 
-    from repro import envs, policies
-
-    if deadline is not None:
-        cfg = dc.replace(cfg, deadline_s=deadline)
-    rounds = envs.make(scenario, cfg).rollout(seed, horizon)
-    spec = policies.PolicySpec.from_experiment(cfg, horizon, budget=budget)
+    warn_deprecated("run_bandit_experiment",
+                    "repro.run(ExperimentSpec(...))")
     names = which or list(POLICY_TABLE)
     utilities, participants, selections, explored = {}, {}, {}, {}
     for name in names:
-        reg_name, offset = POLICY_TABLE[name]
-        pol = policies.make(reg_name, spec, **_policy_kwargs(cfg, reg_name))
-        out = policies.run_rounds(pol, rounds, seed=seed + offset)
-        utilities[name] = np.asarray(out["utilities"], np.float64)
-        participants[name] = np.asarray(out["participants"], np.float64)
-        selections[name] = np.asarray(out["selections"], np.int64)
-        explored[name] = np.asarray(out["explored"], bool)
+        res = api.run(_shim_spec(cfg, name, horizon, [seed], budget,
+                                 deadline, scenario))
+        utilities[name] = np.asarray(res.utilities[0], np.float64)
+        participants[name] = np.asarray(res.participants[0], np.float64)
+        selections[name] = np.asarray(res.selections[0], np.int64)
+        explored[name] = np.asarray(res.explored[0], bool)
     return ExperimentResult(policies=list(names), utilities=utilities,
                             participants=participants, selections=selections,
                             explored=explored)
@@ -117,28 +130,18 @@ def run_bandit_sweep(cfg: HFLExperimentConfig, horizon: int,
                      budget: Optional[float] = None,
                      scenario: str = "paper",
                      ) -> Dict[str, np.ndarray]:
-    """Multi-seed regret sweep: one env rollout per seed, then each
-    jax-capable policy runs as scan-over-rounds vmapped over seeds.
-    Returns {display_name: (S, T) utilities}."""
-    from repro import envs, policies
+    """Deprecated shim over ``repro.run``: multi-seed regret sweep, each
+    jax-capable policy one scan-over-rounds vmapped over seeds. Returns
+    {display_name: (S, T) utilities}."""
+    from repro import api
+    from repro.api.deprecation import warn_deprecated
 
-    env = envs.make(scenario, cfg)
-    rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
-    batch = policies.stack_rounds_multi(rounds_per_seed)  # stacked once
-    spec = policies.PolicySpec.from_experiment(cfg, horizon, budget=budget)
+    warn_deprecated("run_bandit_sweep",
+                    "repro.run(ExperimentSpec(..., seeds=(...)))")
     names = which or ["Oracle", "COCS", "Random"]
     out: Dict[str, np.ndarray] = {}
     for name in names:
-        reg_name, offset = POLICY_TABLE[name]
-        pol = policies.make(reg_name, spec, **_policy_kwargs(cfg, reg_name))
-        pol_seeds = [s + offset for s in seeds]
-        if pol.jax_capable:
-            res = policies.run_rounds_multi_seed(pol, batch, pol_seeds)
-            out[name] = np.asarray(res["utilities"], np.float64)
-        else:
-            out[name] = np.stack([
-                np.asarray(policies.run_rounds_host(
-                    pol, rounds_per_seed[i], seed=ps)["utilities"],
-                    np.float64)
-                for i, ps in enumerate(pol_seeds)])
+        res = api.run(_shim_spec(cfg, name, horizon, seeds, budget, None,
+                                 scenario))
+        out[name] = np.asarray(res.utilities, np.float64)
     return out

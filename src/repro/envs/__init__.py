@@ -20,14 +20,14 @@ def available() -> Tuple[str, ...]:
 
 
 def make(name: str = "paper", cfg: Optional[HFLExperimentConfig] = None,
-         **overrides) -> HFLEnv:
+         true_p: str = "mc", **overrides) -> HFLEnv:
     key = name.lower()
     if key not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; available: {available()}")
     spec = SCENARIOS[key]
     if overrides:
         spec = replace(spec, **overrides)
-    return HFLEnv(cfg=cfg or MNIST_CONVEX, spec=spec)
+    return HFLEnv(cfg=cfg or MNIST_CONVEX, spec=spec, true_p=true_p)
 
 
 __all__ = ["EnvState", "HFLEnv", "SCENARIOS", "ScenarioSim", "ScenarioSpec",

@@ -48,13 +48,15 @@ class HFLEnv:
     """A (config, scenario) pair with functional init/step."""
     cfg: HFLExperimentConfig
     spec: ScenarioSpec
+    true_p: str = "mc"     # "mc" | "analytic" (exact Eq. 6, repro.sim.truep)
 
     @property
     def name(self) -> str:
         return self.spec.name
 
     def make_sim(self, seed: int = 0) -> HFLNetworkSim:
-        return ScenarioSim(self.cfg, self.spec, seed=seed)
+        return ScenarioSim(self.cfg, self.spec, seed=seed,
+                           true_p_mode=self.true_p)
 
     def init(self, seed: int = 0) -> EnvState:
         return EnvState(sim=self.make_sim(seed), t=0)

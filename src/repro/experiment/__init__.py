@@ -2,14 +2,19 @@
 client-selection policy, Eq. 2/3/6 training rounds and test evaluation —
 as one compiled ``lax.scan`` block per eval interval, batched over seeds.
 
+This package is the engine behind the declarative facade — prefer
+``repro.run(ExperimentSpec(...))`` (see ``repro.api``) in new code;
+``run_experiment_sweep`` is the deprecated alias of the internal
+``sweep_experiments`` driver:
+
     from repro import envs, experiment
     env = envs.make("paper")
-    res = experiment.run_experiment_sweep(["cocs", "oracle"], env,
-                                          seeds=range(8), horizon=150)
+    res = experiment.sweep_experiments(["cocs", "oracle"], env,
+                                       seeds=range(8), horizon=150)
     res.final_accuracy("cocs")          # (S,)
 
     # env="device": Eq. 4-6 context generation inside the compiled scan
-    res = experiment.run_experiment_sweep(
+    res = experiment.sweep_experiments(
         ["cocs"], "device:metropolis-1k", seeds=range(8), horizon=150)
 
 Policy decisions match the sequential host oracle
@@ -24,9 +29,12 @@ host-env policy decisions bitwise (shared counter-based draws).
 from __future__ import annotations
 
 from repro.experiment.fused import (BlockOut, fused_block,
-                                    fused_block_device)
+                                    fused_block_device, fused_block_grid,
+                                    fused_block_device_grid)
 from repro.experiment.packing import pack_assignment, slot_capacity
-from repro.experiment.sweep import SweepResult, run_experiment_sweep
+from repro.experiment.sweep import (SweepResult, run_experiment_sweep,
+                                    sweep_experiments)
 
 __all__ = ["BlockOut", "SweepResult", "fused_block", "fused_block_device",
-           "pack_assignment", "run_experiment_sweep", "slot_capacity"]
+           "fused_block_device_grid", "fused_block_grid", "pack_assignment",
+           "run_experiment_sweep", "slot_capacity", "sweep_experiments"]

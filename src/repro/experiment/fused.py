@@ -62,17 +62,29 @@ class BlockOut(NamedTuple):
 
 
 def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
-                      slots: int, batch: int, loss_fn):
+                      slots: int, batch: int, loss_fn, grid: bool = False):
     """One training round for all seeds: ``(pstate, edge, rd, data...) ->
     (pstate', edge', outs)``. Shared by the host-rounds and device-env
-    block variants so the two paths cannot drift."""
+    block variants so the two paths cannot drift. With ``grid=True`` the
+    batch axis enumerates flattened (config cell, seed) pairs and ``step``
+    takes an extra (B,) per-element budget scalar, threaded into the
+    solver through ``select_with_budgets`` — config axes batch exactly
+    like seeds."""
     m, steps = spec.num_edge_servers, spec.steps
     sqrt_u = policy.spec.sqrt_utility
 
+    def _select(pstate, rd, budgets):
+        if grid:
+            return jax.vmap(
+                lambda st, r, b: policy.select_with_budgets(
+                    st, r, jnp.full((m,), b, jnp.float32)))(
+                        pstate, rd, budgets)
+        return jax.vmap(policy.select)(pstate, rd)
+
     def step(pstate, edge, rd, stacked_x, stacked_y, stacked_sizes,
-             base_keys):
+             base_keys, budgets=None):
         n_seeds = base_keys.shape[0]
-        assign, aux = jax.vmap(policy.select)(pstate, rd)
+        assign, aux = _select(pstate, rd, budgets)
         new_pstate = jax.vmap(policy.update)(pstate, rd, assign, aux)
         ci, valid, arrived, tau = jax.vmap(
             pack_assignment, in_axes=(0, 0, 0, None, None))(
@@ -196,6 +208,87 @@ def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
                                             base_keys)
+            return (pstate, edge, pos), outs
+
+        (pstate, edge, pos), (sel, util, parts, explored) = jax.lax.scan(
+            step, (policy_state, edge_params, env_pos), ts)
+        acc, loss = _block_eval(logits_fn, edge, test_x, test_y)
+        return BlockOut(
+            policy_state=pstate, edge_params=edge,
+            selections=_swap(sel), utilities=_swap(util),
+            participants=_swap(parts), explored=_swap(explored),
+            accuracy=acc, loss=loss, env_pos=pos)
+
+    return jax.jit(block, donate_argnums=(4, 5, 6))
+
+
+@functools.lru_cache(maxsize=None)
+def fused_block_grid(policy: FunctionalPolicy, spec: BatchedRoundSpec,
+                     slots: int, batch: int, loss_fn, logits_fn):
+    """``fused_block`` over a flattened (config cell x seed) batch axis.
+
+    Same signature plus a trailing ``budgets`` (B,) argument: one per-ES
+    budget scalar per batch element, traced into the selection solver.
+    Deadline cells need no extra argument here — a host-realized grid
+    batch already carries per-cell outcomes (recomputed in float64 on
+    host before stacking, so a cell is bitwise the rounds a sequential
+    run with that deadline would realize).
+    """
+    round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
+                                   grid=True)
+
+    def block(stacked_x, stacked_y, stacked_sizes, base_keys,
+              policy_state, edge_params, rounds, test_x, test_y, budgets):
+
+        def step(carry, rd):
+            pstate, edge = carry
+            pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
+                                            stacked_y, stacked_sizes,
+                                            base_keys, budgets)
+            return (pstate, edge), outs
+
+        (pstate, edge), (sel, util, parts, explored) = jax.lax.scan(
+            step, (policy_state, edge_params), rounds)
+        acc, loss = _block_eval(logits_fn, edge, test_x, test_y)
+        return BlockOut(
+            policy_state=pstate, edge_params=edge,
+            selections=_swap(sel), utilities=_swap(util),
+            participants=_swap(parts), explored=_swap(explored),
+            accuracy=acc, loss=loss)
+
+    return jax.jit(block, donate_argnums=(4, 5))
+
+
+@functools.lru_cache(maxsize=None)
+def fused_block_device_grid(policy: FunctionalPolicy,
+                            spec: BatchedRoundSpec, slots: int, batch: int,
+                            loss_fn, logits_fn, sim_spec):
+    """``fused_block_device`` over a flattened (config cell x seed) batch.
+
+    Takes trailing ``budgets`` (B,) and ``deadlines`` (B,) arguments. The
+    env is generated in-scan from per-element (seed, statics, pos) — a
+    config cell reuses its seed's env — and each element's Eq. 6 outcomes
+    are re-thresholded against its own deadline from the realized Eq. 5
+    latencies, the identical float32 comparison a sequential run with
+    that ``SimSpec.deadline_s`` would perform (bitwise-equal outcomes).
+    """
+    from repro.sim.core import round_batch
+    round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
+                                   grid=True)
+
+    def block(stacked_x, stacked_y, stacked_sizes, base_keys,
+              policy_state, edge_params, env_pos, seeds, statics,
+              ts, test_x, test_y, budgets, deadlines):
+
+        def step(carry, t):
+            pstate, edge, pos = carry
+            pos, rd = round_batch(sim_spec, seeds, statics, pos, t)
+            rd = rd._replace(outcomes=(
+                rd.latency <= deadlines[:, None, None]
+            ).astype(jnp.float32))
+            pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
+                                            stacked_y, stacked_sizes,
+                                            base_keys, budgets)
             return (pstate, edge, pos), outs
 
         (pstate, edge, pos), (sel, util, parts, explored) = jax.lax.scan(

@@ -1,5 +1,7 @@
-"""``run_experiment_sweep``: whole multi-seed HFL experiments, one
-compiled dispatch per eval interval.
+"""``sweep_experiments``: whole multi-seed HFL experiments, one
+compiled dispatch per eval interval — the engine behind the
+``repro.run`` facade's training tiers (``run_experiment_sweep`` remains
+as its deprecated alias).
 
 Two environment modes share the driver:
 
@@ -28,7 +30,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +104,66 @@ def _block_slots(selections: np.ndarray, num_es: int, ends: List[int],
     return out
 
 
+class TrainingSetup(NamedTuple):
+    """Everything the fused training paths derive from (cfg, model,
+    data, seeds) — built in exactly one place so the sweep engine and
+    the grid engine (``repro.api.grid``) cannot drift on the data-kind
+    mapping, the per-seed model init, or the sampler key convention
+    (``PRNGKey(seed + 11)``) their bitwise-parity contract rests on."""
+    data: FederatedDataset
+    stacked: object            # StackedClients device shards
+    batch: int                 # batch size clamped to smallest shard
+    steps: int                 # local SGD steps per round
+    loss_fn: object
+    logits_fn: object
+    edge_seed: object          # (S, M, ...) per-seed initial edge params
+    base_keys: jax.Array       # (S,) per-seed sampler keys
+    spec: object               # BatchedRoundSpec
+    test_x: jax.Array
+    test_y: jax.Array
+
+
+def prepare_training(cfg, model_kind: str, batch_size: int,
+                     batches_per_epoch: int,
+                     data: Optional[FederatedDataset],
+                     seeds: Sequence[int],
+                     use_kernel: Optional[bool] = None,
+                     tile: Optional[int] = None) -> TrainingSetup:
+    """Host-side training-state preparation shared by every fused path:
+    synthetic-data default (shared ``seed=0`` dataset), stacked shards,
+    per-seed model inits broadcast to (M, ...) edge params, per-seed
+    sampler base keys, and the static round spec."""
+    kind = "mnist" if model_kind.startswith("logreg") else "cifar"
+    data = data or FederatedDataset.synthetic(cfg.num_clients, kind=kind,
+                                              seed=0)
+    stacked = data.stacked()
+    sizes = np.asarray(stacked.sizes)
+    batch = int(min(batch_size, sizes.min()))
+    steps = cfg.local_epochs * batches_per_epoch
+    loss_fn = make_loss_fn(model_kind)
+    inits, logits_fn = [], None
+    for s in seeds:
+        params, logits_fn = make_model(
+            model_kind, jax.random.PRNGKey(s),
+            input_shape=data.test_x.shape[1:])
+        inits.append(jax.tree.map(
+            lambda p: jnp.broadcast_to(
+                p[None], (cfg.num_edge_servers,) + p.shape), params))
+    edge_seed = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+    param_count = sum(int(p.size) for p in
+                      jax.tree.leaves(inits[0])) // cfg.num_edge_servers
+    spec = make_round_spec(cfg, steps=steps, batch_size=batch_size,
+                           use_kernel=use_kernel, tile=tile,
+                           param_count=param_count)
+    base_keys = jnp.stack([jax.random.PRNGKey(s + 11) for s in seeds])
+    return TrainingSetup(data=data, stacked=stacked, batch=batch,
+                         steps=steps, loss_fn=loss_fn,
+                         logits_fn=logits_fn, edge_seed=edge_seed,
+                         base_keys=base_keys, spec=spec,
+                         test_x=jnp.asarray(data.test_x),
+                         test_y=jnp.asarray(data.test_y))
+
+
 def _seed_mesh(n_seeds: int, shard_seeds: Optional[bool]):
     """A 1-D ("seed",) device mesh when sharding applies, else None."""
     if shard_seeds is False:
@@ -132,16 +194,17 @@ def _shard_seed_axis(tree, mesh, axis: int = 0):
     return jax.tree.map(put, tree)
 
 
-def run_experiment_sweep(policies: Union[Sequence[str],
-                                         Dict[str, FunctionalPolicy]],
-                         env, seeds: Sequence[int], horizon: int, *,
-                         model_kind: str = "logreg", batch_size: int = 32,
-                         batches_per_epoch: int = 2, eval_every: int = 5,
-                         data: Optional[FederatedDataset] = None,
-                         use_kernel: Optional[bool] = None,
-                         tile: Optional[int] = None,
-                         slots_per_es: Optional[int] = None,
-                         shard_seeds: Optional[bool] = None) -> SweepResult:
+def sweep_experiments(policies: Union[Sequence[str],
+                                      Dict[str, FunctionalPolicy]],
+                      env, seeds: Sequence[int], horizon: int, *,
+                      model_kind: str = "logreg", batch_size: int = 32,
+                      batches_per_epoch: int = 2, eval_every: int = 5,
+                      data: Optional[FederatedDataset] = None,
+                      use_kernel: Optional[bool] = None,
+                      tile: Optional[int] = None,
+                      slots_per_es: Optional[int] = None,
+                      shard_seeds: Optional[bool] = None,
+                      policy_seed_offset: int = 0) -> SweepResult:
     """Run every policy for every seed over ``horizon`` training rounds.
 
     ``policies`` is either a dict name -> ``FunctionalPolicy`` or a list
@@ -154,6 +217,13 @@ def run_experiment_sweep(policies: Union[Sequence[str],
     ``HFLSimulation(seed=s)`` run with the same shared ``data`` — and
     jax-capable policies execute all seeds in one fused device program
     per eval interval (with env generation in-scan under a device env).
+    ``policy_seed_offset`` shifts the policy init seeds relative to the
+    env seeds (the legacy per-policy-name seeding of
+    ``repro.core.utility.POLICY_TABLE``); the env, model and sampler
+    streams stay keyed on the env seeds.
+
+    This is the internal engine behind the ``repro.run`` facade; prefer
+    ``repro.run(ExperimentSpec(...))`` in new code.
     """
     from repro import sim as simmod
     from repro.sim.core import DeviceEnv
@@ -162,6 +232,7 @@ def run_experiment_sweep(policies: Union[Sequence[str],
     device_env = isinstance(env, DeviceEnv)
     cfg = env.cfg
     seeds = [int(s) for s in seeds]
+    pol_seeds = [s + int(policy_seed_offset) for s in seeds]
     if not isinstance(policies, dict):
         from repro import policies as _registry
         spec = _registry.PolicySpec.from_experiment(cfg, horizon)
@@ -189,33 +260,13 @@ def run_experiment_sweep(policies: Union[Sequence[str],
         else:
             batch_st = env.rollout_multi(seeds, horizon)    # (S, T, ...)
         scan_rounds = rounds_to_scan_axes(batch_st)         # (T, S, ...)
-    kind = "mnist" if model_kind == "logreg" else "cifar"
-    data = data or FederatedDataset.synthetic(cfg.num_clients, kind=kind,
-                                              seed=0)
-    stacked = data.stacked()
-    sizes = np.asarray(stacked.sizes)
-    batch = int(min(batch_size, sizes.min()))
-    steps = cfg.local_epochs * batches_per_epoch
-    loss_fn = make_loss_fn(model_kind)
-
-    # per-seed model init, stacked to (S, M, ...) edge params
-    inits, logits_fn = [], None
-    for s in seeds:
-        params, logits_fn = make_model(
-            model_kind, jax.random.PRNGKey(s),
-            input_shape=data.test_x.shape[1:])
-        inits.append(jax.tree.map(
-            lambda p: jnp.broadcast_to(
-                p[None], (cfg.num_edge_servers,) + p.shape), params))
-    edge0 = jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
-    param_count = sum(int(p.size) for p in
-                     jax.tree.leaves(inits[0])) // cfg.num_edge_servers
-    spec = make_round_spec(cfg, steps=steps, batch_size=batch_size,
-                           use_kernel=use_kernel, tile=tile,
-                           param_count=param_count)
-    base_keys = jnp.stack([jax.random.PRNGKey(s + 11) for s in seeds])
-    test_x = jnp.asarray(data.test_x)
-    test_y = jnp.asarray(data.test_y)
+    setup = prepare_training(cfg, model_kind, batch_size,
+                             batches_per_epoch, data, seeds,
+                             use_kernel=use_kernel, tile=tile)
+    data, stacked, batch = setup.data, setup.stacked, setup.batch
+    loss_fn, logits_fn = setup.loss_fn, setup.logits_fn
+    edge0, base_keys, spec = setup.edge_seed, setup.base_keys, setup.spec
+    test_x, test_y = setup.test_x, setup.test_y
     ends = _block_bounds(horizon, eval_every)
     if device_env:
         env_statics = simmod.init_statics_multi(env.spec, seeds)
@@ -253,9 +304,11 @@ def run_experiment_sweep(policies: Union[Sequence[str],
                     if device_env:
                         from repro.sim.engine import run_bandit_device
                         pre = run_bandit_device(pol, env.spec, seeds,
-                                                horizon)
+                                                horizon,
+                                                policy_seeds=pol_seeds)
                     else:
-                        pre = run_rounds_multi_seed(pol, batch_st, seeds)
+                        pre = run_rounds_multi_seed(pol, batch_st,
+                                                    pol_seeds)
                     slots_blocks = _block_slots(
                         pre["selections"], cfg.num_edge_servers, ends,
                         spec.slot_bucket)
@@ -273,7 +326,7 @@ def run_experiment_sweep(policies: Union[Sequence[str],
                     slots_blocks = [slot_capacity(
                         pol.spec.budget, min_cost,
                         cfg.num_clients)] * len(ends)
-            pstate = _shard_seed_axis(stack_states(pol, seeds), mesh)
+            pstate = _shard_seed_axis(stack_states(pol, pol_seeds), mesh)
             if device_env:
                 out = _run_fused_device(pol, spec, slots_blocks, batch,
                                         loss_fn, logits_fn, stacked,
@@ -287,7 +340,7 @@ def run_experiment_sweep(policies: Union[Sequence[str],
         else:
             out = _run_host(pol, spec, loss_fn, logits_fn, data, edge0,
                             _realized_rounds(), test_x, test_y, seeds,
-                            ends, slots_per_es)
+                            pol_seeds, ends, slots_per_es)
         if pol.jax_capable and slots_per_es is not None:
             # a pinned capacity the solver exceeded would have silently
             # dropped the overflow clients from training (pack_assignment
@@ -306,6 +359,15 @@ def run_experiment_sweep(policies: Union[Sequence[str],
          result.participants[name], result.selections[name],
          result.explored[name]) = out
     return result
+
+
+def run_experiment_sweep(*args, **kwargs) -> SweepResult:
+    """Deprecated alias of the sweep engine; use ``repro.run`` with an
+    ``ExperimentSpec`` (``repro.api``) instead."""
+    from repro.api.deprecation import warn_deprecated
+    warn_deprecated("run_experiment_sweep",
+                    "repro.run(ExperimentSpec(...)) / spec.grid(...)")
+    return sweep_experiments(*args, **kwargs)
 
 
 def _collect_blocks(outs):
@@ -361,7 +423,7 @@ def _run_fused_device(pol, spec, slots_blocks, batch, loss_fn, logits_fn,
 
 
 def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
-              test_x, test_y, seeds, ends, slots):
+              test_x, test_y, seeds, pol_seeds, ends, slots):
     """Sequential fallback for host policies: per-seed adapter loop over
     the same realized rounds, training through the host-loop batched
     engine (per-block exact capacity unless ``slots`` pins one)."""
@@ -375,7 +437,7 @@ def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
     sels = np.zeros((len(seeds), horizon, n), np.int64)
     expl = np.zeros((len(seeds), horizon), bool)
     for si, s in enumerate(seeds):
-        adapter = PolicyAdapter(pol, seed=s)
+        adapter = PolicyAdapter(pol, seed=pol_seeds[si])
         engine = BatchedRoundEngine(spec, loss_fn, data, s,
                                     slots_per_es=slots)
         edge = jax.tree.map(lambda a: jnp.copy(a[si]), edge0)

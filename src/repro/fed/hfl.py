@@ -88,6 +88,13 @@ class HFLHistory:
 class HFLSimulation:
     """Runs HFL with a pluggable client-selection policy.
 
+    Deprecated as an entry point: ``repro.run`` with an
+    ``ExperimentSpec`` (``repro.api``) covers single- and multi-seed
+    policy-in-the-loop training on every tier. The class itself remains
+    the host-loop engine and the parity oracle for the fused tiers —
+    its round-level API (``round``/``evaluate``, the ``legacy`` backend
+    and host sampler) is what the parity chain is anchored to.
+
     ``policy`` accepts the legacy class interface (``BasePolicy`` or a
     ``repro.policies.PolicyAdapter``) or a registry name string
     (e.g. ``"cocs"``), so every entry point constructs policies one way.
@@ -96,6 +103,9 @@ class HFLSimulation:
     def __init__(self, cfg: HFLSimConfig, policy,
                  data: Optional[FederatedDataset] = None,
                  sim: Optional[HFLNetworkSim] = None):
+        from repro.api.deprecation import warn_deprecated
+        warn_deprecated("HFLSimulation",
+                        "repro.run(ExperimentSpec(..., train=TrainSpec()))")
         self.cfg = cfg
         if cfg.backend not in ("batched", "legacy"):
             raise ValueError(f"unknown backend {cfg.backend!r}")
@@ -108,7 +118,7 @@ class HFLSimulation:
                 **_policy_kwargs(cfg.exp, policy.lower()))
         self.policy = policy
         e = cfg.exp
-        kind = "mnist" if cfg.model_kind == "logreg" else "cifar"
+        kind = "mnist" if cfg.model_kind.startswith("logreg") else "cifar"
         self.data = data or FederatedDataset.synthetic(
             e.num_clients, kind=kind, seed=cfg.seed)
         self.sim = sim or HFLNetworkSim(e, seed=cfg.seed)

@@ -25,22 +25,28 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.paper_hfl import CIFAR10_NONCONVEX, MNIST_CONVEX
 from repro.data.tokens import client_token_shards
 from repro.fed.distributed import make_train_step
-from repro.fed.hfl import HFLSimConfig, HFLSimulation
 from repro.models import registry as R
 
 
 def run_paper(args) -> int:
+    from repro import api
+    from repro.data.federated import FederatedDataset
     exp = CIFAR10_NONCONVEX if args.nonconvex else MNIST_CONVEX
-    cfg = HFLSimConfig(exp=exp,
-                       model_kind="cnn" if args.nonconvex else "logreg",
-                       rounds=args.rounds, seed=args.seed,
-                       eval_every=args.eval_every)
-    spec = policies.PolicySpec.from_experiment(exp, args.rounds)
-    policy = policies.make_legacy("cocs", spec, seed=args.seed, h_t=exp.h_t)
-    sim = HFLSimulation(cfg, policy)
-    hist = sim.run(progress=lambda r, a: print(
-        f"round {r:4d}  test_acc {a:.4f}", flush=True))
-    print(f"final accuracy: {hist.accuracy[-1]:.4f}")
+    spec = api.ExperimentSpec(
+        policy=api.PolicySpec("cocs", options=(("h_t", exp.h_t),)),
+        env=api.env_spec_from_config(exp),
+        train=api.TrainSpec(model="cnn" if args.nonconvex else "logreg"),
+        eval=api.EvalSpec(args.eval_every),
+        horizon=args.rounds, seeds=(args.seed,))
+    # seed-keyed synthetic data, matching the historical HFLSimulation
+    # default (the sweep engine's own fallback is seed=0 shared data)
+    data = FederatedDataset.synthetic(
+        exp.num_clients, kind="cifar" if args.nonconvex else "mnist",
+        seed=args.seed)
+    res = api.run(spec, data=data)   # tier 3: fused policy+training+eval
+    for r, a in zip(res.eval_rounds, res.accuracy[0]):
+        print(f"round {int(r):4d}  test_acc {a:.4f}", flush=True)
+    print(f"final accuracy: {res.accuracy[0][-1]:.4f}")
     return 0
 
 

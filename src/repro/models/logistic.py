@@ -25,6 +25,26 @@ def logreg_logits(params: dict, x: jax.Array) -> jax.Array:
     return x @ params["w"] + params["b"]
 
 
+def init_logreg_t(key, num_features: int = 784,
+                  num_classes: int = 10) -> dict:
+    """Transposed-layout logistic regression: ``wt`` is (classes,
+    features). Mathematically identical to ``init_logreg`` (zeros init,
+    ``wt == w.T``); the layout changes which GEMM the backward pass
+    lowers to — the slot-batched ``dW = x^T g`` einsum that dominates
+    CPU local SGD becomes a natural ``(C, B) x (B, F)`` product
+    (~1.3x on the isolated step). Opt in via ``kind="logreg-t"`` or
+    ``repro.api.TrainSpec(transposed_gemm=True)``.
+    """
+    return {
+        "wt": jnp.zeros((num_classes, num_features), jnp.float32),
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+
+
+def logreg_t_logits(params: dict, x: jax.Array) -> jax.Array:
+    return x @ params["wt"].T + params["b"]
+
+
 def init_cnn(key, height: int = 32, width: int = 32, channels: int = 3,
              num_classes: int = 10) -> dict:
     """Paper's CIFAR CNN: 2x [5x5 conv(64) + 2x2 maxpool], FC 384, FC 192."""
@@ -79,13 +99,15 @@ def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
 
 @functools.lru_cache(maxsize=None)
 def make_loss_fn(kind: str):
-    """kind: 'logreg' | 'cnn'. Returns loss(params, batch) -> scalar.
+    """kind: 'logreg' | 'logreg-t' | 'cnn'. Returns loss(params, batch)
+    -> scalar.
 
     Cached so every caller gets the *same* callable per kind — jit caches
     (and the batched-HFL compiled-block cache) key on function identity,
     letting independent simulations share compiled code.
     """
-    logits_fn = logreg_logits if kind == "logreg" else cnn_logits
+    logits_fn = {"logreg": logreg_logits,
+                 "logreg-t": logreg_t_logits}.get(kind, cnn_logits)
 
     def loss(params, batch) -> jax.Array:
         return softmax_xent(logits_fn(params, batch["x"]), batch["y"])
@@ -98,6 +120,9 @@ def make_model(kind: str, key, input_shape: Tuple[int, ...] = None
     if kind == "logreg":
         nf = int(input_shape[0]) if input_shape else 784
         return init_logreg(key, num_features=nf), logreg_logits
+    if kind == "logreg-t":
+        nf = int(input_shape[0]) if input_shape else 784
+        return init_logreg_t(key, num_features=nf), logreg_t_logits
     if kind == "cnn":
         h, w, c = input_shape if input_shape else (32, 32, 3)
         return init_cnn(key, height=h, width=w, channels=c), cnn_logits

@@ -113,6 +113,19 @@ class FunctionalPolicy:
     def select(self, state, rd) -> Tuple[Any, Any]:
         raise NotImplementedError
 
+    def select_with_budgets(self, state, rd, budgets) -> Tuple[Any, Any]:
+        """``select`` with the per-ES budget vector supplied per call
+        instead of baked in from ``spec.budgets()``.
+
+        jax-capable policies implement ``select`` *via* this method, so a
+        traced (M,) budget array can be batched next to the seed axis —
+        the mechanism behind on-device config-axis grids
+        (``repro.api``'s ``spec.grid(budget=[...])``). Host policies
+        keep their budget in internal state and don't support overrides.
+        """
+        raise NotImplementedError(
+            f"{self.name} does not support per-call budget overrides")
+
     def update(self, state, rd, assign, aux):
         return state
 

@@ -37,11 +37,13 @@ class Oracle(FunctionalPolicy):
         return KeyState(key=as_key(key_or_seed))
 
     def select(self, state, rd):
+        return self.select_with_budgets(state, rd, self.spec.budgets())
+
+    def select_with_budgets(self, state, rd, budgets):
         values = jnp.asarray(rd.outcomes, jnp.float32)
         costs = jnp.asarray(rd.costs, jnp.float32)
         eligible = jnp.asarray(rd.eligible, bool)
-        budgets = jnp.full(self.spec.num_edge_servers, self.spec.budget,
-                           jnp.float32)
+        budgets = jnp.asarray(budgets, jnp.float32)
         if self.spec.sqrt_utility:
             return flgreedy_assign(values, costs, budgets, eligible), {}
         return greedy_assign(values, costs, budgets, eligible), {}
@@ -58,10 +60,12 @@ class Random(FunctionalPolicy):
         return KeyState(key=as_key(key_or_seed))
 
     def select(self, state, rd):
+        return self.select_with_budgets(state, rd, self.spec.budgets())
+
+    def select_with_budgets(self, state, rd, budgets):
         key = jax.random.fold_in(state.key, jnp.asarray(rd.t, jnp.int32))
         assign = random_assign(key, jnp.asarray(rd.costs, jnp.float32),
-                               jnp.full(self.spec.num_edge_servers,
-                                        self.spec.budget, jnp.float32),
+                               jnp.asarray(budgets, jnp.float32),
                                jnp.asarray(rd.eligible, bool))
         return assign, {}
 

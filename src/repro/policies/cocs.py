@@ -68,6 +68,9 @@ class COCS(FunctionalPolicy):
         return self.k_scale * tf ** z * jnp.log(jnp.maximum(tf, 2.0))
 
     def select(self, state: COCSState, rd):
+        return self.select_with_budgets(state, rd, self.spec.budgets())
+
+    def select_with_budgets(self, state: COCSState, rd, budgets):
         cubes = self._cubes(rd.contexts)
         counts = self._gather(state.counters, cubes)           # (N, M)
         est = self._gather(state.p_hat, cubes)                 # (N, M)
@@ -81,7 +84,7 @@ class COCS(FunctionalPolicy):
                                jnp.minimum(est + bonus, 1.0))
         values = jnp.where(under, optimistic, est)
         costs = jnp.asarray(rd.costs, values.dtype)
-        budgets = jnp.asarray(self.spec.budgets(), values.dtype)
+        budgets = jnp.asarray(budgets, values.dtype)
         if self.spec.sqrt_utility:
             assign = flgreedy_assign(values, costs, budgets, eligible)
         else:

@@ -52,15 +52,21 @@ def stack_states(policy: FunctionalPolicy, seeds: Sequence[int]):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
 
 
-def policy_scan_step(policy: FunctionalPolicy):
+def policy_scan_step(policy: FunctionalPolicy, budgets=None):
     """The one-round policy body shared by every scanned engine:
     ``(state, rd) -> (state', (assign, utility, participants, explored))``.
     Used by the bandit scan below, and by the device-env bandit engine
     (``repro.sim.engine``) where ``rd`` is generated in-scan instead of
-    read from a stacked batch."""
+    read from a stacked batch. ``budgets`` optionally supplies the (M,)
+    per-ES budget vector as a traced value (``select_with_budgets``) —
+    the grid engines' batched-config path — instead of the policy's
+    baked-in ``spec.budgets()``."""
 
     def step(state, rd: Round):
-        assign, aux = policy.select(state, rd)
+        if budgets is None:
+            assign, aux = policy.select(state, rd)
+        else:
+            assign, aux = policy.select_with_budgets(state, rd, budgets)
         new_state = policy.update(state, rd, assign, aux)
         util, part = traced_utility(assign, rd.outcomes,
                                     policy.spec.num_edge_servers,
@@ -83,6 +89,51 @@ def _scan_fn(policy: FunctionalPolicy):
                 "final_state": final}
 
     return run
+
+
+def _grid_scan_fn(policy: FunctionalPolicy):
+    """``_scan_fn`` with a per-run scalar budget: the budget rides as a
+    traced argument (``select_with_budgets``) instead of a baked constant,
+    so vmapping this function batches *config cells* exactly like seeds —
+    the engine behind ``repro.api`` grids and their fused pre-scans."""
+    num_es = policy.spec.num_edge_servers
+
+    def run(state0, batch: Round, budget):
+        step = policy_scan_step(
+            policy, jnp.full((num_es,), budget, jnp.float32))
+        final, (assigns, utils, parts, explored) = jax.lax.scan(
+            step, state0, batch)
+        return {"selections": assigns, "utilities": utils,
+                "participants": parts, "explored": explored,
+                "final_state": final}
+
+    return run
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_grid(policy: FunctionalPolicy):
+    return jax.jit(jax.vmap(_grid_scan_fn(policy)))
+
+
+def run_rounds_grid(policy: FunctionalPolicy, batch: Round, budgets,
+                    policy_seeds: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Batched bandit runs over config cells x seeds in one dispatch.
+
+    ``batch`` is a ``Round`` pytree with (B, T, ...) leaves where B
+    enumerates flattened (config cell, seed) pairs — each element carries
+    its *own* realized rounds (a deadline axis changes the outcomes) —
+    and ``budgets`` is the matching (B,) per-ES budget scalar. Returns
+    host arrays with the leading B axis; jax-capable policies only.
+    """
+    if not policy.jax_capable:
+        raise ValueError(f"{policy.name} is a host policy; grid batching "
+                         "requires jax_capable select/update")
+    assert batch.costs.shape[0] == len(policy_seeds)
+    state0 = stack_states(policy, policy_seeds)
+    out = _compiled_grid(policy)(
+        state0, batch, jnp.asarray(np.asarray(budgets, np.float32)))
+    return {k: np.asarray(v) if k != "final_state" else v
+            for k, v in out.items()}
 
 
 @functools.lru_cache(maxsize=64)

@@ -73,19 +73,23 @@ def available() -> Tuple[str, ...]:
 
 
 def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
-         **overrides):
+         true_p: str = "mc", **overrides):
     """``repro.envs.make``-style factory for device environments.
 
     ``name`` is a preset (see ``available()``), ``cfg`` overrides the
     preset's experiment config, and scenario knobs can be overridden by
-    keyword (e.g. ``sim.make("paper", mobility=0.8)``).
+    keyword (e.g. ``sim.make("paper", mobility=0.8)``). ``true_p``
+    selects the ground-truth participation estimator: ``"mc"`` (the
+    historical Monte-Carlo fading pairs) or ``"analytic"`` (exact Eq. 6
+    integral — no MC draw tensors, ~the whole round-generator hot spot).
     """
     from repro.sim.core import DeviceEnv
     from repro.sim.spec import SimSpec, preset
     use_cfg, scen = preset(name, cfg, **overrides)
     return DeviceEnv(cfg=use_cfg, scenario=scen,
                      spec=SimSpec.from_env(use_cfg, scen,
-                                           mc_true_p=mc_true_p))
+                                           mc_true_p=mc_true_p,
+                                           true_p=true_p))
 
 
 def resolve(env, cfg: Optional[object] = None):

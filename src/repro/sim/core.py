@@ -30,6 +30,7 @@ from repro.envs.scenarios import ScenarioSpec
 from repro.policies.base import Round
 from repro.sim import draws
 from repro.sim.spec import SimSpec
+from repro.sim.truep import analytic_true_p
 
 
 class SimStatics(NamedTuple):
@@ -114,7 +115,12 @@ def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
     """
     n, m = spec.num_clients, spec.num_edge_servers
     t = jnp.asarray(t, jnp.int32)
-    dr = draws.round_draws(seed, t, n, m, spec.mc_true_p)
+    analytic = spec.true_p == "analytic"
+    # analytic mode draws zero MC fading pairs: the (K, N, M) tensors are
+    # the round generator's dominant cost, and the tags are counter-based
+    # so skipping them never shifts any other stream
+    dr = draws.round_draws(seed, t, n, m,
+                           0 if analytic else spec.mc_true_p)
     pos = jnp.clip(pos + spec.mobility * dr.move, -spec.area, spec.area)
     es = _es_pos(spec)
     d = jnp.sqrt(jnp.sum((pos[:, None] - es[None]) ** 2, -1))   # (N, M) km
@@ -145,10 +151,18 @@ def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
                 / (spec.compute_high - spec.compute_low))
     contexts = jnp.stack(
         [phi_rate, jnp.broadcast_to(phi_comp[:, None], (n, m))], axis=-1)
-    tau_mc = _latency(spec, bandwidth[None, :, None],
-                      compute[None, :, None], dr.mc_dt, dr.mc_ut, g0[None])
-    true_p = jnp.mean((tau_mc <= spec.deadline_s).astype(jnp.float32),
-                      axis=0)
+    if analytic:
+        true_p = analytic_true_p(
+            bandwidth[:, None], compute[:, None], g0, tx_w=spec.tx_w,
+            noise_psd_w=spec.noise_psd_w, update_bits=spec.update_bits,
+            workload=spec.workload, deadline_s=spec.deadline_s, xp=jnp)
+        true_p = true_p.astype(jnp.float32)
+    else:
+        tau_mc = _latency(spec, bandwidth[None, :, None],
+                          compute[None, :, None], dr.mc_dt, dr.mc_ut,
+                          g0[None])
+        true_p = jnp.mean((tau_mc <= spec.deadline_s).astype(jnp.float32),
+                          axis=0)
     rd = Round(t=t, contexts=contexts.astype(jnp.float32),
                eligible=eligible, costs=costs.astype(jnp.float32),
                outcomes=outcomes, true_p=true_p,
@@ -232,7 +246,8 @@ class DeviceEnv:
     def host_env(self):
         """The host parity oracle over the same (cfg, scenario)."""
         from repro.envs.base import HFLEnv
-        return HFLEnv(cfg=self.cfg, spec=self.scenario)
+        return HFLEnv(cfg=self.cfg, spec=self.scenario,
+                      true_p=self.spec.true_p)
 
     def make_sim(self, seed: int = 0):
         return self.host_env().make_sim(seed)

@@ -29,6 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the randomness contract, stamped into RunResult provenance (repro.api):
+# bump the suffix if tags, key derivation or draw shapes ever change
+SCHEDULE_ID = "threefry2x32/(seed,t,tag)/v1"
+
 # fold_in tags — frozen; append, never renumber
 _INIT, _ROUND = 0, 1
 _POS, _PRICE, _BW0, _COMP0, _PERM, _PHASE = 0, 1, 2, 3, 4, 5

@@ -13,7 +13,7 @@ cohort sizes the host path cannot stack.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,18 +49,75 @@ def _compiled_bandit(policy: FunctionalPolicy, spec: SimSpec,
     return jax.jit(jax.vmap(run, in_axes=(0, 0)))
 
 
+@functools.lru_cache(maxsize=64)
+def _compiled_bandit_grid(policy: FunctionalPolicy, spec: SimSpec,
+                          horizon: int):
+    """``_compiled_bandit`` over flattened (config cell, seed) pairs:
+    per-element budget rides into the solver as data (the shared
+    ``policy_scan_step`` body with traced budgets) and per-element
+    deadlines re-threshold the realized Eq. 5 latencies — the identical
+    float32 comparison a ``SimSpec`` with that ``deadline_s`` performs,
+    so a grid element is bitwise the sequential per-config run."""
+    num_es = policy.spec.num_edge_servers
+
+    def run(seed, pstate0, budget, deadline):
+        statics = init_statics(spec, seed)
+        pstep = policy_scan_step(
+            policy, jnp.full((num_es,), budget, jnp.float32))
+
+        def step(carry, t):
+            pos, pstate = carry
+            pos, sr = sim_round(spec, seed, statics, pos, t)
+            rd = sr.round._replace(
+                outcomes=(sr.round.latency <= deadline
+                          ).astype(jnp.float32))
+            pstate, outs = pstep(pstate, rd)
+            return (pos, pstate), outs
+
+        (_, final), (assigns, utils, parts, explored) = jax.lax.scan(
+            step, (statics.pos0, pstate0),
+            jnp.arange(horizon, dtype=jnp.int32))
+        return {"selections": assigns, "utilities": utils,
+                "participants": parts, "explored": explored,
+                "final_state": final}
+
+    return jax.jit(jax.vmap(run, in_axes=(0, 0, 0, 0)))
+
+
+def run_bandit_device_grid(policy: FunctionalPolicy, spec: SimSpec,
+                           seeds, budgets, deadlines, horizon: int,
+                           policy_seeds) -> Dict[str, np.ndarray]:
+    """Config-grid bandit sweep with on-device env generation: one
+    dispatch over flattened (cell, seed) elements. ``seeds``/``budgets``/
+    ``deadlines``/``policy_seeds`` all have length B."""
+    if not policy.jax_capable:
+        raise ValueError(f"{policy.name} is a host policy; the device "
+                         "bandit engine requires jax-capable select/update")
+    state0 = stack_states(policy, [int(s) for s in policy_seeds])
+    out = _compiled_bandit_grid(policy, spec, int(horizon))(
+        jnp.asarray(np.asarray(seeds, np.uint32)), state0,
+        jnp.asarray(np.asarray(budgets, np.float32)),
+        jnp.asarray(np.asarray(deadlines, np.float32)))
+    return {k: np.asarray(v) if k != "final_state" else v
+            for k, v in out.items()}
+
+
 def run_bandit_device(policy: FunctionalPolicy, spec: SimSpec,
-                      seeds: Sequence[int],
-                      horizon: int) -> Dict[str, np.ndarray]:
+                      seeds: Sequence[int], horizon: int,
+                      policy_seeds: Optional[Sequence[int]] = None
+                      ) -> Dict[str, np.ndarray]:
     """Multi-seed bandit sweep with on-device env generation. Matches
     ``run_rounds_multi_seed(policy, env.rollout_multi(seeds, horizon),
     seeds)`` up to env float32-vs-float64 realization tolerance; returns
-    host arrays with a leading S axis."""
+    host arrays with a leading S axis. ``policy_seeds`` decouples the
+    policy init seeds from the env seeds (legacy per-policy offsets)."""
     if not policy.jax_capable:
         raise ValueError(f"{policy.name} is a host policy; the device "
                          "bandit engine requires jax-capable select/update")
     seed_arr = jnp.asarray(np.asarray(seeds, np.uint32))
-    state0 = stack_states(policy, [int(s) for s in seeds])
+    state0 = stack_states(policy, [int(s) for s in
+                                   (policy_seeds if policy_seeds is not None
+                                    else seeds)])
     out = _compiled_bandit(policy, spec, int(horizon))(seed_arr, state0)
     return {k: np.asarray(v) if k != "final_state" else v
             for k, v in out.items()}

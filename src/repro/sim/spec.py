@@ -67,7 +67,10 @@ class SimSpec:
     surge_discount: float = 0.3
     arrival_period: int = 0
     arrival_len: int = 1
-    # true_p Monte-Carlo fidelity
+    # ground-truth participation probability: "mc" (Monte Carlo over
+    # mc_true_p fading pairs, the historical estimator) or "analytic"
+    # (exact Eq. 6 integral, repro.sim.truep — no MC draw tensors at all)
+    true_p: str = "mc"
     mc_true_p: int = 128
 
     def min_cost(self) -> float:
@@ -85,7 +88,9 @@ class SimSpec:
 
     @classmethod
     def from_env(cls, cfg: HFLExperimentConfig, scen: ScenarioSpec,
-                 mc_true_p: int = 128) -> "SimSpec":
+                 mc_true_p: int = 128, true_p: str = "mc") -> "SimSpec":
+        if true_p not in ("mc", "analytic"):
+            raise ValueError(f"unknown true_p mode {true_p!r}")
         # derived constants come from the host oracle's own helpers so
         # the two implementations can never desynchronize
         from repro.core.network import _dbm_to_watt, context_rate_hi
@@ -118,7 +123,7 @@ class SimSpec:
             arrival_len=(max(1, int(round(scen.arrival_duty
                                           * scen.arrival_period)))
                          if scen.arrival_period > 0 else 1),
-            mc_true_p=mc_true_p,
+            true_p=true_p, mc_true_p=mc_true_p,
         )
 
 

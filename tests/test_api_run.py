@@ -1,0 +1,214 @@
+"""``repro.run`` facade: tier routing, legacy-shim bitwise parity, and
+device-batched grid parity against sequential per-config runs."""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro import api, envs, policies
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.core.utility import (POLICY_TABLE, _policy_kwargs,
+                                run_bandit_experiment, run_bandit_sweep)
+
+HORIZON = 8
+SEEDS = (0, 1)
+
+
+def _legacy_policy(reg_name, horizon=HORIZON, budget=None):
+    spec = policies.PolicySpec.from_experiment(MNIST_CONVEX, horizon,
+                                               budget=budget)
+    return policies.make(reg_name, spec,
+                         **_policy_kwargs(MNIST_CONVEX, reg_name))
+
+
+# -- facade ------------------------------------------------------------------
+
+
+def test_run_tier1_single_seed_bitwise():
+    """Facade tier 1 == the legacy engine path (run_rounds) bitwise."""
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                              env=api.EnvSpec("paper"),
+                              horizon=HORIZON, seeds=(0,))
+    res = repro.run(spec)
+    assert (res.tier, res.env_backend) == (1, "host")
+    assert res.accuracy is None and res.draw_schedule
+    old = policies.run_rounds(
+        _legacy_policy("cocs"),
+        envs.make("paper", MNIST_CONVEX).rollout(0, HORIZON), seed=0)
+    np.testing.assert_array_equal(res.selections[0], old["selections"])
+    np.testing.assert_array_equal(res.utilities[0], old["utilities"])
+
+
+def test_run_rejects_non_spec():
+    with pytest.raises(TypeError, match="ExperimentSpec"):
+        repro.run({"policy": "cocs"})
+
+
+def test_run_result_provenance():
+    spec = api.ExperimentSpec(horizon=4, seeds=(0,))
+    res = repro.run(spec)
+    assert res.spec == spec                  # resolved spec rides along
+    from repro.sim.draws import SCHEDULE_ID
+    assert res.draw_schedule == SCHEDULE_ID
+    with pytest.raises(ValueError, match="bandit-only"):
+        res.final_accuracy()
+
+
+# -- legacy shims ------------------------------------------------------------
+
+
+def test_shim_run_bandit_experiment_bitwise():
+    """The deprecated driver reproduces its old engine calls bitwise for
+    jax (cocs/oracle/random) AND host (cucb/linucb) policies."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = run_bandit_experiment(MNIST_CONVEX, horizon=HORIZON, seed=0)
+    rounds = envs.make("paper", MNIST_CONVEX).rollout(0, HORIZON)
+    for name in res.policies:
+        reg, off = POLICY_TABLE[name]
+        old = policies.run_rounds(_legacy_policy(reg), rounds, seed=off)
+        np.testing.assert_array_equal(res.selections[name],
+                                      old["selections"], err_msg=name)
+        np.testing.assert_array_equal(res.utilities[name],
+                                      old["utilities"], err_msg=name)
+        np.testing.assert_array_equal(res.explored[name],
+                                      old["explored"], err_msg=name)
+
+
+def test_shim_run_bandit_experiment_budget_deadline():
+    """Budget/deadline overrides flow through the spec exactly as the
+    old driver's dataclass replaces did."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = run_bandit_experiment(MNIST_CONVEX, horizon=HORIZON, seed=3,
+                                    which=["COCS"], budget=5.0,
+                                    deadline=2.0)
+    import dataclasses as dc
+    cfg = dc.replace(MNIST_CONVEX, deadline_s=2.0)
+    pol = policies.make("cocs",
+                        policies.PolicySpec.from_experiment(cfg, HORIZON,
+                                                            budget=5.0),
+                        **_policy_kwargs(cfg, "cocs"))
+    old = policies.run_rounds(pol, envs.make("paper", cfg).rollout(
+        3, HORIZON), seed=3)
+    np.testing.assert_array_equal(res.selections["COCS"],
+                                  old["selections"])
+
+
+def test_shim_run_bandit_sweep_bitwise():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        sweep = run_bandit_sweep(MNIST_CONVEX, horizon=HORIZON,
+                                 seeds=list(SEEDS))
+    env = envs.make("paper", MNIST_CONVEX)
+    batch = policies.stack_rounds_multi(
+        [env.rollout(s, HORIZON) for s in SEEDS])
+    for name in ("Oracle", "COCS", "Random"):
+        reg, off = POLICY_TABLE[name]
+        old = policies.run_rounds_multi_seed(
+            _legacy_policy(reg), batch, [s + off for s in SEEDS])
+        np.testing.assert_array_equal(sweep[name], old["utilities"],
+                                      err_msg=name)
+
+
+def test_shims_warn_deprecation():
+    from repro.api import deprecation
+    deprecation._warned.discard("run_bandit_experiment")
+    with pytest.warns(DeprecationWarning, match="repro.run"):
+        run_bandit_experiment(MNIST_CONVEX, horizon=2, seed=0,
+                              which=["Random"])
+
+
+# -- grids -------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bandit_grid_result():
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                              env=api.EnvSpec("paper"),
+                              horizon=HORIZON, seeds=SEEDS)
+    grid = spec.grid(budget=[2.5, 3.5], deadline=[2.0, 3.0])
+    return grid, repro.run(grid)
+
+
+def test_grid_batched_matches_sequential_bitwise(bandit_grid_result):
+    """Every device-batched (budget, deadline) cell == the equivalent
+    standalone sequential run, bitwise on selections."""
+    grid, gres = bandit_grid_result
+    assert gres.shape == (2, 2) and len(gres.results) == 4
+    for cell, res in zip(gres.cells, gres.results):
+        assert res.batched_axes == ("budget", "deadline")
+        seq = repro.run(cell)
+        np.testing.assert_array_equal(res.selections, seq.selections)
+        np.testing.assert_allclose(res.utilities, seq.utilities,
+                                   rtol=1e-6)
+
+
+def test_grid_cell_indexing(bandit_grid_result):
+    grid, gres = bandit_grid_result
+    assert gres.at(1, 0) is gres.results[2]          # C order
+    assert gres.at(1, 0).spec.policy.budget == 3.5
+    assert gres.at(1, 0).spec.env.deadline == 2.0
+    assert gres.cumulative_utility().shape == (2, 2, len(SEEDS))
+
+
+def test_grid_budget_monotone(bandit_grid_result):
+    """Sanity: a larger budget can only admit more clients per round."""
+    _, gres = bandit_grid_result
+    parts = np.stack([r.participants.sum() for r in gres.results]
+                     ).reshape(2, 2)
+    assert (parts[1] >= parts[0]).all()
+
+
+def test_grid_policy_axis_sequential_fallback():
+    """A non-batchable axis (policy) still runs — sequentially — behind
+    the same GridResult, including host-state policies (tier 2 is never
+    batched)."""
+    spec = api.ExperimentSpec(env=api.EnvSpec("paper"), horizon=4,
+                              seeds=(0,))
+    gres = repro.run(spec.grid(policy=["oracle", "cucb"]))
+    assert [r.spec.policy.name for r in gres.results] == ["oracle", "cucb"]
+    assert all(r.batched_axes == () for r in gres.results)
+    seq = repro.run(gres.cells[1])
+    np.testing.assert_array_equal(gres.results[1].selections,
+                                  seq.selections)
+
+
+def test_grid_host_policy_batchable_axis_falls_back():
+    """A host policy with only batchable axes must take the sequential
+    fallback, not crash in the batched engines."""
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cucb"),
+                              env=api.EnvSpec("paper"), horizon=4,
+                              seeds=(0,))
+    gres = repro.run(spec.grid(budget=[2.5, 3.5]))
+    assert len(gres.results) == 2
+    assert all(r.batched_axes == () for r in gres.results)
+    seq = repro.run(gres.cells[0])
+    np.testing.assert_array_equal(gres.results[0].selections,
+                                  seq.selections)
+
+
+def test_grid_fused_training(tmp_path):
+    """Fused (tier 3) budget x deadline grid: batched cells match the
+    sequential per-config runs bitwise on selections and to float
+    tolerance on accuracy; the grid itself round-trips through JSON."""
+    from repro.data.federated import FederatedDataset
+    data = FederatedDataset.synthetic(MNIST_CONVEX.num_clients,
+                                      kind="mnist", seed=0)
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                              env=api.EnvSpec("paper"),
+                              train=api.TrainSpec(),
+                              eval=api.EvalSpec(4),
+                              horizon=HORIZON, seeds=SEEDS)
+    grid = spec.grid(budget=[2.5, 3.5])
+    path = tmp_path / "grid.json"
+    path.write_text(grid.to_json())
+    grid = api.ExperimentGrid.from_json(path.read_text())
+    gres = repro.run(grid, data=data)
+    for cell, res in zip(gres.cells, gres.results):
+        assert res.tier == 3 and res.batched_axes == ("budget",)
+        seq = repro.run(cell, data=data)
+        np.testing.assert_array_equal(res.selections, seq.selections)
+        np.testing.assert_allclose(res.accuracy, seq.accuracy, atol=1e-4)
+        np.testing.assert_array_equal(res.eval_rounds, seq.eval_rounds)

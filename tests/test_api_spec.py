@@ -1,0 +1,140 @@
+"""ExperimentSpec serialization contract: dict/JSON round-trips, grid
+expansion ordering, axis application, and config resolution."""
+import dataclasses as dc
+import json
+
+import pytest
+
+from repro import api
+from repro.configs.paper_hfl import CONFIGS, MNIST_CONVEX, get_config
+
+
+def _full_spec():
+    return api.ExperimentSpec(
+        policy=api.PolicySpec(name="cocs", budget=5.0, seed_offset=2,
+                              options=(("alpha", 1.0), ("h_t", 4))),
+        env=api.EnvSpec(scenario="flash-crowd", backend="host",
+                        config="mnist-convex", deadline=2.5,
+                        true_p="analytic", mc_true_p=64,
+                        overrides=(("lr", 0.01),)),
+        train=api.TrainSpec(model="logreg", batch_size=16,
+                            batches_per_epoch=1, transposed_gemm=True),
+        eval=api.EvalSpec(eval_every=10),
+        horizon=123, seeds=(0, 3, 7), shard_seeds=False)
+
+
+def test_dict_round_trip():
+    spec = _full_spec()
+    d = spec.to_dict()
+    assert api.ExperimentSpec.from_dict(d) == spec
+    # options/overrides serialize as JSON objects, not tuple blobs
+    assert d["policy"]["options"] == {"alpha": 1.0, "h_t": 4}
+    assert d["env"]["overrides"] == {"lr": 0.01}
+    assert d["seeds"] == [0, 3, 7]
+
+
+def test_json_round_trip():
+    spec = _full_spec()
+    s = spec.to_json()
+    json.loads(s)                                  # valid JSON
+    assert api.ExperimentSpec.from_json(s) == spec
+    # default (bandit-only) spec round-trips the None train
+    bandit = api.ExperimentSpec()
+    assert bandit.train is None
+    assert api.ExperimentSpec.from_json(bandit.to_json()) == bandit
+
+
+def test_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown field"):
+        api.ExperimentSpec.from_dict({"horizon": 10, "bogus": 1})
+    with pytest.raises(ValueError, match="unknown field"):
+        api.PolicySpec.from_dict({"nmae": "cocs"})
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="horizon"):
+        api.ExperimentSpec(horizon=0)
+    with pytest.raises(ValueError, match="seeds"):
+        api.ExperimentSpec(seeds=())
+    with pytest.raises(ValueError, match="true_p"):
+        api.ExperimentSpec(env=api.EnvSpec(true_p="bogus"))
+    with pytest.raises(ValueError, match="backend"):
+        api.ExperimentSpec(env=api.EnvSpec(backend="gpu"))
+    with pytest.raises(ValueError, match="transposed_gemm"):
+        api.TrainSpec(model="cnn", transposed_gemm=True).model_kind
+
+
+def test_grid_expansion_ordering():
+    """C-order expansion: last-named axis varies fastest, coords() and
+    expand() stay aligned, and cells reflect their axis values."""
+    spec = api.ExperimentSpec(horizon=10)
+    grid = spec.grid(budget=[1.0, 2.0], deadline=[3.0, 4.0, 5.0])
+    assert grid.shape == (2, 3)
+    assert grid.axis_names == ("budget", "deadline")
+    cells = grid.expand()
+    coords = grid.coords()
+    assert len(cells) == 6
+    expect = [(1.0, 3.0), (1.0, 4.0), (1.0, 5.0),
+              (2.0, 3.0), (2.0, 4.0), (2.0, 5.0)]
+    assert list(coords) == expect
+    for cell, (b, d) in zip(cells, expect):
+        assert cell.policy.budget == b
+        assert cell.env.deadline == d
+        # everything else untouched
+        assert cell.horizon == 10 and cell.seeds == spec.seeds
+
+
+def test_grid_policy_axis_and_round_trip():
+    spec = api.ExperimentSpec(horizon=10)
+    grid = spec.grid(policy=["oracle", "cocs"], budget=[1.0, 2.0])
+    names = [c.policy.name for c in grid.expand()]
+    assert names == ["oracle", "oracle", "cocs", "cocs"]
+    g2 = api.ExperimentGrid.from_json(grid.to_json())
+    assert g2 == grid
+    assert g2.expand() == grid.expand()
+
+
+def test_grid_unknown_axis():
+    with pytest.raises(KeyError, match="unknown grid axis"):
+        api.ExperimentSpec().grid(learning_rate=[0.1])
+
+
+def test_env_spec_from_config_overrides():
+    cfg = dc.replace(MNIST_CONVEX, lr=0.02, budget=7.0)
+    es = api.env_spec_from_config(cfg, scenario="paper")
+    assert es.config == "mnist-convex"
+    assert dict(es.overrides) == {"lr": 0.02, "budget": 7.0}
+    # resolution reproduces the original object exactly
+    assert api.resolve_config(es) == cfg
+    # an unmodified registered config needs no overrides
+    assert api.env_spec_from_config(MNIST_CONVEX).overrides == ()
+
+
+def test_config_registry():
+    assert get_config("mnist-convex") is MNIST_CONVEX
+    assert set(CONFIGS) >= {"mnist-convex", "cifar10-nonconvex",
+                            "mnist-metropolis-1k", "mnist-bursty-1k"}
+    with pytest.raises(KeyError, match="unknown experiment config"):
+        get_config("nope")
+
+
+def test_tier_selection():
+    """Tier is derivable from the spec alone (policy capability + env
+    backend + presence of training)."""
+    def tier_of(spec):
+        env = api.build_env(spec.env)
+        pol = api.build_policy(spec.policy, env.cfg, spec.horizon)
+        return api.select_tier(spec, pol, env)
+
+    bandit = api.ExperimentSpec(horizon=4)
+    assert tier_of(bandit) == 1
+    host_loop = dc.replace(bandit, policy=api.PolicySpec("cucb"),
+                           train=api.TrainSpec())
+    assert tier_of(host_loop) == 2
+    fused = dc.replace(bandit, train=api.TrainSpec())
+    assert tier_of(fused) == 3
+    device = dc.replace(fused, env=api.EnvSpec("paper", backend="device"))
+    assert tier_of(device) == 4
+    # device-only scenarios auto-select the device backend
+    auto = dc.replace(fused, env=api.EnvSpec("metropolis-1k"))
+    assert tier_of(auto) == 4

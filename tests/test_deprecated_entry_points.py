@@ -1,0 +1,99 @@
+"""Guard: no NEW internal imports of the deprecated entry points.
+
+``run_bandit_experiment`` / ``run_bandit_sweep`` / ``run_experiment_sweep``
+/ ``HFLSimulation`` survive only as deprecation shims (or, for
+``HFLSimulation``, as the host-loop parity oracle). Everything else must
+go through ``repro.run`` + ``repro.api``. This test enumerates the
+exhaustive allowlist of files that may still reference each name — the
+defining/shim modules and the parity oracles that exist to check the
+facade against the legacy engines. Adding a reference anywhere else
+fails here; extend the allowlist only for a new parity surface.
+"""
+import ast
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# name -> files (relative to repo root) allowed to mention it
+ALLOWED = {
+    "run_bandit_experiment": {
+        "src/repro/core/utility.py",        # the shim itself
+        "src/repro/core/__init__.py",       # re-export for back-compat
+        "tests/test_api_run.py",            # shim-vs-engine parity
+        "tests/test_cocs.py",               # legacy parity suite
+        "tests/test_system.py",             # Fig. 3 system test via shim
+    },
+    "run_bandit_sweep": {
+        "src/repro/core/utility.py",
+        "src/repro/core/__init__.py",
+        "tests/test_api_run.py",
+        "tests/test_policies_registry.py",
+    },
+    "run_experiment_sweep": {
+        "src/repro/experiment/sweep.py",    # the shim itself
+        "src/repro/experiment/__init__.py",
+    },
+    "HFLSimulation": {
+        "src/repro/fed/hfl.py",             # the class (tier-2 oracle)
+        "src/repro/fed/__init__.py",
+        "tests/test_fed.py",                # legacy-backend parity
+        "tests/test_fed_batched.py",        # batched-vs-legacy parity
+        "tests/test_hfl_history.py",
+        "tests/test_experiment_fused.py",   # fused-vs-host-loop parity
+        "benchmarks/sweep_training.py",     # sequential baseline row
+        "benchmarks/fig4_training.py",      # backend A/B benchmark
+        "benchmarks/fig2_participation.py",  # custom (non-registry) policy
+    },
+}
+
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+
+
+def _uses(tree, name: str) -> bool:
+    """True when ``name`` is imported, referenced or defined as code —
+    docstring/comment mentions don't count (they are how the shims point
+    at their replacement)."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and node.id == name:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr == name:
+            return True
+        if isinstance(node, ast.ImportFrom) and any(
+                a.name == name for a in node.names):
+            return True
+        if isinstance(node, (ast.FunctionDef, ast.ClassDef)) \
+                and node.name == name:
+            return True
+    return False
+
+
+def _mentions(name):
+    hits = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            if path.name == Path(__file__).name:
+                continue
+            tree = ast.parse(path.read_text(errors="replace"))
+            if _uses(tree, name):
+                hits.append(str(path.relative_to(ROOT)))
+    return hits
+
+
+def test_no_new_deprecated_entry_point_usage():
+    violations = {}
+    for name, allowed in ALLOWED.items():
+        extra = [f for f in _mentions(name) if f not in allowed]
+        if extra:
+            violations[name] = extra
+    assert not violations, (
+        "new reference(s) to deprecated entry points — migrate to "
+        f"repro.run / repro.api instead: {violations}")
+
+
+def test_allowlist_is_not_stale():
+    """Every allowlisted file still exists and still mentions the name —
+    prune the list when a migration removes a reference."""
+    for name, allowed in ALLOWED.items():
+        mentions = set(_mentions(name))
+        stale = [f for f in allowed if f not in mentions]
+        assert not stale, f"{name}: allowlisted but unreferenced: {stale}"

@@ -13,7 +13,7 @@ from repro import envs, policies
 from repro.configs.paper_hfl import MNIST_CONVEX
 from repro.core.network import RoundData
 from repro.data.federated import FederatedDataset
-from repro.experiment import run_experiment_sweep
+from repro.experiment import sweep_experiments
 from repro.experiment.packing import pack_assignment, slot_capacity
 from repro.fed.batched import BatchedRoundEngine, make_round_spec
 from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
@@ -104,7 +104,7 @@ def test_fused_policy_parity_bitwise(name, shared_data):
     every jax-capable policy, per seed, on identical realized rounds."""
     env = _env()
     pol = _policy(name)
-    res = run_experiment_sweep({name: pol}, env, SEEDS, HORIZON,
+    res = sweep_experiments({name: pol}, env, SEEDS, HORIZON,
                                eval_every=4, data=shared_data)
     for i, s in enumerate(SEEDS):
         host = policies.run_rounds_host(pol, env.rollout(s, HORIZON),
@@ -123,10 +123,10 @@ def test_fused_seed_axis_independence(shared_data):
     env = _env()
     pol = _policy("cocs")
     seeds = [0, 1, 2, 3]
-    multi = run_experiment_sweep({"cocs": pol}, env, seeds, HORIZON,
+    multi = sweep_experiments({"cocs": pol}, env, seeds, HORIZON,
                                  eval_every=4, data=shared_data)
     for i, s in enumerate(seeds):
-        single = run_experiment_sweep({"cocs": pol}, env, [s], HORIZON,
+        single = sweep_experiments({"cocs": pol}, env, [s], HORIZON,
                                       eval_every=4, data=shared_data)
         np.testing.assert_array_equal(single.selections["cocs"][0],
                                       multi.selections["cocs"][i])
@@ -145,7 +145,7 @@ def test_fused_matches_hfl_simulation(shared_data):
 
     env = _env()
     pol = _policy("cocs")
-    res = run_experiment_sweep({"cocs": pol}, env, SEEDS, HORIZON,
+    res = sweep_experiments({"cocs": pol}, env, SEEDS, HORIZON,
                                eval_every=4, data=shared_data)
     for i, s in enumerate(SEEDS):
         adapter = make_policies(EXP, horizon=HORIZON, seed=s,
@@ -168,7 +168,7 @@ def test_pinned_slot_overflow_raises(shared_data):
     env = _env()
     pol = _policy("oracle")
     with pytest.raises(ValueError, match="slots_per_es"):
-        run_experiment_sweep({"oracle": pol}, env, [0], 4, eval_every=2,
+        sweep_experiments({"oracle": pol}, env, [0], 4, eval_every=2,
                              data=shared_data, slots_per_es=1)
 
 
@@ -177,7 +177,7 @@ def test_host_policy_fallback(shared_data):
     result schema (and still produce per-round selections)."""
     env = _env()
     pol = _policy("cucb")
-    res = run_experiment_sweep({"cucb": pol}, env, [0], 4, eval_every=2,
+    res = sweep_experiments({"cucb": pol}, env, [0], 4, eval_every=2,
                                data=shared_data)
     assert res.selections["cucb"].shape == (1, 4, EXP.num_clients)
     assert res.accuracy["cucb"].shape == (1, 2)

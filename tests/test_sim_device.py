@@ -114,9 +114,9 @@ def shared_data():
 
 @pytest.mark.parametrize("name", ["cocs", "oracle", "random"])
 def test_fused_device_env_policy_parity_bitwise(name, shared_data):
-    """run_experiment_sweep under env="device" reproduces the host-env
+    """sweep_experiments under env="device" reproduces the host-env
     fused sweep's policy selections bitwise (and metrics to tolerance)."""
-    from repro.experiment import run_experiment_sweep
+    from repro.experiment import sweep_experiments
 
     exp = dc.replace(MNIST_CONVEX, lr=0.01)
     horizon = 8
@@ -124,10 +124,10 @@ def test_fused_device_env_policy_parity_bitwise(name, shared_data):
     kw = ({"alpha": exp.holder_alpha, "h_t": exp.h_t}
           if name == "cocs" else {})
     pol = policies.make(name, spec, **kw)
-    host = run_experiment_sweep({name: pol}, envs.make("paper", exp),
+    host = sweep_experiments({name: pol}, envs.make("paper", exp),
                                 SEEDS, horizon, eval_every=4,
                                 data=shared_data)
-    dev = run_experiment_sweep({name: pol}, sim.make("paper", exp),
+    dev = sweep_experiments({name: pol}, sim.make("paper", exp),
                                SEEDS, horizon, eval_every=4,
                                data=shared_data)
     np.testing.assert_array_equal(host.selections[name],
@@ -141,14 +141,14 @@ def test_fused_device_env_policy_parity_bitwise(name, shared_data):
 
 def test_sweep_env_by_string(shared_data):
     """The sweep driver selects host vs device envs by string."""
-    from repro.experiment import run_experiment_sweep
+    from repro.experiment import sweep_experiments
     from repro.sim.core import DeviceEnv
 
     assert isinstance(sim.resolve("device"), DeviceEnv)
     assert isinstance(sim.resolve("device:flash-crowd"), DeviceEnv)
     assert isinstance(sim.resolve("metropolis-1k"), DeviceEnv)
     assert not isinstance(sim.resolve("paper"), DeviceEnv)
-    res = run_experiment_sweep(["random"], "device", SEEDS, 4,
+    res = sweep_experiments(["random"], "device", SEEDS, 4,
                                eval_every=2, data=shared_data)
     assert res.selections["random"].shape == (2, 4,
                                               MNIST_CONVEX.num_clients)
@@ -156,11 +156,11 @@ def test_sweep_env_by_string(shared_data):
 
 def test_host_policy_fallback_under_device_env(shared_data):
     """Non-jax policies run under a device env via materialized rounds."""
-    from repro.experiment import run_experiment_sweep
+    from repro.experiment import sweep_experiments
 
     spec = policies.PolicySpec.from_experiment(MNIST_CONVEX, 4)
     pol = policies.make("cucb", spec)
-    res = run_experiment_sweep({"cucb": pol}, sim.make("paper"), [0], 4,
+    res = sweep_experiments({"cucb": pol}, sim.make("paper"), [0], 4,
                                eval_every=2, data=shared_data)
     assert res.selections["cucb"].shape == (1, 4, MNIST_CONVEX.num_clients)
     assert np.all(res.participants["cucb"] >= 0)
