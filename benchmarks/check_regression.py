@@ -21,31 +21,15 @@ baseline.
 from __future__ import annotations
 
 import argparse
-import json
+import os
 import sys
 
-
-def _load(path: str) -> dict:
-    try:
-        with open(path) as f:
-            return {e["name"]: e for e in json.load(f)}
-    except (OSError, json.JSONDecodeError, KeyError, TypeError):
-        return {}
-
-
-def _metric(entries: dict, name: str, reference: str):
-    """us_per_call of ``name``, divided by ``reference``'s if given.
-    None when any needed row is absent or non-positive."""
-    e = entries.get(name)
-    if not e or e.get("us_per_call", 0) <= 0:
-        return None
-    value = e["us_per_call"]
-    if reference:
-        r = entries.get(reference)
-        if not r or r.get("us_per_call", 0) <= 0:
-            return None
-        value /= r["us_per_call"]
-    return value
+try:
+    from repro.trials.ledger import entry_metric, load_entries
+except ImportError:  # invoked as a bare script without PYTHONPATH=src
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    from repro.trials.ledger import entry_metric, load_entries
 
 
 def main(argv=None) -> int:
@@ -67,17 +51,17 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     entries = args.entry or ["fig4_sweep_fused"]
 
-    baseline = _load(args.baseline)
-    current = _load(args.current)
+    baseline = load_entries(args.baseline)
+    current = load_entries(args.current)
     failures = 0
     for spec in entries:
         name, _, ref = spec.partition(":")
         ref = ref or args.relative_to
-        base = _metric(baseline, name, ref)
+        base = entry_metric(baseline, name, ref)
         if base is None:
             print(f"{name}: no usable baseline entry — skipping")
             continue
-        cur = _metric(current, name, ref)
+        cur = entry_metric(current, name, ref)
         if cur is None:
             print(f"{name}: missing/errored in current run — FAIL")
             failures += 1

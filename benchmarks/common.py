@@ -1,17 +1,28 @@
 """Shared benchmark plumbing: every benchmark returns CSV rows
 (name, us_per_call, derived), and the figure benchmarks drive their
 experiments through the declarative facade (``run_policy_panel`` /
-``repro.run``) instead of hand-rolled per-benchmark loops."""
+``repro.run``) instead of hand-rolled per-benchmark loops.
+
+``us_per_call`` is ``None`` for *timing-less* rows (derived-only
+summaries such as regret totals or skipped kernels): the ledger stores
+them as ``us_per_call: null`` and every timing consumer
+(``speedup_vs`` annotations, ``check_regression``) treats them as "no
+measurement" instead of a 0.0 that could reach a division.
+"""
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-Row = Tuple[str, float, str]
+Row = Tuple[str, Optional[float], str]
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def derived_row(name: str, derived: str) -> Row:
+    """A timing-less row: a derived quantity with no own measurement."""
+    return (name, None, derived)
 
 
 def run_policy_panel(cfg, horizon: int, seeds: Sequence[int],
@@ -57,36 +68,19 @@ def timed(fn: Callable, repeats: int = 1) -> Tuple[float, object]:
 
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+        stamp = "" if us is None else f"{us:.1f}"
+        print(f"{name},{stamp},{derived}")
 
 
 def write_json(rows: List[Row], path: str) -> None:
     """Machine-readable perf trajectory: the CSV rows as a JSON list.
 
-    Merges by name into an existing file instead of overwriting it, so
-    entries from earlier PRs/benchmark subsets accumulate. A re-measured
-    entry gains a ``speedup_vs`` field (previous / new us_per_call) —
-    >1 means this measurement is faster than the last committed one.
+    One thin wrapper over the ledger store (``repro.trials.ledger``) —
+    the same merge-by-name/speedup-annotation logic the regression guard
+    and the trial-bench subsystem read, so the normalizers cannot drift.
+    Timing-less rows persist as ``us_per_call: null`` and never get a
+    ``speedup_vs``.
     """
-    previous: dict = {}
-    order: List[str] = []
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                for entry in json.load(f):
-                    previous[entry["name"]] = entry
-                    order.append(entry["name"])
-        except (json.JSONDecodeError, KeyError, TypeError):
-            previous, order = {}, []        # corrupt file: start fresh
-    merged = dict(previous)
-    for name, us, derived in rows:
-        entry = {"name": name, "us_per_call": us, "derived": derived}
-        old = previous.get(name)
-        if old and old.get("us_per_call", 0) > 0 and us > 0:
-            entry["speedup_vs"] = round(old["us_per_call"] / us, 3)
-        if name not in merged:
-            order.append(name)
-        merged[name] = entry
-    with open(path, "w") as f:
-        json.dump([merged[n] for n in order], f, indent=2)
-        f.write("\n")
+    from repro.trials import ledger
+
+    ledger.merge_entries(ledger.rows_to_entries(rows), path)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 from typing import List
 
-from benchmarks.common import FULL, Row, run_policy_panel, timed
+from benchmarks.common import FULL, Row, derived_row, run_policy_panel, timed
 from repro.configs.paper_hfl import MNIST_CONVEX
 
 
@@ -21,12 +21,12 @@ def run() -> List[Row]:
                      f"cum_utility={cum[name][-1]:.0f}"))
     for name in ("COCS", "CUCB", "LinUCB", "Random"):
         reg = cum["Oracle"][-1] - cum[name][-1]
-        rows.append((f"fig3b_regret_{name}", 0.0, f"regret_T={reg:.0f}"))
+        rows.append(derived_row(f"fig3b_regret_{name}", f"regret_T={reg:.0f}"))
     # sublinearity indicator for COCS
     r = cum["Oracle"] - cum["COCS"]
     k = horizon // 5
     early = (r[k] - r[0]) / k
     late = (r[-1] - r[-k]) / k
-    rows.append(("fig3b_cocs_regret_slope", 0.0,
-                 f"early={early:.3f};late={late:.3f}"))
+    rows.append(derived_row("fig3b_cocs_regret_slope",
+                            f"early={early:.3f};late={late:.3f}"))
     return rows

@@ -18,7 +18,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks.common import FULL, Row, timed
+from benchmarks.common import FULL, Row, derived_row, timed
 from repro.configs.paper_hfl import MNIST_CONVEX
 from repro.core.utility import make_policies
 from repro.data.federated import FederatedDataset
@@ -57,7 +57,7 @@ def run() -> List[Row]:
                      f"final_acc={hist.accuracy[-1]:.3f};"
                      f"mean_participants={np.mean(hist.participants):.1f}"))
     ratio = backend_us["legacy"] / max(backend_us["batched"], 1e-9)
-    rows.append(("fig4_hfl_backend_speedup", 0.0,
+    rows.append(derived_row("fig4_hfl_backend_speedup",
                  f"speedup={ratio:.1f}x;"
                  f"legacy_us={backend_us['legacy']:.0f};"
                  f"batched_us={backend_us['batched']:.0f}"))

@@ -16,7 +16,7 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, timed
+from benchmarks.common import Row, derived_row, timed
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
 from repro.kernels.masked_aggregate.ops import (best_tile,
@@ -76,9 +76,9 @@ def _tile_sweep(key) -> List[Row]:
                 rows.append((f"kernel_masked_aggregate_tiled_d{d}_t{tile}",
                              us, f"GBps={gb / (us / 1e6):.2f}"))
     if not on_tpu:
-        rows.append(("kernel_masked_aggregate_tiled", 0.0,
-                     "skipped: compiled Pallas path needs TPU "
-                     "(interpret-only container)"))
+        rows.append(derived_row("kernel_masked_aggregate_tiled",
+                                "skipped: compiled Pallas path needs TPU "
+                                "(interpret-only container)"))
     return rows
 
 

@@ -9,7 +9,7 @@ import json
 import os
 from typing import List
 
-from benchmarks.common import Row
+from benchmarks.common import Row, derived_row
 
 RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS", "results/dryrun_all.jsonl")
 
@@ -36,22 +36,22 @@ def run() -> List[Row]:
     rows: List[Row] = []
     recs = load_records()
     if not recs:
-        return [("roofline_report", 0.0,
-                 f"no dry-run results at {RESULTS}; run "
-                 "`python -m repro.launch.dryrun --all --both-meshes "
-                 f"--out {RESULTS}`")]
+        return [derived_row("roofline_report",
+                            f"no dry-run results at {RESULTS}; run "
+                            "`python -m repro.launch.dryrun --all --both-meshes "
+                            f"--out {RESULTS}`")]
     ok = sum(1 for r in recs if r.get("status") == "ok")
     skipped = sum(1 for r in recs if r.get("status") == "skipped")
     failed = sum(1 for r in recs if r.get("status") == "error")
-    rows.append(("roofline_sweep_status", 0.0,
-                 f"ok={ok};skipped={skipped};failed={failed}"))
+    rows.append(derived_row("roofline_sweep_status",
+                            f"ok={ok};skipped={skipped};failed={failed}"))
     for r in sorted(recs, key=lambda r: (r.get("arch") or "",
                                          r.get("shape") or "",
                                          bool(r.get("multi_pod")))):
         name = (f"roofline_{r['arch']}_{r['shape']}_"
                 f"{'mp' if r.get('multi_pod') else 'sp'}")
         if r.get("status") != "ok":
-            rows.append((name, 0.0, f"status={r.get('status')}"))
+            rows.append(derived_row(name, f"status={r.get('status')}"))
             continue
         ro = r["roofline"]
         rows.append((name, r.get("elapsed_s", 0) * 1e6,

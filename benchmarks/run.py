@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.env_bench",
     "benchmarks.kernels_bench",
     "benchmarks.roofline_report",
+    "benchmarks.trials_bench",
 ]
 
 
@@ -50,8 +51,8 @@ def main(argv=None) -> None:
             all_rows.extend(rows)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             failures += 1
-            print(f"{modname},0.0,ERROR:{type(e).__name__}:{e}")
-            all_rows.append((modname, 0.0, f"ERROR:{type(e).__name__}:{e}"))
+            print(f"{modname},,ERROR:{type(e).__name__}:{e}")
+            all_rows.append((modname, None, f"ERROR:{type(e).__name__}:{e}"))
             traceback.print_exc(file=sys.stderr)
     if args.json:
         write_json(all_rows, args.json)

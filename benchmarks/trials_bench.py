@@ -1,0 +1,43 @@
+"""Trial suites as a benchmark: run the two named paper suites through
+``repro.trials`` and append their full scored records (oracle regret,
+participation, accuracy, provenance) to the trials ledger
+(``BENCH_trials.json`` by default; override with
+``REPRO_TRIALS_LEDGER``). The rows returned here are one summary per
+suite for the main CSV/BENCH_quick trajectory — the per-cell quality
+records live in the ledger, where ``python -m repro.trials check``
+gates them suite-wide against the committed baseline.
+
+``paper-fig3`` runs at its quick scale (horizon 400 — the committed
+fig3a panel); ``paper-fig4-quick`` runs its @smoke variant so the
+fused-training suite stays CI-sized. REPRO_BENCH_FULL=1 promotes
+fig4 to the full variant.
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from benchmarks.common import FULL, Row
+
+LEDGER = os.environ.get("REPRO_TRIALS_LEDGER", "BENCH_trials.json")
+
+
+def run() -> List[Row]:
+    from repro import trials
+
+    rows: List[Row] = []
+    for name, smoke in (("paper-fig3", False),
+                        ("paper-fig4-quick", not FULL)):
+        result = trials.run_suite(name, smoke=smoke, ledger=LEDGER)
+        regrets: dict = {}
+        for r in result.records:
+            if r.regret is not None:
+                regrets.setdefault(r.policy, []).append(r.regret)
+        regrets = {p: sum(v) / len(v) for p, v in regrets.items()}
+        worst = max(regrets, key=regrets.get) if regrets else "-"
+        rows.append((
+            f"trials_suite_{result.label}", result.total_us,
+            f"records={len(result.records)};"
+            f"cocs_regret={regrets.get('COCS', float('nan')):.1f};"
+            f"worst={worst};ledger={os.path.basename(LEDGER)}"))
+    return rows

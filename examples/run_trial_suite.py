@@ -1,0 +1,62 @@
+"""Trial suites end to end: run the ``paper-fig4-quick`` training suite,
+print its markdown report, append it to a ledger, and gate a repeat run
+against the baseline the first run just committed.
+
+A suite is data — a named, JSON-round-trippable set of
+(policy x config) cells over ``ExperimentSpec``. The runner batches the
+batchable axes (here: budget) through the fused grid path and scores
+every cell against the same-draw-schedule Oracle cell, so "regret" is a
+comparison over one pinned randomness contract, never across
+re-realized environments.
+
+    PYTHONPATH=src python examples/run_trial_suite.py
+
+Same flow as ``python -m repro.trials run paper-fig4-quick --smoke
+--ledger /tmp/ledger.json --report``; CI drives it via
+``benchmarks/trials_bench.py`` against the committed
+``BENCH_trials.json``.
+"""
+import os
+import tempfile
+
+from repro import trials
+
+
+def main():
+    suite = trials.get_suite("paper-fig4-quick")
+    print(f"suite {suite.name!r}: {len(suite.policies)} policies x "
+          f"axes {dict(suite.axes)}")
+    print(f"declarative + serializable: {suite.to_json()[:68]}...\n")
+
+    ledger_path = os.path.join(tempfile.gettempdir(),
+                               "repro_trials_ledger.json")
+    if os.path.exists(ledger_path):
+        os.remove(ledger_path)
+
+    # smoke variant (tiny horizon) so the example stays ~a minute; drop
+    # smoke=True for the full quick-scale panel
+    result = trials.run_suite(suite, smoke=True, ledger=ledger_path)
+    print(trials.suite_report(result))
+
+    cocs = result.record("COCS", coord=(("budget", 3.5),))
+    print(f"COCS @ B=3.5: cum_utility={cocs.cum_utility:.1f} "
+          f"regret={cocs.regret:.1f} final_acc={cocs.final_acc:.3f} "
+          f"(tier {cocs.tier}, batched axes {cocs.batched_axes})\n")
+
+    # a repeat run gates cleanly against the baseline just recorded:
+    # utilities/regret are draw-schedule-deterministic, so any drift in
+    # them is a behavior change, not noise
+    baseline = trials.load_entries(ledger_path)
+    trials.run_suite(suite, smoke=True, ledger=ledger_path)
+    failures, report = trials.check_suite(
+        baseline, trials.load_entries(ledger_path), result.label)
+    print(f"self-gate ({result.label}): {failures} regressions")
+    for line in report:
+        print(f"  {line}")
+    print(f"\nledger trajectory at {ledger_path}:")
+    print(trials.ledger_report(trials.load_entries(ledger_path),
+                               result.label))
+
+
+if __name__ == "__main__":
+    main()

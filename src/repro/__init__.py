@@ -8,7 +8,8 @@ def __getattr__(name: str):
     # lazy subpackage access: ``repro.envs`` / ``repro.sim`` /
     # ``repro.policies`` / ``repro.experiment`` / ``repro.api`` without
     # eager jax imports
-    if name in ("api", "envs", "sim", "policies", "experiment", "fed"):
+    if name in ("api", "envs", "sim", "policies", "experiment", "fed",
+                "trials"):
         import importlib
         return importlib.import_module(f"repro.{name}")
     if name == "run":

@@ -74,10 +74,17 @@ class GridResult:
                          for r in self.results]).reshape(self.shape + (-1,))
 
 
+_HYPERCUBE_OPTIONS = ("h_t", "alpha")
+
+
 def _group_key(cell: ExperimentSpec) -> ExperimentSpec:
     """The cell with its batchable coordinates cleared: cells sharing
-    this key differ only in (budget, deadline) and can batch together."""
-    return replace(cell, policy=replace(cell.policy, budget=None),
+    this key differ only in (budget, deadline, h_t, alpha) and can batch
+    together (the hypercube pair subject to ``_cocs_grid_params``)."""
+    opts = tuple((k, v) for k, v in cell.policy.options
+                 if k not in _HYPERCUBE_OPTIONS)
+    return replace(cell,
+                   policy=replace(cell.policy, budget=None, options=opts),
                    env=replace(cell.env, deadline=None))
 
 
@@ -104,6 +111,34 @@ def run_grid(grid: ExperimentGrid, *, data=None) -> GridResult:
     return GridResult(grid=grid, cells=cells, results=results)
 
 
+def _cocs_grid_params(key_policy, group: List[ExperimentSpec], cfg,
+                      horizon: int):
+    """Per-cell (h, z) hypercube parameters when the group's cells vary
+    only in the COCS ``h_t``/``alpha`` (or explicit ``z``) knobs, else
+    None. The knobs become traced per-element data over a state padded
+    to ``max(h)`` (``run_rounds_grid_params``), so the cells batch like
+    budgets; any other policy-side difference disqualifies the group."""
+    from dataclasses import replace as dc_replace
+
+    from repro.policies.cocs import COCS
+
+    if not isinstance(key_policy, COCS):
+        return None
+    hs, zs = [], []
+    for cell in group:
+        pol = build_policy(dc_replace(cell.policy, budget=None), cfg,
+                           horizon)
+        if not isinstance(pol, COCS):
+            return None
+        if dc_replace(pol, alpha=key_policy.alpha, h_t=key_policy.h_t,
+                      z=key_policy.z) != key_policy:
+            return None          # differs beyond the hypercube knobs
+        z, h = pol._params()
+        hs.append(int(h))
+        zs.append(float(z))
+    return np.asarray(hs, np.int32), np.asarray(zs, np.float32)
+
+
 def _run_group_batched(key: ExperimentSpec, group: List[ExperimentSpec],
                        batchable: Tuple[str, ...],
                        data) -> Optional[List[RunResult]]:
@@ -117,6 +152,18 @@ def _run_group_batched(key: ExperimentSpec, group: List[ExperimentSpec],
     tier = select_tier(key, policy, env)
     if not policy.jax_capable:
         return None              # host-state policy (any tier): sequential
+    from repro.sim.core import DeviceEnv as _DeviceEnv
+    params = None
+    pol_varies = any(replace(c.policy, budget=None) != key.policy
+                     for c in group)
+    if pol_varies:
+        # hypercube (h_t/alpha) axes: batchable only on the tier-1 host
+        # path (padded-state scan); everything else runs sequentially
+        if tier != 1 or isinstance(env, _DeviceEnv):
+            return None
+        params = _cocs_grid_params(policy, group, cfg, key.horizon)
+        if params is None:
+            return None
     seeds = [int(s) for s in key.seeds]
     pol_seeds = [s + key.policy.seed_offset for s in seeds]
     n_seeds = len(seeds)
@@ -133,7 +180,8 @@ def _run_group_batched(key: ExperimentSpec, group: List[ExperimentSpec],
     device = isinstance(env, DeviceEnv)
     if tier == 1:
         out = _bandit_grid(policy, env, device, seeds, pol_seeds_b,
-                           key.horizon, budgets_b, deadlines_b, len(group))
+                           key.horizon, budgets_b, deadlines_b, len(group),
+                           params=params)
         eval_block = None
     else:
         out, eval_block = _fused_grid(key, policy, env, device, seeds,
@@ -187,17 +235,26 @@ def _host_grid_batch(env, seeds, horizon: int, deadlines_cells):
 
 
 def _bandit_grid(policy, env, device: bool, seeds, pol_seeds_b,
-                 horizon: int, budgets_b, deadlines_b, n_cells: int):
-    """Tier-1 grid: one compiled scan over flattened (cell, seed)."""
-    from repro.policies import run_rounds_grid
+                 horizon: int, budgets_b, deadlines_b, n_cells: int,
+                 params=None):
+    """Tier-1 grid: one compiled scan over flattened (cell, seed).
+    ``params`` optionally carries per-cell COCS (h, z) hypercube values
+    (host path only) — the batched h_t/alpha axes."""
+    from repro.policies import run_rounds_grid, run_rounds_grid_params
 
     if device:
         from repro.sim.engine import run_bandit_device_grid
+        assert params is None, "hypercube axes batch on the host path only"
         seeds_b = np.tile(np.asarray(seeds, np.uint32), n_cells)
         return run_bandit_device_grid(policy, env.spec, seeds_b, budgets_b,
                                       deadlines_b, horizon, pol_seeds_b)
     deadlines_cells = deadlines_b[::len(seeds)]
     batch = _host_grid_batch(env, seeds, horizon, deadlines_cells)
+    if params is not None:
+        hs, zs = params
+        return run_rounds_grid_params(
+            policy, batch, budgets_b, np.repeat(hs, len(seeds)),
+            np.repeat(zs, len(seeds)), pol_seeds_b)
     return run_rounds_grid(policy, batch, budgets_b, pol_seeds_b)
 
 

@@ -234,9 +234,20 @@ class ExperimentSpec:
                        for name, values in axes.items()))
 
 
+def _set_policy_option(spec: "ExperimentSpec", key: str,
+                       value) -> "ExperimentSpec":
+    opts = dict(spec.policy.options)
+    opts[key] = value
+    return replace(spec, policy=replace(spec.policy, options=_pairs(opts)))
+
+
 # axis name -> (batchable?, apply(spec, value) -> spec). Batchable axes
 # preserve every array shape, so their cells stack next to the seed axis
 # inside one fused device program; the rest run sequentially per cell.
+# ``h_t``/``alpha`` are the COCS hypercube axes: batchable for bandit-only
+# COCS runs on host envs (shape-padded hypercube state, per-element
+# (h, z) as traced data — ``run_rounds_grid_params``); other tiers,
+# device envs, and non-COCS policies fall back to sequential cells.
 GRID_AXES: Dict[str, Tuple[bool, Any]] = {
     "policy": (False, lambda s, v: replace(
         s, policy=v if isinstance(v, PolicySpec)
@@ -245,6 +256,8 @@ GRID_AXES: Dict[str, Tuple[bool, Any]] = {
         s, policy=replace(s.policy, budget=float(v)))),
     "deadline": (True, lambda s, v: replace(
         s, env=replace(s.env, deadline=float(v)))),
+    "h_t": (True, lambda s, v: _set_policy_option(s, "h_t", int(v))),
+    "alpha": (True, lambda s, v: _set_policy_option(s, "alpha", float(v))),
     "scenario": (False, lambda s, v: replace(
         s, env=replace(s.env, scenario=str(v)))),
     "true_p": (False, lambda s, v: replace(

@@ -21,9 +21,9 @@ from repro.policies.base import (FunctionalPolicy, PolicyAdapter, PolicySpec,
 from repro.policies.baselines import CUCB, HostCOCS, LinUCB, Oracle, Random
 from repro.policies.cocs import COCS, COCSState
 from repro.policies.engine import (run_rounds, run_rounds_grid,
-                                   run_rounds_host, run_rounds_multi_seed,
-                                   stack_rounds_multi, stack_states,
-                                   traced_utility)
+                                   run_rounds_grid_params, run_rounds_host,
+                                   run_rounds_multi_seed, stack_rounds_multi,
+                                   stack_states, traced_utility)
 from repro.policies.solvers import (feasible_cohort_bound, flgreedy_assign,
                                     greedy_assign, random_assign)
 
@@ -66,6 +66,7 @@ __all__ = [
     "feasible_cohort_bound", "flgreedy_assign", "greedy_assign", "make",
     "make_legacy", "random_assign", "register", "round_from_data",
     "rounds_to_scan_axes", "run_rounds", "run_rounds_grid",
-    "run_rounds_host", "run_rounds_multi_seed", "stack_rounds",
+    "run_rounds_grid_params", "run_rounds_host", "run_rounds_multi_seed",
+    "stack_rounds",
     "stack_rounds_multi", "stack_states", "traced_utility",
 ]

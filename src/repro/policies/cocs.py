@@ -44,16 +44,32 @@ class COCS(FunctionalPolicy):
                 self.h_t if self.h_t is not None else h_thm)
 
     # -- pure functions -------------------------------------------------------
+    #
+    # The hypercube resolution ``h`` and Theorem-2 exponent ``z`` enter
+    # select/update only as *data*: every array op below is identical
+    # whether they are baked Python scalars (the single-config path) or
+    # traced per-element values over a state padded to a common ``h_pad``
+    # (the grid engines' batched h_t/alpha axes). Cube indices never
+    # exceed ``h - 1 <= h_pad - 1``, so the padded cells stay untouched
+    # zeros and gathers/scatters reproduce the unpadded run bitwise.
 
     def init(self, key_or_seed=0, rd0=None) -> COCSState:
         del key_or_seed, rd0     # deterministic init
-        n, m = self.spec.num_clients, self.spec.num_edge_servers
         _, h = self._params()
-        return COCSState(counters=jnp.zeros((n, m, h, h), jnp.int32),
-                         p_hat=jnp.zeros((n, m, h, h), jnp.float32))
+        return self.init_padded(h)
 
-    def _cubes(self, contexts) -> jax.Array:
-        _, h = self._params()
+    def init_padded(self, h_pad: int) -> COCSState:
+        """Zero state over an ``(N, M, h_pad, h_pad)`` hypercube lattice
+        (``h_pad >= h_t``): the shape-padded form the batched h_t/alpha
+        grid axes share across cells."""
+        n, m = self.spec.num_clients, self.spec.num_edge_servers
+        return COCSState(
+            counters=jnp.zeros((n, m, h_pad, h_pad), jnp.int32),
+            p_hat=jnp.zeros((n, m, h_pad, h_pad), jnp.float32))
+
+    def _cubes(self, contexts, h=None) -> jax.Array:
+        if h is None:
+            _, h = self._params()
         idx = jnp.floor(jnp.nan_to_num(contexts) * h).astype(jnp.int32)
         return jnp.clip(idx, 0, h - 1)
 
@@ -62,8 +78,9 @@ class COCS(FunctionalPolicy):
         ii, jj = jnp.meshgrid(jnp.arange(n), jnp.arange(m), indexing="ij")
         return arr[ii, jj, cubes[..., 0], cubes[..., 1]]
 
-    def k_of_t(self, t):
-        z, _ = self._params()
+    def k_of_t(self, t, z=None):
+        if z is None:
+            z, _ = self._params()
         tf = jnp.maximum(jnp.asarray(t, jnp.float32), 1.0)
         return self.k_scale * tf ** z * jnp.log(jnp.maximum(tf, 2.0))
 
@@ -71,12 +88,19 @@ class COCS(FunctionalPolicy):
         return self.select_with_budgets(state, rd, self.spec.budgets())
 
     def select_with_budgets(self, state: COCSState, rd, budgets):
-        cubes = self._cubes(rd.contexts)
+        z, h = self._params()
+        return self.select_with_params(state, rd, budgets, h, z)
+
+    def select_with_params(self, state: COCSState, rd, budgets, h, z):
+        """``select_with_budgets`` with the hypercube resolution ``h`` and
+        exponent ``z`` as explicit (possibly traced) data — the batched
+        h_t/alpha config-axis path. ``state`` may be ``init_padded``."""
+        cubes = self._cubes(rd.contexts, h)
         counts = self._gather(state.counters, cubes)           # (N, M)
         est = self._gather(state.p_hat, cubes)                 # (N, M)
         eligible = jnp.asarray(rd.eligible, bool)
         t1 = jnp.asarray(rd.t, jnp.int32) + 1
-        under = eligible & (counts <= self.k_of_t(t1))
+        under = eligible & (counts <= self.k_of_t(t1, z))
         tf = jnp.maximum(t1.astype(jnp.float32), 2.0)
         bonus = self.bonus_scale * jnp.sqrt(
             2.0 * jnp.log(tf) / jnp.maximum(counts, 1))
@@ -92,13 +116,18 @@ class COCS(FunctionalPolicy):
         return assign, {"explored": under.any()}
 
     def update(self, state: COCSState, rd, assign, aux=None) -> COCSState:
+        _, h = self._params()
+        return self.update_with_params(state, rd, assign, h, aux)
+
+    def update_with_params(self, state: COCSState, rd, assign, h,
+                           aux=None) -> COCSState:
         # cubes are derived from rd (not passed through aux) so update is
         # correct for any (rd, assign) pairing; when select+update share a
         # trace (fused step / scan engines) XLA CSE dedups the re-binning
         del aux
         counters, p_hat = state
         n, m = counters.shape[:2]
-        cubes = self._cubes(rd.contexts)
+        cubes = self._cubes(rd.contexts, h)
         assign = jnp.asarray(assign, jnp.int32)
         ii = jnp.arange(n)
         sel = assign >= 0

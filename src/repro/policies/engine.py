@@ -136,6 +136,70 @@ def run_rounds_grid(policy: FunctionalPolicy, batch: Round, budgets,
             for k, v in out.items()}
 
 
+def _grid_scan_fn_params(policy: FunctionalPolicy):
+    """``_grid_scan_fn`` for COCS hypercube axes: the resolution ``h_t``
+    and Theorem-2 exponent ``z`` ride as per-run traced scalars
+    (``select_with_params``/``update_with_params``) over a state padded
+    to a shared ``h_pad`` lattice, so vmapping batches (h_t, alpha)
+    config cells exactly like budgets and seeds."""
+    num_es = policy.spec.num_edge_servers
+    sqrt_utility = policy.spec.sqrt_utility
+
+    def run(state0, batch: Round, budget, h, z):
+        budgets = jnp.full((num_es,), budget, jnp.float32)
+
+        def step(state, rd: Round):
+            assign, aux = policy.select_with_params(state, rd, budgets,
+                                                    h, z)
+            new_state = policy.update_with_params(state, rd, assign, h)
+            util, part = traced_utility(assign, rd.outcomes, num_es,
+                                        sqrt_utility)
+            explored = aux.get("explored", jnp.zeros((), bool))
+            return new_state, (assign, util, part, explored)
+
+        final, (assigns, utils, parts, explored) = jax.lax.scan(
+            step, state0, batch)
+        return {"selections": assigns, "utilities": utils,
+                "participants": parts, "explored": explored,
+                "final_state": final}
+
+    return run
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_grid_params(policy: FunctionalPolicy):
+    return jax.jit(jax.vmap(_grid_scan_fn_params(policy)))
+
+
+def run_rounds_grid_params(policy: FunctionalPolicy, batch: Round, budgets,
+                           hs, zs, policy_seeds: Sequence[int]
+                           ) -> Dict[str, np.ndarray]:
+    """``run_rounds_grid`` with per-element hypercube parameters.
+
+    ``hs``/``zs`` are (B,) arrays of the COCS resolution/exponent for
+    each flattened (config cell, seed) element; the state is allocated
+    at ``h_pad = max(hs)`` and every element's cube indices stay inside
+    its own ``h``-lattice, so each element is bitwise the sequential run
+    with its parameters baked in. ``policy`` supplies the shared knobs
+    (``k_scale``, ``bonus_scale``, solver choice); its own ``h_t``/
+    ``alpha``/``z`` fields are ignored in favor of ``hs``/``zs``.
+    """
+    if not policy.jax_capable:
+        raise ValueError(f"{policy.name} is a host policy; grid batching "
+                         "requires jax_capable select/update")
+    hs = np.asarray(hs, np.int32)
+    assert batch.costs.shape[0] == len(policy_seeds) == len(hs)
+    h_pad = int(hs.max())
+    state0 = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[policy.init_padded(h_pad) for _ in policy_seeds])
+    out = _compiled_grid_params(policy)(
+        state0, batch, jnp.asarray(np.asarray(budgets, np.float32)),
+        jnp.asarray(hs), jnp.asarray(np.asarray(zs, np.float32)))
+    return {k: np.asarray(v) if k != "final_state" else v
+            for k, v in out.items()}
+
+
 @functools.lru_cache(maxsize=64)
 def _compiled(policy: FunctionalPolicy, multi_seed: bool):
     run = _scan_fn(policy)

@@ -1,0 +1,40 @@
+"""Trial bench: declarative eval suites with oracle-regret scoring and a
+continuous perf/quality ledger.
+
+    from repro import trials
+
+    result = trials.run_suite("paper-fig3")        # scored records
+    result.record("COCS").regret                   # vs same-draw Oracle
+    trials.run_suite("paper-fig4-quick", smoke=True,
+                     ledger="BENCH_trials.json")   # append + trajectory
+    print(trials.suite_report(result))             # markdown panel
+
+A :class:`TrialSuite` is a named, JSON-round-trippable set of
+(policy x config) cells over ``ExperimentSpec`` — the runner batches the
+batchable config axes through the fused grid path automatically and
+scores every cell against the same-draw-schedule Oracle cell into typed
+:class:`TrialRecord`s. The ledger (``repro.trials.ledger``) persists
+records to a ``BENCH_*.json``-compatible store with provenance (resolved
+suite, tier, draw-schedule id, git rev), annotates quality/perf
+trajectories across runs, and gates suites against committed baselines
+(``check_suite`` — the suite-wide generalization of
+``benchmarks/check_regression.py``). CLI: ``python -m repro.trials``.
+"""
+from __future__ import annotations
+
+from repro.trials import ledger
+from repro.trials.ledger import (append_suite, check_suite, load_entries,
+                                 merge_entries)
+from repro.trials.metrics import ScoredCell, TrialRecord, score_cells
+from repro.trials.report import ledger_report, suite_report
+from repro.trials.runner import SuiteResult, run_suite
+from repro.trials.suite import (SUITES, TrialCell, TrialSuite, available,
+                                get_suite, register_suite)
+from repro.trials import suites as _named_suites  # noqa: F401 — register
+
+__all__ = [
+    "SUITES", "ScoredCell", "SuiteResult", "TrialCell", "TrialRecord",
+    "TrialSuite", "append_suite", "available", "check_suite", "get_suite",
+    "ledger", "ledger_report", "load_entries", "merge_entries",
+    "register_suite", "run_suite", "score_cells", "suite_report",
+]

@@ -1,0 +1,5 @@
+import sys
+
+from repro.trials.cli import main
+
+sys.exit(main())

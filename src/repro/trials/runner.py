@@ -1,0 +1,134 @@
+"""Suite execution: ``run_suite("paper-fig3")`` -> scored records.
+
+The runner turns a :class:`~repro.trials.suite.TrialSuite` into
+``repro.run`` calls with the same batching contract as ``spec.grid``:
+for each policy (and each non-batchable coordinate), the batchable
+config axes (budget, deadline, h_t, alpha) execute as ONE device-batched
+grid dispatch — the fused per-interval scan with config cells stacked
+next to the seed axis — and everything else falls back to sequential
+per-cell runs behind the same records. Per-cell wall-clock is amortized
+over its dispatch group (``ScoredCell.us``), which keeps timings
+comparable between batched and sequential rows.
+
+Every cell is scored against the oracle cell at the same coordinate
+(``repro.trials.metrics``), and the result optionally appends straight
+to a ledger file with provenance: resolved suite, git rev, draw-schedule
+id, smoke flag.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+from repro.api.spec import GRID_AXES
+from repro.trials import ledger as ledger_mod
+from repro.trials.metrics import ScoredCell, TrialRecord, score_cells
+from repro.trials.suite import TrialSuite, get_suite
+
+
+@dataclass
+class SuiteResult:
+    """One suite run: the resolved suite, its scored records, and
+    run-level provenance."""
+    suite: TrialSuite
+    label: str                               # name / name@smoke
+    smoke: bool
+    records: List[TrialRecord]
+    total_us: float
+    git_rev: str
+    draw_schedule: str
+
+    def record(self, policy: str,
+               coord: Tuple[Tuple[str, Any], ...] = ()) -> TrialRecord:
+        for rec in self.records:
+            if rec.policy == policy and rec.coord == tuple(coord):
+                return rec
+        raise KeyError(f"no record for policy={policy!r} coord={coord!r}")
+
+    def by_policy(self, policy: str) -> List[TrialRecord]:
+        return [r for r in self.records if r.policy == policy]
+
+
+def _run_cells(suite: TrialSuite, smoke: bool, data
+               ) -> Dict[Tuple[str, Tuple[Tuple[str, Any], ...]],
+                         ScoredCell]:
+    """Execute every suite cell, batching the batchable axes through the
+    fused grid path. Returns (policy, coord) -> ScoredCell."""
+    import itertools
+
+    from repro import api
+
+    base = suite.resolved_base(smoke)
+    batchable = [(a, v) for a, v in suite.axes if GRID_AXES[a][0]]
+    sequential = [(a, v) for a, v in suite.axes if not GRID_AXES[a][0]]
+    axis_order = [a for a, _ in suite.axes]
+
+    def canonical(coord_pairs) -> Tuple[Tuple[str, Any], ...]:
+        d = dict(coord_pairs)
+        return tuple((a, d[a]) for a in axis_order)
+
+    cells: Dict[Tuple[str, Tuple[Tuple[str, Any], ...]], ScoredCell] = {}
+    for display, pspec in suite.policies:
+        spec0 = replace(base, policy=pspec)
+        for seq_combo in itertools.product(*(v for _, v in sequential)):
+            seq_coord = tuple(zip((a for a, _ in sequential), seq_combo))
+            spec1 = spec0
+            for axis, value in seq_coord:
+                spec1 = GRID_AXES[axis][1](spec1, value)
+            if batchable:
+                grid = spec1.grid(**{a: list(v) for a, v in batchable})
+                t0 = time.perf_counter()
+                gres = api.run(grid, data=data)
+                us = (time.perf_counter() - t0) * 1e6 / len(gres.results)
+                names = [a for a, _ in batchable]
+                for combo, res in zip(grid.coords(), gres.results):
+                    coord = canonical(seq_coord + tuple(zip(names, combo)))
+                    cells[(display, coord)] = ScoredCell(
+                        result=res, us=us,
+                        batched_axes=tuple(res.batched_axes))
+            else:
+                t0 = time.perf_counter()
+                res = api.run(spec1, data=data)
+                us = (time.perf_counter() - t0) * 1e6
+                cells[(display, canonical(seq_coord))] = ScoredCell(
+                    result=res, us=us)
+    return cells
+
+
+def run_suite(suite: Union[str, TrialSuite], *, smoke: bool = False,
+              ledger: Optional[str] = None, data=None) -> SuiteResult:
+    """Run a trial suite (by registered name or as an object).
+
+    ``smoke=True`` applies the suite's declared tiny-horizon overrides
+    and records under the ``<name>@smoke`` label, so CI smoke runs gate
+    against their own committed baselines, never the full ones.
+    ``ledger`` appends the scored records to that ``BENCH_*``-compatible
+    JSON store (merge-by-name with trajectory annotations —
+    ``repro.trials.ledger``). ``data`` optionally shares one
+    ``FederatedDataset`` across training cells.
+    """
+    # resolve named suites late so repro.trials.suites registration ran
+    from repro.trials import suites as _suites          # noqa: F401
+
+    suite = get_suite(suite)
+    label = suite.label(smoke)
+    t0 = time.perf_counter()
+    cells = _run_cells(suite, smoke, data)
+    total_us = (time.perf_counter() - t0) * 1e6
+    rev = ledger_mod.git_rev()
+    schedules = {sc.result.draw_schedule for sc in cells.values()}
+    provenance = (("suite", suite.to_dict()), ("smoke", smoke),
+                  ("git_rev", rev))
+    records = score_cells(label, suite.oracle, cells,
+                          provenance=provenance)
+    result = SuiteResult(
+        suite=suite, label=label, smoke=smoke, records=records,
+        total_us=total_us, git_rev=rev,
+        draw_schedule=schedules.pop() if len(schedules) == 1 else "mixed")
+    if ledger:
+        ledger_mod.append_suite(result, ledger)
+    return result
+
+
+__all__ = ["SuiteResult", "run_suite"]

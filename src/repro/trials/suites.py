@@ -1,0 +1,62 @@
+"""The shipped named suites.
+
+``paper-fig3``: the Fig. 3a/3b strongly-convex bandit-only panel — all
+five policies (legacy per-policy seed offsets preserved via
+``POLICY_TABLE``) on the paper scenario at the quick-benchmark horizon.
+Its cumulative utilities reproduce the committed
+``fig3a_cumulative_utility_*`` rows of ``BENCH_quick.json`` exactly
+(same specs, same draw schedule, shared realized env).
+
+``paper-fig4-quick``: the Fig. 4a training panel at quick scale with a
+budget axis — COCS/Oracle/Random run the fused (tier 3) engine with the
+budget cells device-batched next to the seed axis; CUCB/LinUCB take the
+sequential host-loop fallback behind the same records. The ``@smoke``
+variant (tiny horizon) is what CI runs and gates.
+"""
+from __future__ import annotations
+
+from repro.api.spec import (EnvSpec, EvalSpec, ExperimentSpec, PolicySpec,
+                            TrainSpec)
+from repro.core.utility import POLICY_TABLE
+from repro.trials.suite import TrialSuite, register_suite
+
+
+def _panel_policies():
+    """The paper's five-policy comparison row, with the historical
+    per-policy seed offsets the committed benchmark values used."""
+    return tuple((display, PolicySpec(name=reg, seed_offset=off))
+                 for display, (reg, off) in POLICY_TABLE.items())
+
+
+PAPER_FIG3 = register_suite(TrialSuite(
+    name="paper-fig3",
+    base=ExperimentSpec(
+        env=EnvSpec(scenario="paper", config="mnist-convex"),
+        horizon=400, seeds=(1,)),
+    policies=_panel_policies(),
+    oracle="Oracle",
+    smoke=(("horizon", 60),),
+    description="Fig. 3a/3b: bandit-only cumulative utility + "
+                "regret-vs-oracle of the 5 policies, strongly convex "
+                "(linear utility), quick-benchmark horizon."))
+
+
+PAPER_FIG4_QUICK = register_suite(TrialSuite(
+    name="paper-fig4-quick",
+    base=ExperimentSpec(
+        env=EnvSpec(scenario="paper", config="mnist-convex",
+                    overrides=(("lr", 0.01),)),
+        train=TrainSpec(model="logreg"),
+        eval=EvalSpec(eval_every=5),
+        horizon=40, seeds=(0,)),
+    policies=_panel_policies(),
+    axes=(("budget", (3.5, 5.0)),),
+    oracle="Oracle",
+    smoke=(("horizon", 12), ("eval_every", 6)),
+    description="Fig. 4a at quick scale with a device-batched budget "
+                "axis: HFL training accuracy + utility/regret under the "
+                "5 policies (fused tier for jax policies, host-loop "
+                "fallback for CUCB/LinUCB)."))
+
+
+__all__ = ["PAPER_FIG3", "PAPER_FIG4_QUICK"]

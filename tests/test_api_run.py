@@ -161,6 +161,48 @@ def test_grid_budget_monotone(bandit_grid_result):
     assert (parts[1] >= parts[0]).all()
 
 
+def test_grid_hypercube_axes_batched_bitwise():
+    """Batched h_t/alpha cells (shape-padded COCS state, per-element
+    (h, z) as traced data) == the sequential per-config runs bitwise."""
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                              env=api.EnvSpec("paper"),
+                              horizon=HORIZON, seeds=SEEDS)
+    grid = spec.grid(h_t=[3, 5, 8], alpha=[0.8, 1.2])
+    gres = repro.run(grid)
+    assert len(gres.results) == 6
+    for cell, res in zip(gres.cells, gres.results):
+        assert res.batched_axes == ("h_t", "alpha")   # not the fallback
+        seq = repro.run(cell)
+        np.testing.assert_array_equal(res.selections, seq.selections)
+        np.testing.assert_array_equal(res.utilities, seq.utilities)
+        np.testing.assert_array_equal(res.explored, seq.explored)
+
+
+def test_grid_hypercube_axes_compose_with_budget():
+    """budget x h_t batch together into one dispatch stack, bitwise."""
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                              env=api.EnvSpec("paper"),
+                              horizon=HORIZON, seeds=(0,))
+    gres = repro.run(spec.grid(budget=[2.5, 3.5], h_t=[3, 6]))
+    for cell, res in zip(gres.cells, gres.results):
+        assert res.batched_axes == ("budget", "h_t")
+        seq = repro.run(cell)
+        np.testing.assert_array_equal(res.selections, seq.selections)
+
+
+def test_grid_hypercube_axis_device_env_falls_back():
+    """h_t variation under a device env takes the sequential fallback
+    (the padded-state path is host-only) and still matches per-cell."""
+    spec = api.ExperimentSpec(policy=api.PolicySpec("cocs"),
+                              env=api.EnvSpec("paper", backend="device"),
+                              horizon=4, seeds=(0,))
+    gres = repro.run(spec.grid(h_t=[3, 5]))
+    assert all(r.batched_axes == () for r in gres.results)
+    seq = repro.run(gres.cells[1])
+    np.testing.assert_array_equal(gres.results[1].selections,
+                                  seq.selections)
+
+
 def test_grid_policy_axis_sequential_fallback():
     """A non-batchable axis (policy) still runs — sequentially — behind
     the same GridResult, including host-state policies (tier 2 is never

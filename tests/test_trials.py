@@ -1,0 +1,259 @@
+"""Trial-bench subsystem: suite serialization, oracle-regret scoring,
+ledger trajectory math, and the suite-wide committed-baseline gate."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api.spec import EnvSpec, ExperimentSpec, PolicySpec
+from repro.core.utility import POLICY_TABLE
+from repro.trials import ledger
+from repro.trials.metrics import ScoredCell, TrialRecord, score_cells
+from repro.trials.runner import run_suite
+from repro.trials.suite import TrialSuite, get_suite
+from repro.trials.suites import PAPER_FIG3, PAPER_FIG4_QUICK
+
+
+# -- suite declaration / serialization ---------------------------------------
+
+
+def test_suite_json_round_trip():
+    for suite in (PAPER_FIG3, PAPER_FIG4_QUICK):
+        back = TrialSuite.from_json(suite.to_json())
+        assert back == suite
+        # and the serialized form is plain JSON data
+        json.loads(suite.to_json())
+
+
+def test_suite_validation():
+    base = ExperimentSpec(env=EnvSpec(scenario="paper"), horizon=10)
+    pols = (("Oracle", PolicySpec(name="oracle")),)
+    with pytest.raises(ValueError):
+        TrialSuite(name="x", base=base, policies=())
+    with pytest.raises(ValueError):
+        TrialSuite(name="x", base=base, policies=pols + pols)
+    with pytest.raises(KeyError):
+        TrialSuite(name="x", base=base, policies=pols,
+                   axes=(("no_such_axis", (1, 2)),))
+    with pytest.raises(ValueError):
+        TrialSuite(name="x", base=base, policies=pols,
+                   axes=(("policy", ("a",)),))
+    with pytest.raises(KeyError):
+        TrialSuite(name="x", base=base, policies=pols,
+                   smoke=(("no_such_field", 1),))
+
+
+def test_suite_cells_and_smoke():
+    suite = PAPER_FIG4_QUICK
+    cells = suite.cells()
+    # 5 policies x 2 budget values, budget applied onto each spec
+    assert len(cells) == 5 * 2
+    budgets = {c.spec.policy.budget for c in cells}
+    assert budgets == {3.5, 5.0}
+    assert cells[0].cell_id == f"{cells[0].policy}_budget_3.5"
+    assert suite.label() == "paper-fig4-quick"
+    assert suite.label(smoke=True) == "paper-fig4-quick@smoke"
+    smoke_base = suite.resolved_base(smoke=True)
+    assert smoke_base.horizon == 12 and smoke_base.eval.eval_every == 6
+    # full base untouched
+    assert suite.resolved_base().horizon == 40
+    no_smoke = TrialSuite(name="x", base=suite.base,
+                          policies=suite.policies)
+    with pytest.raises(ValueError):
+        no_smoke.resolved_base(smoke=True)
+
+
+def test_get_suite_by_name():
+    assert get_suite("paper-fig3") is PAPER_FIG3
+    with pytest.raises(KeyError):
+        get_suite("no-such-suite")
+
+
+# -- oracle-regret scoring ---------------------------------------------------
+
+
+class _FakeResult:
+    """Minimal RunResult stand-in with hand-set utility curves."""
+
+    def __init__(self, cum_by_seed, schedule="sched/v1", accuracy=None):
+        self._cum = np.asarray(cum_by_seed, np.float64)   # (S, T)
+        self.draw_schedule = schedule
+        self.accuracy = accuracy
+        self.participants = np.full(self._cum.shape, 2.0)
+        self.spec = ExperimentSpec(env=EnvSpec(scenario="paper"), horizon=3)
+        self.tier = 1
+        self.env_backend = "host"
+
+    def cumulative_utility(self):
+        return self._cum
+
+
+def test_score_cells_hand_computed():
+    oracle = _FakeResult([[1.0, 3.0, 6.0], [2.0, 4.0, 7.0]])
+    cocs = _FakeResult([[1.0, 2.0, 4.0], [1.0, 3.0, 6.5]],
+                       accuracy=[[0.5, 0.8], [0.7, 0.9]])
+    records = score_cells(
+        "s", "Oracle",
+        {("Oracle", ()): ScoredCell(oracle, us=10.0),
+         ("COCS", ()): ScoredCell(cocs, us=None)})
+    by = {r.policy: r for r in records}
+    assert by["Oracle"].regret is None
+    # regret per seed: 6-4=2, 7-6.5=0.5 -> mean 1.25
+    assert by["COCS"].regret_seeds == (2.0, 0.5)
+    assert by["COCS"].regret == pytest.approx(1.25)
+    assert by["COCS"].cum_utility == pytest.approx((4.0 + 6.5) / 2)
+    assert by["COCS"].final_acc == pytest.approx((0.8 + 0.9) / 2)
+    assert by["COCS"].acc_curve == pytest.approx((0.6, 0.85))
+    assert by["COCS"].participation == pytest.approx(2.0)
+    entry = by["COCS"].to_entry()
+    assert entry["name"] == "trial_s_COCS"
+    assert entry["us_per_call"] is None
+    assert "regret=1.2" in entry["derived"]
+    assert entry["metrics"]["regret"] == pytest.approx(1.25)
+
+
+def test_score_cells_rejects_mixed_draw_schedules():
+    oracle = _FakeResult([[1.0, 2.0]], schedule="a/v1")
+    other = _FakeResult([[1.0, 2.0]], schedule="b/v2")
+    with pytest.raises(ValueError, match="draw schedule"):
+        score_cells("s", "Oracle",
+                    {("Oracle", ()): ScoredCell(oracle),
+                     ("COCS", ()): ScoredCell(other)})
+
+
+# -- ledger: trajectory math + timing normalization --------------------------
+
+
+def test_timing_normalization():
+    assert ledger.timing(None) is None
+    assert ledger.timing({"us_per_call": None}) is None
+    assert ledger.timing({"us_per_call": 0.0}) is None
+    assert ledger.timing({"us_per_call": "garbage"}) is None
+    assert ledger.timing({"us_per_call": 2.5}) == 2.5
+    entries = {"a": {"name": "a", "us_per_call": 10.0},
+               "b": {"name": "b", "us_per_call": 4.0},
+               "c": {"name": "c", "us_per_call": None}}
+    assert ledger.entry_metric(entries, "a") == 10.0
+    assert ledger.entry_metric(entries, "a", "b") == 2.5
+    assert ledger.entry_metric(entries, "a", "c") is None  # ref timing-less
+    assert ledger.entry_metric(entries, "c") is None
+    assert ledger.entry_metric(entries, "missing") is None
+
+
+def test_merge_entries_trajectory(tmp_path):
+    path = str(tmp_path / "BENCH.json")
+    first = [{"name": "timed", "us_per_call": 10.0, "derived": "d"},
+             {"name": "derived_only", "us_per_call": None, "derived": "x"},
+             {"name": "quality", "us_per_call": 5.0, "derived": "q",
+              "metrics": {"cum_utility": 100.0, "final_acc": 0.8}}]
+    ledger.merge_entries(first, path)
+    second = [{"name": "timed", "us_per_call": 5.0, "derived": "d"},
+              {"name": "derived_only", "us_per_call": None, "derived": "y"},
+              {"name": "quality", "us_per_call": 5.0, "derived": "q",
+               "metrics": {"cum_utility": 90.0, "final_acc": 0.85}},
+              {"name": "new_entry", "us_per_call": 1.0, "derived": "n"}]
+    merged = {e["name"]: e for e in ledger.merge_entries(second, path)}
+    assert merged["timed"]["speedup_vs"] == pytest.approx(2.0)
+    assert "speedup_vs" not in merged["derived_only"]
+    assert merged["derived_only"]["derived"] == "y"
+    assert merged["quality"]["metric_deltas"] == {
+        "cum_utility": -10.0, "final_acc": pytest.approx(0.05)}
+    assert "speedup_vs" not in merged["new_entry"]
+    # insertion order preserved, new entries appended
+    assert [e["name"] for e in ledger.load_entries(path).values()] == \
+        ["timed", "derived_only", "quality", "new_entry"]
+
+
+def _record(suite, policy, cum, regret=None, acc=None):
+    return TrialRecord(
+        suite=suite, policy=policy, coord=(), cum_utility=cum,
+        cum_utility_seeds=(cum,), participation=2.0, regret=regret,
+        regret_seeds=None if regret is None else (regret,), final_acc=acc)
+
+
+def test_check_suite_gate(tmp_path):
+    base_path = str(tmp_path / "base.json")
+    recs = [_record("s", "Oracle", 100.0),
+            _record("s", "COCS", 90.0, regret=10.0, acc=0.80)]
+    ledger.merge_entries([r.to_entry() for r in recs], base_path)
+    baseline = ledger.load_entries(base_path)
+
+    # identical run -> all OK
+    n, report = ledger.check_suite(baseline, baseline, "s")
+    assert n == 0 and all("OK" in line for line in report)
+
+    # no baseline for the label -> clean skip
+    n, report = ledger.check_suite({}, baseline, "s")
+    assert n == 0 and "skipping" in report[0]
+
+    # accuracy drift within atol passes; utility drift fails exactly
+    cur = [_record("s", "Oracle", 100.0),
+           _record("s", "COCS", 90.0, regret=10.0, acc=0.81)]
+    current = {e["name"]: e for e in (r.to_entry() for r in cur)}
+    n, _ = ledger.check_suite(baseline, current, "s", acc_atol=0.02)
+    assert n == 0
+    n, _ = ledger.check_suite(baseline, current, "s", acc_atol=0.005)
+    assert n == 1
+    cur[1] = _record("s", "COCS", 89.0, regret=11.0, acc=0.80)
+    current = {e["name"]: e for e in (r.to_entry() for r in cur)}
+    n, report = ledger.check_suite(baseline, current, "s")
+    assert n == 1 and any("cum_utility" in line and "FAIL" in line
+                          for line in report)
+
+    # baseline cell missing from current run -> FAIL
+    current = {k: v for k, v in baseline.items() if "COCS" not in k}
+    n, report = ledger.check_suite(baseline, current, "s")
+    assert n == 1 and any("missing from current" in line for line in report)
+
+
+# -- end-to-end: tiny custom suite through run_suite + self-gate -------------
+
+
+def _mini_suite():
+    pols = tuple((d, PolicySpec(name=POLICY_TABLE[d][0],
+                                seed_offset=POLICY_TABLE[d][1]))
+                 for d in ("Oracle", "COCS", "Random"))
+    return TrialSuite(
+        name="mini",
+        base=ExperimentSpec(env=EnvSpec(scenario="paper",
+                                        config="mnist-convex"),
+                            horizon=20, seeds=(0,)),
+        policies=pols)
+
+
+def test_run_suite_end_to_end(tmp_path):
+    from repro import api
+
+    path = str(tmp_path / "BENCH_mini.json")
+    suite = _mini_suite()
+    result = run_suite(suite, ledger=path)
+    assert result.label == "mini"
+    assert {r.policy for r in result.records} == \
+        {"Oracle", "COCS", "Random"}
+    # scored records match a direct facade run of the same specs
+    for cell in suite.cells():
+        rec = result.record(cell.policy)
+        res = api.run(cell.spec)
+        cum = float(np.asarray(res.cumulative_utility())[:, -1].mean())
+        assert rec.cum_utility == pytest.approx(cum)
+        assert rec.draw_schedule == res.draw_schedule
+    oracle = result.record("Oracle")
+    assert oracle.regret is None
+    for policy in ("COCS", "Random"):
+        rec = result.record(policy)
+        assert rec.regret == pytest.approx(
+            oracle.cum_utility - rec.cum_utility)
+        assert rec.regret >= 0.0
+    # the ledger got one entry per record, with suite + provenance
+    entries = ledger.load_entries(path)
+    assert len(entries) == len(result.records)
+    for e in entries.values():
+        assert e["suite"] == "mini"
+        assert e["provenance"]["spec"]["horizon"] == 20
+    # a repeat run regresses nothing against its own committed baseline
+    run_suite(suite, ledger=path)
+    n, report = ledger.check_suite(entries, ledger.load_entries(path),
+                                   "mini")
+    assert n == 0, report
