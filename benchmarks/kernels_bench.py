@@ -8,6 +8,14 @@ kernel body per grid step in Python) and, on TPU, the compiled tiled
 kernel, across parameter counts and the fused experiment engine's seed
 axis. ``best_tile`` — the autotuner ``make_engine`` consults instead of a
 hardcoded tile — reports its pick per size.
+
+The ``context_pairwise`` and ``budgeted_topk`` sweeps follow the same
+shape at the simulator's cohort sizes (N in {200, 1000}): jnp ref vs
+interpret kernel vs (TPU) tiled kernel, plus a seed-axis (vmap S=4) row.
+Each carries a same-run normalizer for the CI guard — the *unfused*
+stage-by-stage context realization (``_seq``) and the legacy while-loop
+solvers (``_while``) — so the guarded quantity is the fused/sorted
+path's relative cost, hardware-independent.
 """
 from __future__ import annotations
 
@@ -17,16 +25,31 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, derived_row, timed
+from repro.core.network import path_loss_gain
+from repro.kernels.budgeted_topk.ops import budgeted_topk, flgreedy_topk
+from repro.kernels.context_pairwise.kernel import context_pairwise_kernel
+from repro.kernels.context_pairwise.ops import \
+    best_tile as ctx_best_tile
+from repro.kernels.context_pairwise.ref import (latency,
+                                                pairwise_context_ref,
+                                                shannon_rate)
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.masked_aggregate.kernel import masked_aggregate_kernel
 from repro.kernels.masked_aggregate.ops import (best_tile,
                                                 masked_aggregate_stacked)
 from repro.kernels.masked_aggregate.ref import masked_aggregate_ref
 from repro.models.layers import chunked_linear_recurrence
+from repro.policies.solvers import flgreedy_assign, greedy_assign
 
 TILE_CANDIDATES = (256, 512, 1024)
 PARAM_COUNTS = (10_000, 100_000, 1_000_000)
 INTERPRET_MAX_D = 10_000       # interpret mode is O(grid) Python steps
+
+# simulator-scale (N clients, M edge servers) pairs: the paper-scale
+# device cohort and the metropolis-1k cohort
+SIM_SIZES = ((200, 3), (1000, 12))
+CTX_TILES = (64, 128)
+PHYS = dict(tx_w=0.2, noise_psd_w=3.98e-21, update_bits=1e5, workload=1e7)
 
 
 def _tile_sweep(key) -> List[Row]:
@@ -82,6 +105,142 @@ def _tile_sweep(key) -> List[Row]:
     return rows
 
 
+def _context_inputs(key, n, m):
+    ks = jax.random.split(key, 6)
+    return (jax.random.uniform(ks[0], (n, 2), jnp.float32, -1.5, 1.5),
+            jax.random.uniform(ks[1], (m, 2), jnp.float32, -1.5, 1.5),
+            jax.random.uniform(ks[2], (n,), jnp.float32, 1e6, 2e6),
+            jax.random.uniform(ks[3], (n,), jnp.float32, 1e8, 1e9),
+            jax.random.exponential(ks[4], (n, m), jnp.float32),
+            jax.random.exponential(ks[5], (n, m), jnp.float32))
+
+
+def _context_sweep(key) -> List[Row]:
+    rows: List[Row] = []
+    on_tpu = jax.default_backend() == "tpu"
+    for n, m in SIM_SIZES:
+        args = _context_inputs(key, n, m)
+        fused = jax.jit(lambda *a: pairwise_context_ref(*a, **PHYS))
+        jax.block_until_ready(fused(*args))
+        us, _ = timed(lambda: jax.block_until_ready(fused(*args)),
+                      repeats=5)
+        rows.append((f"kernel_context_pairwise_ref_n{n}", us,
+                     f"M={m};picked_tile={ctx_best_tile(n, m)}"))
+
+        # the unfused normalizer: one dispatch (and one HBM round-trip)
+        # per Eq. 4/5 stage, host sync between — what sim_round did
+        # before the stages were fused into one call
+        f_d = jax.jit(lambda pos, es: jnp.sqrt(
+            jnp.sum((pos[:, None] - es[None]) ** 2, -1)))
+        f_g = jax.jit(lambda d: path_loss_gain(d, xp=jnp))
+        f_t = jax.jit(lambda bw, cp, a, b, g: latency(
+            bw[:, None], cp[:, None], a, b, g, **PHYS))
+        f_r = jax.jit(lambda bw, g: shannon_rate(
+            bw[:, None], 1.0, g, tx_w=PHYS["tx_w"],
+            noise_psd_w=PHYS["noise_psd_w"]))
+
+        def seq(a=args):
+            pos, es, bw, cp, fdt, fut = a
+            d = f_d(pos, es).block_until_ready()
+            g = f_g(d).block_until_ready()
+            t = f_t(bw, cp, fdt, fut, g).block_until_ready()
+            return f_r(bw, g).block_until_ready()
+
+        seq()
+        us, _ = timed(seq, repeats=5)
+        rows.append((f"kernel_context_pairwise_seq_n{n}", us,
+                     "dispatches=4"))
+
+        # seed axis: the fused engines vmap sim_round over S seeds
+        s_args = tuple(jnp.broadcast_to(a, (4,) + a.shape) for a in args)
+        fused_s = jax.jit(jax.vmap(lambda *a: pairwise_context_ref(
+            *a, **PHYS)))
+        jax.block_until_ready(fused_s(*s_args))
+        us, _ = timed(lambda: jax.block_until_ready(fused_s(*s_args)),
+                      repeats=5)
+        rows.append((f"kernel_context_pairwise_seedaxis_n{n}", us, "S=4"))
+
+        for tile in CTX_TILES:
+            fi = lambda: jax.block_until_ready(context_pairwise_kernel(
+                *args, tile=tile, interpret=True, **PHYS))
+            fi()
+            us, _ = timed(fi)
+            rows.append((f"kernel_context_pairwise_interp_n{n}_t{tile}",
+                         us, "interpret=1"))
+            if on_tpu:
+                ft = lambda: jax.block_until_ready(context_pairwise_kernel(
+                    *args, tile=tile, interpret=False, **PHYS))
+                ft()
+                us, _ = timed(ft, repeats=3)
+                rows.append((f"kernel_context_pairwise_tiled_n{n}_t{tile}",
+                             us, ""))
+    if not on_tpu:
+        rows.append(derived_row("kernel_context_pairwise_tiled",
+                                "skipped: compiled Pallas path needs TPU "
+                                "(interpret-only container)"))
+    return rows
+
+
+def _topk_inputs(key, n, m):
+    ks = jax.random.split(key, 3)
+    values = jax.random.uniform(ks[0], (n, m), jnp.float32)
+    costs = jax.random.uniform(ks[1], (n,), jnp.float32, 0.2, 1.0)
+    budgets = jnp.full((m,), 5.0, jnp.float32)   # ~8 picks per ES
+    eligible = jax.random.uniform(ks[2], (n, m)) < 0.7
+    return values, costs, budgets, eligible
+
+
+def _topk_sweep(key) -> List[Row]:
+    rows: List[Row] = []
+    on_tpu = jax.default_backend() == "tpu"
+    for n, m in SIM_SIZES:
+        args = _topk_inputs(key, n, m)
+        pairs = (
+            (f"kernel_greedy_while_n{n}",
+             lambda: greedy_assign(*args, use_kernel=False)),
+            (f"kernel_budgeted_topk_n{n}",
+             lambda: budgeted_topk(*args, use_kernel=False)),
+            (f"kernel_flgreedy_while_n{n}",
+             lambda: flgreedy_assign(*args, use_kernel=False)),
+            (f"kernel_flgreedy_topk_n{n}",
+             lambda: flgreedy_topk(*args, use_kernel=False)),
+        )
+        for name, fn in pairs:
+            fn().block_until_ready()
+            us, _ = timed(lambda f=fn: f().block_until_ready(), repeats=5)
+            rows.append((name, us, f"M={m}"))
+
+        # seed axis: solver vmapped over S=4 stacked problem instances
+        s_args = tuple(jnp.broadcast_to(a, (4,) + a.shape) for a in args)
+        walk_s = jax.jit(jax.vmap(
+            lambda v, c, b, e: budgeted_topk(v, c, b, e,
+                                             use_kernel=False)))
+        jax.block_until_ready(walk_s(*s_args))
+        us, _ = timed(lambda: jax.block_until_ready(walk_s(*s_args)),
+                      repeats=5)
+        rows.append((f"kernel_budgeted_topk_seedaxis_n{n}", us, "S=4"))
+
+        tile = 128
+        fi = lambda: budgeted_topk(*args, use_kernel=True, tile=tile,
+                                   interpret=True).block_until_ready()
+        fi()
+        us, _ = timed(fi)
+        rows.append((f"kernel_budgeted_topk_interp_n{n}_t{tile}", us,
+                     "interpret=1"))
+        if on_tpu:
+            ft = lambda: budgeted_topk(*args, use_kernel=True, tile=tile,
+                                       interpret=False).block_until_ready()
+            ft()
+            us, _ = timed(ft, repeats=3)
+            rows.append((f"kernel_budgeted_topk_tiled_n{n}_t{tile}", us,
+                         ""))
+    if not on_tpu:
+        rows.append(derived_row("kernel_budgeted_topk_tiled",
+                                "skipped: compiled Pallas path needs TPU "
+                                "(interpret-only container)"))
+    return rows
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     key = jax.random.PRNGKey(0)
@@ -98,6 +257,8 @@ def run() -> List[Row]:
     rows.append(("kernel_masked_aggregate_16x4M", us,
                  f"GBps={gb / (us / 1e6):.2f}"))
     rows.extend(_tile_sweep(key))
+    rows.extend(_context_sweep(key))
+    rows.extend(_topk_sweep(key))
 
     # attention: b1 h8 kv2 s1024 d64
     q = jax.random.normal(key, (1, 8, 1024, 64))

@@ -110,7 +110,8 @@ def build_env(env_spec: EnvSpec):
     cfg = resolve_config(env_spec)
     if use_device:
         return sim.make(scen, cfg, mc_true_p=env_spec.mc_true_p,
-                        true_p=env_spec.true_p)
+                        true_p=env_spec.true_p,
+                        use_kernel=env_spec.use_kernel)
     return envs.make(scen, cfg, true_p=env_spec.true_p)
 
 

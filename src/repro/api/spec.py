@@ -112,6 +112,9 @@ class EnvSpec:
     and batchable in grids. ``true_p`` picks the ground-truth
     participation estimator: ``"mc"`` (Monte-Carlo fading pairs) or
     ``"analytic"`` (exact Eq. 6 integral, ``repro.sim.truep``).
+    ``use_kernel`` routes the device simulator's Eq. 4/5 context stage
+    through the fused Pallas kernel (``None`` -> auto: jnp oracle on
+    CPU, kernel on TPU; device backend only, bitwise-identical).
     """
     scenario: str = "paper"
     backend: str = "auto"            # "auto" | "host" | "device"
@@ -119,6 +122,7 @@ class EnvSpec:
     deadline: Optional[float] = None
     true_p: str = "mc"               # "mc" | "analytic"
     mc_true_p: int = 128
+    use_kernel: Optional[bool] = None
     overrides: Tuple[Tuple[str, Any], ...] = ()
 
     def to_dict(self) -> Dict[str, Any]:

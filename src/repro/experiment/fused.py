@@ -30,6 +30,13 @@ Two block variants share one round body (``_train_round_step``):
 Carries (policy state, edge params, env positions) are donated, so a
 run's device residency is: one dispatch per eval interval, zero host
 round-trips inside it.
+
+Pallas kernel routing inside the block needs no parameters here: the
+env stage honors ``SimSpec.use_kernel``/``kernel_tile`` (fused Eq. 4/5
+``context_pairwise`` launch inside the scan) and the select stage honors
+the policy dataclass's ``use_kernel`` (``budgeted_topk`` solver) — both
+ride static arguments, and each resolves to a bitwise-identical jnp path
+on CPU, so kernels-on blocks reproduce kernels-off decisions exactly.
 """
 from __future__ import annotations
 

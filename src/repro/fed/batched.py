@@ -61,20 +61,9 @@ from repro.core.network import RoundData
 from repro.data.federated import FederatedDataset, StackedClients
 from repro.fed.client import local_sgd, local_sgd_multi
 from repro.fed.edge import broadcast_global, effective_mask_multi
+from repro.kernels.common import resolve_kernel_mode
 from repro.kernels.masked_aggregate.ops import (best_tile,
                                                 masked_aggregate_stacked)
-
-
-def resolve_kernel_mode(use_kernel: Optional[bool]) -> Tuple[bool, bool]:
-    """(use_kernel, interpret): Pallas compiled on TPU, interpret elsewhere.
-
-    ``use_kernel=None`` auto-selects: the kernel path on TPU, the jnp
-    oracle on CPU (interpret mode is a debugging tool, not a fast path).
-    """
-    on_tpu = jax.default_backend() == "tpu"
-    if use_kernel is None:
-        use_kernel = on_tpu
-    return bool(use_kernel), not on_tpu
 
 
 @dataclass(frozen=True)

@@ -1,3 +1,9 @@
+from repro.kernels.budgeted_topk import (budgeted_topk, flgreedy_topk,
+                                         sorted_candidates)
+from repro.kernels.common import resolve_kernel_mode
+from repro.kernels.context_pairwise import (PairwiseContext,
+                                            pairwise_context,
+                                            pairwise_context_ref)
 from repro.kernels.flash_attention import attention_ref, flash_attention
 from repro.kernels.masked_aggregate import (masked_aggregate,
                                             masked_aggregate_flat,
@@ -6,7 +12,10 @@ from repro.kernels.masked_aggregate import (masked_aggregate,
                                             masked_aggregate_stacked)
 from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
 
-__all__ = ["attention_ref", "flash_attention", "masked_aggregate",
+__all__ = ["PairwiseContext", "attention_ref", "budgeted_topk",
+           "flash_attention", "flgreedy_topk", "masked_aggregate",
            "masked_aggregate_flat", "masked_aggregate_ref",
            "masked_aggregate_ref_stacked", "masked_aggregate_stacked",
-           "rwkv6_scan", "rwkv6_scan_ref"]
+           "pairwise_context", "pairwise_context_ref",
+           "resolve_kernel_mode", "rwkv6_scan", "rwkv6_scan_ref",
+           "sorted_candidates"]

@@ -1,0 +1,11 @@
+from repro.kernels.budgeted_topk.kernel import (bitonic_sort_desc,
+                                               density_sort_kernel)
+from repro.kernels.budgeted_topk.ops import (best_tile, budgeted_topk,
+                                             flgreedy_topk,
+                                             sorted_candidates)
+from repro.kernels.budgeted_topk.ref import (pair_density,
+                                             sorted_candidates_ref)
+
+__all__ = ["best_tile", "bitonic_sort_desc", "budgeted_topk",
+           "density_sort_kernel", "flgreedy_topk", "pair_density",
+           "sorted_candidates", "sorted_candidates_ref"]

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: tile-local density partial sort for budgeted
+top-k selection.
+
+Each grid step fuses the P2 density computation (value / max(cost,
+1e-12) masked by eligibility) with an in-VMEM bitonic sort of one client
+tile's ``tile x M`` candidate block into a single descending
+(density, flat-index) list — the tile-local partial sort. The cross-tile
+merge happens *as the budget walk consumes the per-tile lists*
+(``ops.budgeted_topk``): each greedy step takes the best still-feasible
+head across tiles, which is exactly the global greedy order because the
+pick order is a strict total order, so no second merge pass over HBM is
+needed and selection is one kernel launch plus the walk.
+
+VMEM tiling contract: grid = one program per client tile; each step
+loads (tile, M) values/eligibility and a (tile, 1) cost column, pads the
+tile*M candidates to the next power of two and sorts them entirely in
+VMEM with a bitonic network of reshape/select stages (O(log^2) stages,
+no gathers — partner exchange at distance 2^j is a (g, 2, 2^j) reshape),
+then writes one (1, P) sorted density row and one (1, P) sorted
+flat-index row. Ties break toward the larger flat index, mirroring the
+legacy reversed stable argsort. Padded entries carry density -inf /
+index -1 and sink to the tail.
+
+CPU fallback semantics: ``use_kernel=False`` (the production CPU path)
+sorts the whole density table with one argsort in ``ref.py`` — a single
+segment — and feeds the same walk; ``interpret=True`` runs this body per
+grid step under the Pallas interpreter for parity tests. All layouts
+produce bitwise-identical assignments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(d, ix, block: int, dist: int):
+    """One bitonic stage at partner distance ``dist`` on (1, P) rows,
+    sorting toward (density desc, index desc) in even ``block`` runs."""
+    p = d.shape[-1]
+    g = p // (2 * dist)
+    d3 = d.reshape(g, 2, dist)
+    i3 = ix.reshape(g, 2, dist)
+    a_d, b_d = d3[:, 0], d3[:, 1]
+    a_i, b_i = i3[:, 0], i3[:, 1]
+    pos_a = (jax.lax.broadcasted_iota(jnp.int32, (g, dist), 0) * (2 * dist)
+             + jax.lax.broadcasted_iota(jnp.int32, (g, dist), 1))
+    desc = (pos_a // block) % 2 == 0
+    a_first = (a_d > b_d) | ((a_d == b_d) & (a_i >= b_i))
+    swap = jnp.where(desc, ~a_first, a_first)
+    d_out = jnp.stack([jnp.where(swap, b_d, a_d),
+                       jnp.where(swap, a_d, b_d)], axis=1)
+    i_out = jnp.stack([jnp.where(swap, b_i, a_i),
+                       jnp.where(swap, a_i, b_i)], axis=1)
+    return d_out.reshape(1, p), i_out.reshape(1, p)
+
+
+def bitonic_sort_desc(d: jax.Array, ix: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Sort (1, P) key/index rows by (key desc, index desc); P a power
+    of two. Pure reshape/select network — Mosaic-friendly, no gathers."""
+    p = d.shape[-1]
+    assert p & (p - 1) == 0, f"bitonic size {p} not a power of two"
+    stages = p.bit_length() - 1
+    for k in range(1, stages + 1):
+        for j in range(k - 1, -1, -1):
+            d, ix = _compare_exchange(d, ix, 1 << k, 1 << j)
+    return d, ix
+
+
+def _kernel(v_ref, c_ref, e_ref, d_ref, i_ref, *, tile, m, p2):
+    pid = pl.program_id(0)
+    dens = jnp.where(e_ref[...],
+                     v_ref[...] / jnp.maximum(c_ref[...], 1e-12),
+                     -jnp.inf)
+    row = jax.lax.broadcasted_iota(jnp.int32, (tile, m), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (tile, m), 1)
+    gidx = (pid * tile + row) * m + col
+    d = dens.reshape(1, tile * m)
+    ix = gidx.reshape(1, tile * m)
+    pad = p2 - tile * m
+    if pad:
+        d = jnp.concatenate(
+            [d, jnp.full((1, pad), -jnp.inf, d.dtype)], axis=1)
+        ix = jnp.concatenate(
+            [ix, jnp.full((1, pad), -1, jnp.int32)], axis=1)
+    d, ix = bitonic_sort_desc(d, ix)
+    d_ref[...] = d
+    i_ref[...] = ix
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def density_sort_kernel(values: jax.Array, costs: jax.Array,
+                        eligible: jax.Array, tile: int = 128,
+                        interpret: bool = True
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """values (N, M), costs (N,), eligible (N, M) bool ->
+    (densities, flat_indices), each (num_tiles, P) with every row sorted
+    (density desc, index desc); P = next power of two >= tile * M."""
+    n, m = values.shape
+    pad = (-n) % tile
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        costs = jnp.pad(costs, (0, pad), constant_values=1.0)
+        eligible = jnp.pad(eligible, ((0, pad), (0, 0)))   # False: -inf
+    np_ = values.shape[0]
+    p2 = 1 << (tile * m - 1).bit_length()
+    kern = functools.partial(_kernel, tile=tile, m=m, p2=p2)
+    d_s, i_s = pl.pallas_call(
+        kern,
+        grid=(np_ // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, m), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, p2), lambda i: (i, 0)),
+                   pl.BlockSpec((1, p2), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((np_ // tile, p2), jnp.float32),
+                   jax.ShapeDtypeStruct((np_ // tile, p2), jnp.int32)],
+        interpret=interpret,
+    )(values.astype(jnp.float32),
+      costs.reshape(np_, 1).astype(jnp.float32),
+      eligible.astype(bool))
+    return d_s, i_s

@@ -1,0 +1,186 @@
+"""jit'd public wrappers: budgeted top-k selection over sorted candidates.
+
+``budgeted_topk`` solves P2 (density greedy) and ``flgreedy_topk`` P3
+(sqrt-utility cost-benefit greedy) over a *sorted, flattened* candidate
+layout instead of the legacy (N, M)-wide argmax loop: the density table
+is computed and tile-sorted once (Pallas kernel on TPU, one jnp argsort
+on CPU — ``use_kernel`` routing as in ``fed.batched``), and the budget
+walk then takes one greedy pick per iteration by scanning each segment
+for its first still-feasible head and merging the heads across segments.
+Because the pick order is a strict total order (density desc, flat index
+desc), per-tile segments merge to exactly the global greedy sequence —
+the cross-tile merge under the budget constraint — and both layouts are
+bitwise-identical to ``policies.solvers.greedy_assign``.
+
+P3's marginal gains depend on the running utility total, so its pick
+order cannot be pre-sorted (lazy evaluation is exact only because it
+re-checks the heap top); ``flgreedy_topk`` therefore keeps the exact
+iterative walk but runs it over the same compressed sorted layout,
+recomputing gains per iteration — bitwise-identical to
+``flgreedy_assign``.
+
+``best_tile`` is the client-axis tile autotuner (TPU-only timing, the
+``masked_aggregate.ops.best_tile`` pattern).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.budgeted_topk.kernel import density_sort_kernel
+from repro.kernels.budgeted_topk.ref import sorted_candidates_ref
+
+DEFAULT_TILE = 128
+
+
+@functools.lru_cache(maxsize=None)
+def best_tile(num_clients: int, num_es: int,
+              candidates: Tuple[int, ...] = (64, 128, 256)) -> int:
+    """Time candidate client-axis tiles on TPU; default elsewhere (the
+    jnp oracle is the CPU fast path and interpret timings say nothing
+    about the lowered kernel). Cached per (N, M)."""
+    if jax.default_backend() != "tpu":
+        return DEFAULT_TILE
+    key = jax.random.PRNGKey(0)
+    n, m = max(int(num_clients), 1), max(int(num_es), 1)
+    values = jax.random.uniform(key, (n, m), jnp.float32)
+    costs = jnp.full((n,), 0.5, jnp.float32)
+    eligible = jnp.ones((n, m), bool)
+    best_us, pick = None, DEFAULT_TILE
+    for tile in candidates:
+        def call(tile=tile):
+            return density_sort_kernel(values, costs, eligible, tile=tile,
+                                       interpret=False)
+        jax.block_until_ready(call())         # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(call())
+        dt = (time.perf_counter() - t0) / 3
+        if best_us is None or dt < best_us:
+            best_us, pick = dt, tile
+    return pick
+
+
+def sorted_candidates(values: jax.Array, costs: jax.Array,
+                      eligible: jax.Array, use_kernel: bool = False,
+                      tile: int = 0, interpret: bool = True
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """(density, flat_index) segments, each row sorted (density desc,
+    index desc): (num_tiles, P) from the Pallas kernel, or one (1, N*M)
+    segment from the jnp oracle. Padding rides as density -inf."""
+    if use_kernel:
+        t = int(tile) or best_tile(int(values.shape[0]),
+                                   int(values.shape[1]))
+        return density_sort_kernel(values, costs, eligible, tile=t,
+                                   interpret=interpret)
+    return sorted_candidates_ref(values, costs, eligible)
+
+
+def _segment_pick(head_d, head_i):
+    """Merge per-segment heads: max density, ties toward the larger flat
+    index — the legacy argmax direction. Returns (ok, flat_index)."""
+    ok = jnp.max(head_d) > -jnp.inf
+    best = jnp.max(jnp.where(head_d == jnp.max(head_d), head_i, -1))
+    return ok, jnp.maximum(best, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "tile",
+                                             "interpret"))
+def budgeted_topk(values: jax.Array, costs: jax.Array, budgets: jax.Array,
+                  eligible: jax.Array, use_kernel: bool = False,
+                  tile: int = 0, interpret: bool = True) -> jax.Array:
+    """Density greedy for P2 over sorted candidates. values (N, M),
+    costs (N,), budgets (M,), eligible (N, M) bool -> assign (N,) int32
+    (-1 = unselected); bitwise-identical to ``greedy_assign``."""
+    n, m = values.shape
+    d_s, i_s = sorted_candidates(values, costs, eligible,
+                                 use_kernel=use_kernel, tile=tile,
+                                 interpret=interpret)
+    flat = jnp.clip(i_s, 0, n * m - 1)            # pads clip; d=-inf anyway
+    i_cl, j_es = flat // m, flat % m
+    c_s = costs[i_cl]
+    nseg = d_s.shape[0]
+    seg = jnp.arange(nseg)
+
+    def cond(carry):
+        assign, remaining, k, live = carry
+        return live & (k < n)
+
+    def body(carry):
+        assign, remaining, k, live = carry
+        feas = ((d_s > 0.0) & (assign[i_cl] < 0)
+                & (c_s <= remaining[j_es] + 1e-12))
+        hit = feas.any(axis=1)
+        first = jnp.argmax(feas, axis=1)          # first feasible = best:
+        head_d = jnp.where(hit, d_s[seg, first], -jnp.inf)   # rows sorted
+        head_i = jnp.where(hit, i_s[seg, first], -1)
+        ok, pick = _segment_pick(head_d, head_i)
+        i, j = pick // m, pick % m
+        assign = jnp.where(ok, assign.at[i].set(j.astype(assign.dtype)),
+                           assign)
+        remaining = jnp.where(ok, remaining.at[j].add(-costs[i]), remaining)
+        return assign, remaining, k + 1, ok
+
+    assign0 = jnp.full(n, -1, jnp.int32)
+    carry = (assign0, budgets.astype(values.dtype),
+             jnp.zeros((), jnp.int32), jnp.ones((), bool))
+    assign, _, _, _ = lax.while_loop(cond, body, carry)
+    return assign
+
+
+@functools.partial(jax.jit, static_argnames=("num_es", "use_kernel",
+                                             "tile", "interpret"))
+def flgreedy_topk(values: jax.Array, costs: jax.Array, budgets: jax.Array,
+                  eligible: jax.Array, num_es: int = 0,
+                  use_kernel: bool = False, tile: int = 0,
+                  interpret: bool = True) -> jax.Array:
+    """Cost-benefit greedy for P3 (Eq. 19 sqrt utility) over the same
+    compressed sorted layout; bitwise-identical to ``flgreedy_assign``."""
+    n, m = values.shape
+    m_div = float(num_es or m)
+    d_s, i_s = sorted_candidates(values, costs, eligible,
+                                 use_kernel=use_kernel, tile=tile,
+                                 interpret=interpret)
+    flat = jnp.clip(i_s, 0, n * m - 1)
+    i_cl, j_es = flat // m, flat % m
+    v_s = values.reshape(-1)[flat]
+    c_s = costs[i_cl]
+    cand = d_s > -jnp.inf                # eligible, unpadded entries
+
+    def util(total):
+        return jnp.sqrt(jnp.maximum(total, 0.0) / m_div)
+
+    def cond(carry):
+        assign, remaining, total, k, live = carry
+        return live & (k < n)
+
+    def body(carry):
+        assign, remaining, total, k, live = carry
+        gains = util(total + v_s) - util(total)
+        feas = (cand & (c_s > 0) & (assign[i_cl] < 0)
+                & (c_s <= remaining[j_es] + 1e-12))
+        r = jnp.where(feas, gains / jnp.maximum(c_s, 1e-12), -jnp.inf)
+        rmax = jnp.max(r)
+        pick = jnp.maximum(jnp.max(jnp.where(r == rmax, flat, -1)), 0)
+        # duplicate flats (clipped pads) share v, so the gain lookup by
+        # flat index is unambiguous
+        g_best = jnp.max(jnp.where(flat == pick, gains, -jnp.inf))
+        ok = (rmax > -jnp.inf) & (g_best > 1e-15)
+        i, j = pick // m, pick % m
+        assign = jnp.where(ok, assign.at[i].set(j.astype(assign.dtype)),
+                           assign)
+        remaining = jnp.where(ok, remaining.at[j].add(-costs[i]), remaining)
+        total = jnp.where(ok, total + values[i, j], total)
+        return assign, remaining, total, k + 1, ok
+
+    assign0 = jnp.full(n, -1, jnp.int32)
+    carry = (assign0, budgets.astype(values.dtype),
+             jnp.zeros((), values.dtype), jnp.zeros((), jnp.int32),
+             jnp.ones((), bool))
+    assign, _, _, _, _ = lax.while_loop(cond, body, carry)
+    return assign

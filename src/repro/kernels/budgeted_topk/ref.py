@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the budgeted_topk kernel: the P2 density table
+and its (density desc, flat-index desc) total order.
+
+The density greedy's pick order is a *strict* total order — density
+descending, ties broken toward the larger flat (client * M + ES) index,
+mirroring the legacy reversed stable argsort — so "the" sorted candidate
+list is unique and any tiling of the sort produces the same budget-walk
+decisions. The oracle sorts the whole table as a single segment; the
+Pallas kernel emits one sorted segment per client tile and the shared
+walk (``ops.py``) consumes either layout identically.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pair_density(values: jax.Array, costs: jax.Array,
+                 eligible: jax.Array) -> jax.Array:
+    """The P2 greedy's value-density table: (N, M), -inf where ineligible.
+
+    Identical primitive sequence to ``policies.solvers.greedy_assign`` so
+    the two paths agree bitwise."""
+    return jnp.where(eligible,
+                     values / jnp.maximum(costs[:, None], 1e-12),
+                     -jnp.inf)
+
+
+def sorted_candidates_ref(values: jax.Array, costs: jax.Array,
+                          eligible: jax.Array
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """One globally sorted segment: ``(density, flat_index)`` rows of
+    shape (1, N*M), density descending with ties toward the larger flat
+    index (the legacy argmax direction)."""
+    n, m = values.shape
+    d = pair_density(values, costs, eligible).reshape(-1)
+    # stable argsort over the reversed, negated table: ascending -d is
+    # descending d, and reversing first makes stable ties resolve toward
+    # the larger original flat index after un-reversing
+    order = (n * m - 1) - jnp.argsort(-d[::-1], stable=True)
+    return (d[order].reshape(1, n * m),
+            order.astype(jnp.int32).reshape(1, n * m))

@@ -1,0 +1,28 @@
+"""Shared kernel-routing helpers for the Pallas kernel packages.
+
+Every kernel package in ``repro.kernels`` follows the same three-way
+routing convention: the compiled Pallas kernel on TPU, the pure-jnp
+oracle as the production CPU path, and the kernel body under the Pallas
+interpreter as the CPU debugging/parity path. ``resolve_kernel_mode``
+is that convention as a function; callers (``repro.fed.batched``,
+``repro.sim.core``, ``repro.policies.solvers``) resolve their
+``use_kernel`` knob through it at trace time so a ``None`` default means
+"fast path for the current backend" everywhere.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def resolve_kernel_mode(use_kernel: Optional[bool]) -> Tuple[bool, bool]:
+    """(use_kernel, interpret): Pallas compiled on TPU, interpret elsewhere.
+
+    ``use_kernel=None`` auto-selects: the kernel path on TPU, the jnp
+    oracle on CPU (interpret mode is a debugging tool, not a fast path).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel is None:
+        use_kernel = on_tpu
+    return bool(use_kernel), not on_tpu

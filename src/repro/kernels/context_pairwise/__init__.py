@@ -1,0 +1,7 @@
+from repro.kernels.context_pairwise.ops import (best_tile, pairwise_context)
+from repro.kernels.context_pairwise.ref import (PairwiseContext, latency,
+                                               pairwise_context_ref,
+                                               shannon_rate)
+
+__all__ = ["PairwiseContext", "best_tile", "latency", "pairwise_context",
+           "pairwise_context_ref", "shannon_rate"]

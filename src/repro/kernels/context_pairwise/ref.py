@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the context_pairwise kernel (Eq. 4/5 bodies).
+
+The Shannon-rate and latency formulas live here, once: the device
+simulator (``repro.sim.core``) delegates its ``_shannon_rate``/
+``_latency`` helpers to these functions, the Pallas kernel body calls
+the very same functions on its VMEM tiles, and this oracle composes them
+at full ``(N, M)`` shape. One primitive sequence shared by all three
+paths is what makes the kernel-on/kernel-off parity *bitwise* rather
+than merely within tolerance — any drift would desynchronize policy
+decisions downstream (hypercube binning floors the contexts).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.network import path_loss_gain
+
+
+class PairwiseContext(NamedTuple):
+    """The per-(client, ES) tensors ``sim_round`` consumes downstream."""
+    dist: jax.Array     # (N, M) client-ES distance, km
+    gain: jax.Array     # (N, M) path-loss channel gain g0
+    rate: jax.Array     # (N, M) Eq. 4 rate at the fading mean, bits/s
+    tau: jax.Array      # (N, M) realized Eq. 5 round latency, s
+
+
+def shannon_rate(bandwidth, fading, g0, *, tx_w, noise_psd_w):
+    """Eq. 4: B * log2(1 + P g / (N0 B)) with g = fading * g0."""
+    g = fading * g0
+    snr = tx_w * g / (noise_psd_w * bandwidth)
+    # log1p, not log2(1 + snr): at float32, 1 + snr rounds away up to
+    # ~eps/snr relative precision for the weak-channel tail, which the
+    # host float64 oracle would then expose as latency mismatches
+    return bandwidth * (jnp.log1p(snr) / jnp.log(2.0))
+
+
+def latency(bandwidth, compute, fad_dt, fad_ut, g0, *, tx_w, noise_psd_w,
+            update_bits, workload):
+    """Eq. 5: download + compute + upload time for one round."""
+    r_dt = shannon_rate(bandwidth, fad_dt, g0, tx_w=tx_w,
+                        noise_psd_w=noise_psd_w)
+    r_ut = shannon_rate(bandwidth, fad_ut, g0, tx_w=tx_w,
+                        noise_psd_w=noise_psd_w)
+    return (update_bits / jnp.maximum(r_dt, 1e-9)
+            + workload / jnp.maximum(compute, 1e-9)
+            + update_bits / jnp.maximum(r_ut, 1e-9))
+
+
+def pairwise_context_ref(pos, es, bandwidth, compute, fad_dt, fad_ut, *,
+                         tx_w, noise_psd_w, update_bits, workload
+                         ) -> PairwiseContext:
+    """Full-shape oracle: pos (N, 2), es (M, 2), bandwidth/compute (N,),
+    fad_dt/fad_ut (N, M) -> the four (N, M) context tensors."""
+    d = jnp.sqrt(jnp.sum((pos[:, None] - es[None]) ** 2, -1))
+    g0 = path_loss_gain(d, xp=jnp)
+    bw = bandwidth[:, None]
+    tau = latency(bw, compute[:, None], fad_dt, fad_ut, g0, tx_w=tx_w,
+                  noise_psd_w=noise_psd_w, update_bits=update_bits,
+                  workload=workload)
+    rate = shannon_rate(bw, 1.0, g0, tx_w=tx_w, noise_psd_w=noise_psd_w)
+    return PairwiseContext(dist=d, gain=g0, rate=rate, tau=tau)

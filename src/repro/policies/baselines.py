@@ -30,6 +30,9 @@ class KeyState(NamedTuple):
 @dataclass(frozen=True)
 class Oracle(FunctionalPolicy):
     """Knows the realized per-round outcomes X (upper bound)."""
+    # Pallas routing for the greedy solve (repro.kernels.common).
+    use_kernel: Optional[bool] = None
+    kernel_tile: int = 0
     name: str = field(default="Oracle")
     jax_capable: bool = field(default=True)
 
@@ -45,8 +48,12 @@ class Oracle(FunctionalPolicy):
         eligible = jnp.asarray(rd.eligible, bool)
         budgets = jnp.asarray(budgets, jnp.float32)
         if self.spec.sqrt_utility:
-            return flgreedy_assign(values, costs, budgets, eligible), {}
-        return greedy_assign(values, costs, budgets, eligible), {}
+            return flgreedy_assign(values, costs, budgets, eligible,
+                                   use_kernel=self.use_kernel,
+                                   tile=self.kernel_tile), {}
+        return greedy_assign(values, costs, budgets, eligible,
+                             use_kernel=self.use_kernel,
+                             tile=self.kernel_tile), {}
 
 
 @dataclass(frozen=True)

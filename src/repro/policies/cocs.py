@@ -34,6 +34,10 @@ class COCS(FunctionalPolicy):
     z: Optional[float] = None
     k_scale: float = 1.0
     bonus_scale: float = 0.35
+    # Pallas routing for the greedy solve (repro.kernels.common):
+    # None -> legacy while_loop on CPU, budgeted_topk kernel on TPU.
+    use_kernel: Optional[bool] = None
+    kernel_tile: int = 0
 
     name: str = field(default="COCS")
     jax_capable: bool = field(default=True)
@@ -110,9 +114,13 @@ class COCS(FunctionalPolicy):
         costs = jnp.asarray(rd.costs, values.dtype)
         budgets = jnp.asarray(budgets, values.dtype)
         if self.spec.sqrt_utility:
-            assign = flgreedy_assign(values, costs, budgets, eligible)
+            assign = flgreedy_assign(values, costs, budgets, eligible,
+                                     use_kernel=self.use_kernel,
+                                     tile=self.kernel_tile)
         else:
-            assign = greedy_assign(values, costs, budgets, eligible)
+            assign = greedy_assign(values, costs, budgets, eligible,
+                                   use_kernel=self.use_kernel,
+                                   tile=self.kernel_tile)
         return assign, {"explored": under.any()}
 
     def update(self, state: COCSState, rd, assign, aux=None) -> COCSState:

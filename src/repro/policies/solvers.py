@@ -16,15 +16,27 @@ gains each iteration selects the same pairs (up to ties).
 
 ``random_assign`` draws a feasible random assignment (uniform over
 feasible ESs per client in a random client order) with jax.random.
+
+Both greedy solvers accept ``use_kernel``/``tile``/``interpret`` knobs
+(the fleet-wide Pallas routing convention, ``repro.kernels.common``):
+``use_kernel=None`` keeps this while-loop body on CPU and routes to the
+``repro.kernels.budgeted_topk`` sorted-candidate walk — tile-local
+density sort in one kernel launch, budget walk over the per-tile heads —
+on TPU. All paths are bitwise-identical (the pick order is a strict
+total order), property-tested in ``tests/test_budgeted_topk.py``.
 """
 from __future__ import annotations
 
 import math
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.kernels.budgeted_topk.ops import budgeted_topk, flgreedy_topk
+from repro.kernels.common import resolve_kernel_mode
 
 
 def feasible_cohort_bound(budget: float, min_cost: float,
@@ -43,11 +55,19 @@ def feasible_cohort_bound(budget: float, min_cost: float,
                    max(1, math.floor(budget / min_cost + 1e-9))))
 
 
-@jax.jit
+@partial(jax.jit, static_argnames=("use_kernel", "tile", "interpret"))
 def greedy_assign(values: jax.Array, costs: jax.Array, budgets: jax.Array,
-                  eligible: jax.Array) -> jax.Array:
+                  eligible: jax.Array,
+                  use_kernel: Optional[bool] = None, tile: int = 0,
+                  interpret: Optional[bool] = None) -> jax.Array:
     """Density greedy for P2. values (N,M), costs (N,), budgets (M,),
     eligible (N,M) bool -> assign (N,) int32 (-1 = unselected)."""
+    use_k, interp = resolve_kernel_mode(use_kernel)
+    if use_k:
+        return budgeted_topk(values, costs, budgets, eligible,
+                             use_kernel=True, tile=tile,
+                             interpret=interp if interpret is None
+                             else interpret)
     n, m = values.shape
     density = jnp.where(eligible,
                         values / jnp.maximum(costs[:, None], 1e-12),
@@ -77,11 +97,20 @@ def greedy_assign(values: jax.Array, costs: jax.Array, budgets: jax.Array,
     return assign
 
 
-@partial(jax.jit, static_argnames=("num_es",))
+@partial(jax.jit, static_argnames=("num_es", "use_kernel", "tile",
+                                   "interpret"))
 def flgreedy_assign(values: jax.Array, costs: jax.Array, budgets: jax.Array,
-                    eligible: jax.Array, num_es: int = 0) -> jax.Array:
+                    eligible: jax.Array, num_es: int = 0,
+                    use_kernel: Optional[bool] = None, tile: int = 0,
+                    interpret: Optional[bool] = None) -> jax.Array:
     """Cost-benefit greedy for the monotone submodular P3 (Eq. 19):
     utility(total) = sqrt(total / M). Exact (non-lazy) marginal gains."""
+    use_k, interp = resolve_kernel_mode(use_kernel)
+    if use_k:
+        return flgreedy_topk(values, costs, budgets, eligible,
+                             num_es=num_es, use_kernel=True, tile=tile,
+                             interpret=interp if interpret is None
+                             else interpret)
     n, m = values.shape
     m_div = float(num_es or m)
 

@@ -73,7 +73,8 @@ def available() -> Tuple[str, ...]:
 
 
 def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
-         true_p: str = "mc", **overrides):
+         true_p: str = "mc", use_kernel: Optional[bool] = None,
+         kernel_tile: int = 0, **overrides):
     """``repro.envs.make``-style factory for device environments.
 
     ``name`` is a preset (see ``available()``), ``cfg`` overrides the
@@ -82,6 +83,9 @@ def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
     selects the ground-truth participation estimator: ``"mc"`` (the
     historical Monte-Carlo fading pairs) or ``"analytic"`` (exact Eq. 6
     integral — no MC draw tensors, ~the whole round-generator hot spot).
+    ``use_kernel``/``kernel_tile`` route the Eq. 4/5 context stage
+    through the fused ``repro.kernels.context_pairwise`` Pallas kernel
+    (``None`` -> jnp oracle on CPU, kernel on TPU; bitwise-identical).
     """
     from repro.sim.core import DeviceEnv
     from repro.sim.spec import SimSpec, preset
@@ -89,7 +93,9 @@ def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
     return DeviceEnv(cfg=use_cfg, scenario=scen,
                      spec=SimSpec.from_env(use_cfg, scen,
                                            mc_true_p=mc_true_p,
-                                           true_p=true_p))
+                                           true_p=true_p,
+                                           use_kernel=use_kernel,
+                                           kernel_tile=kernel_tile))
 
 
 def resolve(env, cfg: Optional[object] = None):

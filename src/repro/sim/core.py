@@ -13,6 +13,13 @@ Everything here is shape-static given a ``SimSpec``, so rollouts compile
 once per (spec, horizon) and the per-round generator can be fused into
 larger compiled regions (the experiment engine scans it inside its
 training blocks — ``repro.experiment.fused``).
+
+The Eq. 4/5 pairwise stage (distance -> gain -> rates -> latency) is
+routed through ``repro.kernels.context_pairwise`` per
+``SimSpec.use_kernel``: the default jnp oracle on CPU, one fused Pallas
+launch per round on TPU (no HBM intermediates between the stages). Both
+paths share the exact ``ref.py`` primitive sequence, so the switch is
+bitwise-invisible to policies downstream.
 """
 from __future__ import annotations
 
@@ -25,8 +32,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_hfl import HFLExperimentConfig
-from repro.core.network import es_positions, path_loss_gain
+from repro.core.network import es_positions
 from repro.envs.scenarios import ScenarioSpec
+from repro.kernels.common import resolve_kernel_mode
+from repro.kernels.context_pairwise.ops import pairwise_context
+from repro.kernels.context_pairwise.ref import latency, shannon_rate
 from repro.policies.base import Round
 from repro.sim import draws
 from repro.sim.spec import SimSpec
@@ -90,20 +100,16 @@ def init_statics(spec: SimSpec, seed) -> SimStatics:
 
 
 def _shannon_rate(spec: SimSpec, bandwidth, fading, g0):
-    g = fading * g0
-    snr = spec.tx_w * g / (spec.noise_psd_w * bandwidth)
-    # log1p, not log2(1 + snr): at float32, 1 + snr rounds away up to
-    # ~eps/snr relative precision for the weak-channel tail, which the
-    # host float64 oracle would then expose as latency mismatches
-    return bandwidth * (jnp.log1p(snr) / jnp.log(2.0))
+    # delegates to the kernel package's oracle so simulator, Pallas body
+    # and oracle share one float32 primitive sequence (bitwise parity)
+    return shannon_rate(bandwidth, fading, g0, tx_w=spec.tx_w,
+                        noise_psd_w=spec.noise_psd_w)
 
 
 def _latency(spec: SimSpec, bandwidth, compute, fad_dt, fad_ut, g0):
-    r_dt = _shannon_rate(spec, bandwidth, fad_dt, g0)
-    r_ut = _shannon_rate(spec, bandwidth, fad_ut, g0)
-    return (spec.update_bits / jnp.maximum(r_dt, 1e-9)
-            + spec.workload / jnp.maximum(compute, 1e-9)
-            + spec.update_bits / jnp.maximum(r_ut, 1e-9))
+    return latency(bandwidth, compute, fad_dt, fad_ut, g0, tx_w=spec.tx_w,
+                   noise_psd_w=spec.noise_psd_w,
+                   update_bits=spec.update_bits, workload=spec.workload)
 
 
 def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
@@ -123,15 +129,22 @@ def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
                            0 if analytic else spec.mc_true_p)
     pos = jnp.clip(pos + spec.mobility * dr.move, -spec.area, spec.area)
     es = _es_pos(spec)
-    d = jnp.sqrt(jnp.sum((pos[:, None] - es[None]) ** 2, -1))   # (N, M) km
-    eligible = d <= spec.cell_radius_km
-    # stranded fix: a client covering no ES is attached to the nearest one
-    nearest = jax.nn.one_hot(jnp.argmin(d, axis=1), m, dtype=bool)
-    eligible = eligible | (~eligible.any(axis=1, keepdims=True) & nearest)
     bandwidth = jnp.clip(statics.base_bw * (1 + spec.jitter * dr.bw_n),
                          spec.bandwidth_low, spec.bandwidth_high)
     compute = jnp.clip(statics.base_comp * (1 + spec.jitter * dr.comp_n),
                        spec.compute_low, spec.compute_high)
+    # fused Eq. 4/5 stage: distance -> gain -> rates -> latency in one
+    # pass (a single Pallas launch when the spec routes to the kernel)
+    use_k, interp = resolve_kernel_mode(spec.use_kernel)
+    d, g0, mean_rate, tau = pairwise_context(
+        pos, es, bandwidth, compute, dr.fad_dt, dr.fad_ut, tx_w=spec.tx_w,
+        noise_psd_w=spec.noise_psd_w, update_bits=spec.update_bits,
+        workload=spec.workload, use_kernel=use_k, tile=spec.kernel_tile,
+        interpret=interp)
+    eligible = d <= spec.cell_radius_km
+    # stranded fix: a client covering no ES is attached to the nearest one
+    nearest = jax.nn.one_hot(jnp.argmin(d, axis=1), m, dtype=bool)
+    eligible = eligible | (~eligible.any(axis=1, keepdims=True) & nearest)
     costs = 2.0 * statics.price * bandwidth / 1e6
     if spec.surge_period > 0:
         surge_on = (t % spec.surge_period) < spec.surge_len
@@ -141,11 +154,7 @@ def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
         active = ((t - statics.arrival_phase) % spec.arrival_period
                   < spec.arrival_len)
         eligible = eligible & active[:, None]
-    g0 = path_loss_gain(d, xp=jnp)
-    tau = _latency(spec, bandwidth[:, None], compute[:, None],
-                   dr.fad_dt, dr.fad_ut, g0)
     outcomes = (tau <= spec.deadline_s).astype(jnp.float32)
-    mean_rate = _shannon_rate(spec, bandwidth[:, None], 1.0, g0)
     phi_rate = jnp.clip(mean_rate / spec.rate_hi, 0.0, 1.0)
     phi_comp = ((compute - spec.compute_low)
                 / (spec.compute_high - spec.compute_low))
@@ -281,7 +290,10 @@ class DeviceEnv:
         the interop path for host-state policies and legacy drivers."""
         from repro.core.network import RoundData
         sr = self.rollout_device([seed], horizon)
-        host = jax.tree.map(lambda a: np.asarray(a[0]), sr)
+        # one device->host transfer for the whole pytree (device_get),
+        # then per-round zero-copy views into the stacked host arrays —
+        # not one blocking np.asarray conversion per leaf
+        host = jax.tree.map(lambda a: a[0], jax.device_get(sr))
         return [RoundData(t=int(host.round.t[i]),
                           contexts=host.round.contexts[i],
                           eligible=host.round.eligible[i],

@@ -9,6 +9,13 @@ one dispatch with zero host-realized observables — the pre-scan the
 fused experiment engine uses to size its slot capacity under
 ``env="device"``, and the standalone engine for bandit-only sweeps at
 cohort sizes the host path cannot stack.
+
+The Pallas kernel knobs need no plumbing here: ``SimSpec.use_kernel`` /
+``kernel_tile`` ride the static ``spec`` lru_cache key into
+``sim_round``'s fused context stage, and the policy's ``use_kernel``
+rides the frozen ``policy`` dataclass into the ``budgeted_topk`` solver
+— distinct knob values compile distinct executables, and every routing
+is bitwise-invisible to the scanned decisions.
 """
 from __future__ import annotations
 

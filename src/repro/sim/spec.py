@@ -72,6 +72,11 @@ class SimSpec:
     # (exact Eq. 6 integral, repro.sim.truep — no MC draw tensors at all)
     true_p: str = "mc"
     mc_true_p: int = 128
+    # Pallas routing for the Eq. 4/5 context stage
+    # (``repro.kernels.common``): None -> jnp oracle on CPU, the fused
+    # context_pairwise kernel on TPU. ``kernel_tile=0`` -> autotuned.
+    use_kernel: Optional[bool] = None
+    kernel_tile: int = 0
 
     def min_cost(self) -> float:
         """Analytic lower bound on any realized per-client cost — the
@@ -88,7 +93,9 @@ class SimSpec:
 
     @classmethod
     def from_env(cls, cfg: HFLExperimentConfig, scen: ScenarioSpec,
-                 mc_true_p: int = 128, true_p: str = "mc") -> "SimSpec":
+                 mc_true_p: int = 128, true_p: str = "mc",
+                 use_kernel: Optional[bool] = None,
+                 kernel_tile: int = 0) -> "SimSpec":
         if true_p not in ("mc", "analytic"):
             raise ValueError(f"unknown true_p mode {true_p!r}")
         # derived constants come from the host oracle's own helpers so
@@ -124,6 +131,7 @@ class SimSpec:
                                           * scen.arrival_period)))
                          if scen.arrival_period > 0 else 1),
             true_p=true_p, mc_true_p=mc_true_p,
+            use_kernel=use_kernel, kernel_tile=kernel_tile,
         )
 
 

@@ -1,0 +1,226 @@
+"""context_pairwise / budgeted_topk kernel routing: interpret-mode parity
+with the float64 host oracle on every preset, bitwise kernels-on/off
+equivalence through the simulator and both fused tiers, and jaxpr-level
+evidence that the fused stage actually removes HBM intermediates."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs, policies, sim
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.kernels.context_pairwise import (pairwise_context,
+                                            pairwise_context_ref)
+from repro.sim.core import init_statics, sim_round
+from repro.sim.spec import SimSpec
+
+HOST_PRESETS = ["paper", "static-clients", "high-mobility",
+                "tiered-pricing", "flash-crowd"]
+SEEDS = [0, 1]
+HORIZON = 6
+PHYS = dict(tx_w=0.2, noise_psd_w=3.98e-21, update_bits=1e5, workload=1e7)
+
+
+def _np_round(batch):
+    return type(batch)(*(np.asarray(x) for x in batch))
+
+
+def _assert_round_parity(hb, db, deadline, true_p_atol=2.5 / 128,
+                         max_eligible_mismatch=0.0):
+    """Host float64 vs device float32 realization of the same rounds.
+
+    ``max_eligible_mismatch`` admits a tiny fraction of coverage flips:
+    at 1000-client scale some client lands close enough to the cell
+    radius that the float32 distance legitimately crosses it (same
+    boundary effect the deadline indicator has, unrelated to kernels)."""
+    np.testing.assert_array_equal(hb.t, db.t)
+    mismatch = np.mean(np.asarray(hb.eligible) != np.asarray(db.eligible))
+    assert mismatch <= max_eligible_mismatch, mismatch
+    np.testing.assert_allclose(hb.costs, db.costs, rtol=1e-5)
+    np.testing.assert_allclose(hb.contexts, db.contexts, atol=2e-5)
+    np.testing.assert_allclose(hb.latency, db.latency, rtol=2e-4)
+    # Eq. 6 outcomes: exact away from the deadline boundary, where a
+    # float32-vs-float64 ulp can legitimately flip the indicator
+    boundary = np.abs(hb.latency - deadline) < 1e-4 * deadline
+    assert ((hb.outcomes == db.outcomes) | boundary).all()
+    np.testing.assert_allclose(hb.true_p, db.true_p, atol=true_p_atol)
+
+
+# -- kernel vs jnp oracle ----------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,tile", [(50, 3, 16), (37, 5, 8),
+                                      (200, 12, 64)])
+def test_context_kernel_bitwise_vs_ref(n, m, tile):
+    """The interpret-mode Pallas body and the jnp oracle share one
+    primitive sequence: all four outputs must agree *bitwise*, including
+    when N does not divide the tile (padding path)."""
+    rng = np.random.default_rng(n * 31 + m)
+    pos = jnp.asarray(rng.uniform(-1.5, 1.5, (n, 2)), jnp.float32)
+    es = jnp.asarray(rng.uniform(-1.5, 1.5, (m, 2)), jnp.float32)
+    bw = jnp.asarray(rng.uniform(1e6, 2e6, n), jnp.float32)
+    comp = jnp.asarray(rng.uniform(1e8, 1e9, n), jnp.float32)
+    fdt = jnp.asarray(rng.exponential(1.0, (n, m)), jnp.float32)
+    fut = jnp.asarray(rng.exponential(1.0, (n, m)), jnp.float32)
+    # jit the oracle: the bitwise contract is between *compiled* paths
+    # (sim_round always runs jitted); eager op-by-op dispatch rounds a
+    # fused-multiply differently and sits 1 ulp off both
+    ref = jax.jit(lambda *a: pairwise_context_ref(*a, **PHYS))(
+        pos, es, bw, comp, fdt, fut)
+    kern = pairwise_context(pos, es, bw, comp, fdt, fut, use_kernel=True,
+                            tile=tile, interpret=True, **PHYS)
+    for name in ref._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(ref, name)),
+                                      np.asarray(getattr(kern, name)),
+                                      err_msg=name)
+
+
+# -- simulator kernels-on/off bitwise ---------------------------------------
+
+
+ALL_PRESETS = HOST_PRESETS + ["metropolis-1k", "bursty-arrival"]
+
+
+@pytest.mark.parametrize("name", ALL_PRESETS)
+def test_sim_round_kernel_on_off_bitwise(name):
+    """The SimSpec.use_kernel switch is bitwise-invisible on every
+    preset (large cohorts run one round to bound interpret cost)."""
+    horizon = 2 if name in ("metropolis-1k", "bursty-arrival") else HORIZON
+    off = sim.make(name, mc_true_p=16)
+    on = sim.make(name, mc_true_p=16, use_kernel=True, kernel_tile=64)
+    b_off = _np_round(off.rollout_multi([0], horizon))
+    b_on = _np_round(on.rollout_multi([0], horizon))
+    for field in b_off._fields:
+        np.testing.assert_array_equal(getattr(b_off, field),
+                                      getattr(b_on, field), err_msg=field)
+
+
+@pytest.mark.parametrize("name", HOST_PRESETS)
+def test_kernels_on_device_matches_host_oracle(name):
+    """Interpret-mode kernels against the float64 numpy oracle — same
+    contract the kernels-off device sim already guarantees."""
+    henv = envs.make(name)
+    denv = sim.make(name, use_kernel=True, kernel_tile=16)
+    hb = henv.rollout_multi(SEEDS, HORIZON)
+    db = _np_round(denv.rollout_multi(SEEDS, HORIZON))
+    _assert_round_parity(hb, db, henv.cfg.deadline_s)
+
+
+def test_kernels_on_matches_host_oracle_bursty_small():
+    denv = sim.make("bursty-arrival", cfg=MNIST_CONVEX, use_kernel=True,
+                    kernel_tile=16)
+    hb = denv.host_env().rollout_multi(SEEDS, HORIZON)
+    db = _np_round(denv.rollout_multi(SEEDS, HORIZON))
+    _assert_round_parity(hb, db, MNIST_CONVEX.deadline_s)
+
+
+def test_kernels_on_matches_host_oracle_metropolis_1k():
+    """The 1000-client cohort: host float64 oracle vs interpret kernels,
+    analytic true_p on both sides (the MC stack at this scale is the
+    thing the device path exists to avoid)."""
+    denv = sim.make("metropolis-1k", true_p="analytic", use_kernel=True,
+                    kernel_tile=256)
+    hb = denv.host_env().rollout_multi([0], 2)
+    db = _np_round(denv.rollout_multi([0], 2))
+    _assert_round_parity(hb, db, denv.cfg.deadline_s, true_p_atol=1e-4,
+                         max_eligible_mismatch=1e-3)
+
+
+# -- fused tiers: kernels-on == kernels-off bitwise --------------------------
+
+
+@pytest.fixture(scope="module")
+def shared_data():
+    from repro.data.federated import FederatedDataset
+    return FederatedDataset.synthetic(MNIST_CONVEX.num_clients,
+                                      kind="mnist", seed=0)
+
+
+def _fused_sweep(env, pol, shared_data, horizon=8):
+    from repro.experiment import sweep_experiments
+    return sweep_experiments({"p": pol}, env, SEEDS, horizon,
+                             eval_every=4, data=shared_data)
+
+
+@pytest.mark.parametrize("tier_env", ["host", "device"])
+def test_fused_tier_kernels_on_off_bitwise(tier_env, shared_data):
+    """Tier-3 (host env) exercises the solver kernel inside the fused
+    block; tier-4 (device env) additionally runs the context kernel
+    inside the scan. Both must reproduce kernels-off decisions bitwise
+    and metrics exactly."""
+    exp = dc.replace(MNIST_CONVEX, lr=0.01)
+    spec = policies.PolicySpec.from_experiment(exp, 8)
+    kw = {"alpha": exp.holder_alpha, "h_t": exp.h_t}
+    pol_off = policies.make("cocs", spec, use_kernel=False, **kw)
+    pol_on = policies.make("cocs", spec, use_kernel=True, kernel_tile=16,
+                           **kw)
+    if tier_env == "host":
+        env_off = env_on = envs.make("paper", exp)
+    else:
+        env_off = sim.make("paper", exp)
+        env_on = sim.make("paper", exp, use_kernel=True, kernel_tile=16)
+    off = _fused_sweep(env_off, pol_off, shared_data)
+    on = _fused_sweep(env_on, pol_on, shared_data)
+    np.testing.assert_array_equal(off.selections["p"], on.selections["p"])
+    np.testing.assert_array_equal(off.explored["p"], on.explored["p"])
+    np.testing.assert_array_equal(off.participants["p"],
+                                  on.participants["p"])
+    np.testing.assert_array_equal(off.accuracy["p"], on.accuracy["p"])
+
+
+# -- jaxpr evidence: fewer HBM intermediates, kernel launches present --------
+
+
+def _round_jaxpr(spec):
+    statics = init_statics(spec, jnp.uint32(0))
+    return jax.make_jaxpr(
+        lambda st, pos: sim_round(spec, jnp.uint32(0), st, pos,
+                                  jnp.int32(0)))(statics, statics.pos0)
+
+
+def _count_nm_outvars(jaxpr, n, m):
+    """Top-level equations producing an (N, M) float32 value — a proxy
+    for HBM-materialized pairwise intermediates (sub-jaxprs of a fused
+    pallas_call stay in VMEM and are deliberately not counted)."""
+    count = 0
+    for eqn in jaxpr.jaxpr.eqns:
+        for var in eqn.outvars:
+            aval = var.aval
+            if (getattr(aval, "shape", None) == (n, m)
+                    and aval.dtype == jnp.float32):
+                count += 1
+    return count
+
+
+def test_sim_round_kernel_reduces_hbm_intermediates():
+    from repro.sim.spec import preset
+    cfg, scen = preset("paper")
+    spec_off = SimSpec.from_env(cfg, scen, true_p="analytic")
+    spec_on = SimSpec.from_env(cfg, scen, true_p="analytic",
+                               use_kernel=True, kernel_tile=16)
+    n, m = spec_off.num_clients, spec_off.num_edge_servers
+    j_off = _round_jaxpr(spec_off)
+    j_on = _round_jaxpr(spec_on)
+    assert "pallas_call" not in str(j_off)
+    assert str(j_on).count("pallas_call") == 1   # one launch per round
+    off_nm = _count_nm_outvars(j_off, n, m)
+    on_nm = _count_nm_outvars(j_on, n, m)
+    assert on_nm < off_nm, (on_nm, off_nm)
+
+
+def test_greedy_kernel_jaxpr_has_pallas_launch():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.uniform(0, 1, (50, 3)), jnp.float32)
+    c = jnp.asarray(rng.uniform(0.2, 1, 50), jnp.float32)
+    b = jnp.full((3,), 1.0, jnp.float32)
+    e = jnp.ones((50, 3), bool)
+    from repro.policies.solvers import greedy_assign
+    j_on = jax.make_jaxpr(
+        lambda *a: greedy_assign(*a, use_kernel=True, tile=16,
+                                 interpret=True))(v, c, b, e)
+    j_off = jax.make_jaxpr(
+        lambda *a: greedy_assign(*a, use_kernel=False))(v, c, b, e)
+    assert str(j_on).count("pallas_call") == 1   # one sort launch
+    assert "pallas_call" not in str(j_off)
