@@ -25,11 +25,37 @@ import os
 import sys
 
 try:
-    from repro.trials.ledger import entry_metric, load_entries
+    from repro.trials.ledger import entry_metric, load_entries, timing
 except ImportError:  # invoked as a bare script without PYTHONPATH=src
     sys.path.insert(0, os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
-    from repro.trials.ledger import entry_metric, load_entries
+    from repro.trials.ledger import entry_metric, load_entries, timing
+
+
+class ReferenceRowError(ValueError):
+    """A ``NAME:REF`` reference row is missing or carries no usable
+    timing (``us_per_call: null``/0) while the guarded row has one — the
+    relative guard quantity cannot be formed. Named so the CI log shows
+    the misconfigured reference instead of a KeyError/ZeroDivision."""
+
+
+def _checked_metric(entries, name, ref, which):
+    """``entry_metric`` that fails loudly on an unusable reference row.
+
+    The guarded row itself staying absent is legitimate (new entries
+    have no trajectory; skipped upstream) — but a *reference* row that
+    is missing or timing-less while ``name`` measured fine means the
+    ``NAME:REF`` pair is wrong or the reference benchmark broke, and
+    silently skipping would disable the guard."""
+    if ref and timing(entries.get(name)) is not None \
+            and timing(entries.get(ref)) is None:
+        raise ReferenceRowError(
+            f"reference row {ref!r} is "
+            + ("missing" if ref not in entries
+               else "timing-less (us_per_call null/0)")
+            + f" in the {which} file while {name!r} has a timing — "
+            "cannot form the NAME:REF relative guard")
+    return entry_metric(entries, name, ref)
 
 
 def main(argv=None) -> int:
@@ -57,11 +83,16 @@ def main(argv=None) -> int:
     for spec in entries:
         name, _, ref = spec.partition(":")
         ref = ref or args.relative_to
-        base = entry_metric(baseline, name, ref)
+        try:
+            base = _checked_metric(baseline, name, ref, "baseline")
+            cur = _checked_metric(current, name, ref, "current")
+        except ReferenceRowError as e:
+            print(f"{name}: {e} — FAIL")
+            failures += 1
+            continue
         if base is None:
             print(f"{name}: no usable baseline entry — skipping")
             continue
-        cur = entry_metric(current, name, ref)
         if cur is None:
             print(f"{name}: missing/errored in current run — FAIL")
             failures += 1

@@ -1,4 +1,4 @@
-"""Trial suites as a benchmark: run the two named paper suites through
+"""Trial suites as a benchmark: run the named paper suites through
 ``repro.trials`` and append their full scored records (oracle regret,
 participation, accuracy, provenance) to the trials ledger
 (``BENCH_trials.json`` by default; override with
@@ -8,9 +8,10 @@ records live in the ledger, where ``python -m repro.trials check``
 gates them suite-wide against the committed baseline.
 
 ``paper-fig3`` runs at its quick scale (horizon 400 — the committed
-fig3a panel); ``paper-fig4-quick`` runs its @smoke variant so the
-fused-training suite stays CI-sized. REPRO_BENCH_FULL=1 promotes
-fig4 to the full variant.
+fig3a panel); ``paper-fig4-quick`` and the fault-injection
+``robustness-panel`` run their @smoke variants so the fused-training
+suites stay CI-sized. REPRO_BENCH_FULL=1 promotes both to their full
+variants.
 """
 from __future__ import annotations
 
@@ -27,7 +28,8 @@ def run() -> List[Row]:
 
     rows: List[Row] = []
     for name, smoke in (("paper-fig3", False),
-                        ("paper-fig4-quick", not FULL)):
+                        ("paper-fig4-quick", not FULL),
+                        ("robustness-panel", not FULL)):
         result = trials.run_suite(name, smoke=smoke, ledger=LEDGER)
         regrets: dict = {}
         for r in result.records:

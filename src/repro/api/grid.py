@@ -289,9 +289,14 @@ def _fused_grid(key: ExperimentSpec, policy, env, device: bool, seeds,
     # model init, sampler key convention), tiled cell-major over the
     # cells so element (g, s) is bitwise the single-config run with
     # seed s
-    setup = prepare_training(cfg, train.model_kind, train.batch_size,
-                             train.batches_per_epoch, data, seeds,
-                             use_kernel=train.use_kernel)
+    faults = (env.spec.faults if device
+              else getattr(env, "faults", None))
+    setup = prepare_training(
+        cfg, train.model_kind, train.batch_size,
+        train.batches_per_epoch, data, seeds,
+        use_kernel=train.use_kernel, aggregator=train.aggregator,
+        trim_frac=train.trim_frac,
+        corrupt=faults is not None and faults.corrupt_rate > 0.0)
     stacked, batch = setup.stacked, setup.batch
     loss_fn, logits_fn, spec = setup.loss_fn, setup.logits_fn, setup.spec
     test_x, test_y = setup.test_x, setup.test_y
@@ -349,13 +354,17 @@ def _fused_grid(key: ExperimentSpec, policy, env, device: bool, seeds,
         scan_rounds = rounds_to_scan_axes(grid_batch)      # (T, B, ...)
         scan_rounds = _shard_seed_axis(jax.device_put(scan_rounds), mesh,
                                        axis=1)
+        env_seeds = _shard_seed_axis(
+            jnp.tile(jnp.asarray(np.asarray(seeds, np.uint32)), n_cells),
+            mesh)
         for hi, slots in zip(ends, slots_blocks):
             fn = fused_block_grid(policy, spec, slots, batch, loss_fn,
-                                  logits_fn)
+                                  logits_fn, faults)
             blk = Round(*(getattr(scan_rounds, f)[lo:hi]
                           for f in Round._fields))
             out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
-                     pstate, edge, blk, test_x, test_y, budgets_arr)
+                     pstate, edge, blk, test_x, test_y, budgets_arr,
+                     env_seeds)
             pstate, edge = out.policy_state, out.edge_params
             outs.append(out)
             lo = hi

@@ -58,6 +58,10 @@ class RunResult:
     accuracy: Optional[np.ndarray] = None      # (S, E)
     loss: Optional[np.ndarray] = None          # (S, E)
     batched_axes: Tuple[str, ...] = ()
+    # per-interval carry-health report when EvalSpec.health != "off":
+    # {"checked": int, "events": [{"interval": int, "round_end": int,
+    #  "bad": [leaf names]}, ...]}; None when the guard is off
+    health: Optional[dict] = None
 
     def final_accuracy(self) -> np.ndarray:
         if self.accuracy is None:
@@ -111,8 +115,10 @@ def build_env(env_spec: EnvSpec):
     if use_device:
         return sim.make(scen, cfg, mc_true_p=env_spec.mc_true_p,
                         true_p=env_spec.true_p,
-                        use_kernel=env_spec.use_kernel)
-    return envs.make(scen, cfg, true_p=env_spec.true_p)
+                        use_kernel=env_spec.use_kernel,
+                        faults=env_spec.faults)
+    return envs.make(scen, cfg, true_p=env_spec.true_p,
+                     faults=env_spec.faults)
 
 
 def build_policy(policy_spec: PolicySpec, cfg, horizon: int):
@@ -199,14 +205,20 @@ def run(spec, *, data=None):
         use_kernel=spec.train.use_kernel,
         slots_per_es=spec.train.slots_per_es,
         shard_seeds=spec.shard_seeds,
-        policy_seed_offset=spec.policy.seed_offset)
+        policy_seed_offset=spec.policy.seed_offset,
+        aggregator=spec.train.aggregator,
+        trim_frac=spec.train.trim_frac,
+        checkpoint_dir=spec.eval.checkpoint_dir,
+        resume=spec.eval.resume,
+        health=spec.eval.health)
     return RunResult(
         spec=spec, tier=tier, env_backend=backend,
         draw_schedule=SCHEDULE_ID,
         selections=res.selections[name], utilities=res.utilities[name],
         participants=res.participants[name], explored=res.explored[name],
         eval_rounds=np.asarray(res.eval_rounds),
-        accuracy=res.accuracy[name], loss=res.loss[name])
+        accuracy=res.accuracy[name], loss=res.loss[name],
+        health=res.health.get(name))
 
 
 def _run_bandit(policy, env, seeds: Sequence[int],

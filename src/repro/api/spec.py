@@ -28,6 +28,8 @@ import json
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Mapping, Optional, Tuple
 
+from repro.sim.faults import FaultSpec
+
 
 def _pairs(kv) -> Tuple[Tuple[str, Any], ...]:
     """Normalize a mapping / iterable of pairs into a hashable tuple."""
@@ -115,6 +117,11 @@ class EnvSpec:
     ``use_kernel`` routes the device simulator's Eq. 4/5 context stage
     through the fused Pallas kernel (``None`` -> auto: jnp oracle on
     CPU, kernel on TPU; device backend only, bitwise-identical).
+    ``faults`` is an optional ``repro.sim.faults.FaultSpec``: client
+    dropout, straggler inflation, ES outages, update corruption — drawn
+    from the shared counter-based schedule so host and device inject
+    identical fault events (``None``: no fault draws, every stream
+    bitwise unchanged).
     """
     scenario: str = "paper"
     backend: str = "auto"            # "auto" | "host" | "device"
@@ -124,13 +131,14 @@ class EnvSpec:
     mc_true_p: int = 128
     use_kernel: Optional[bool] = None
     overrides: Tuple[Tuple[str, Any], ...] = ()
+    faults: Optional[FaultSpec] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return _spec_dict(self)
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "EnvSpec":
-        return _from_dict(cls, d)
+        return _from_dict(cls, d, nested=(("faults", FaultSpec),))
 
 
 @dataclass(frozen=True)
@@ -143,6 +151,13 @@ class TrainSpec:
     layout turns it into a natural GEMM (~1.3x on the isolated step).
     Parity-tested against the default layout; policy decisions are
     unaffected either way.
+
+    ``aggregator`` picks the Eq. 3 edge/global aggregation rule
+    (``repro.fed.robust``): ``"mean"`` is the paper's weighted mean
+    (bitwise the historical path); ``"trimmed_mean"`` (drop the
+    ``trim_frac`` tails per coordinate), ``"median"``, and ``"clipped"``
+    (per-update L2 clipping at the cohort median norm) degrade
+    gracefully under corrupted updates (``FaultSpec.corrupt_rate``).
     """
     model: str = "logreg"            # "logreg" | "cnn"
     batch_size: int = 32
@@ -150,6 +165,8 @@ class TrainSpec:
     transposed_gemm: bool = False
     use_kernel: Optional[bool] = None
     slots_per_es: Optional[int] = None
+    aggregator: str = "mean"   # "mean"|"trimmed_mean"|"median"|"clipped"
+    trim_frac: float = 0.1
 
     def to_dict(self) -> Dict[str, Any]:
         return _spec_dict(self)
@@ -171,8 +188,22 @@ class TrainSpec:
 @dataclass(frozen=True)
 class EvalSpec:
     """Test-set evaluation cadence (one fused eval per ``eval_every``
-    training rounds, plus one after the final round)."""
+    training rounds, plus one after the final round) — plus the
+    resilient-execution knobs.
+
+    ``checkpoint_dir`` turns on per-interval checkpointing: after every
+    eval interval the scan carry, completed-interval outputs and the
+    draw-schedule id are serialized atomically (``repro.checkpoint``);
+    ``resume=True`` restores the latest compatible checkpoint and
+    continues, reproducing the uninterrupted run bitwise on policy
+    decisions. ``health`` guards the carry between intervals:
+    ``"record"`` notes non-finite divergence in ``RunResult.health`` and
+    continues, ``"halt"`` raises instead of silently propagating NaNs.
+    """
     eval_every: int = 5
+    checkpoint_dir: Optional[str] = None
+    resume: bool = False
+    health: str = "off"              # "off" | "record" | "halt"
 
     def to_dict(self) -> Dict[str, Any]:
         return _spec_dict(self)
@@ -202,6 +233,13 @@ class ExperimentSpec:
             raise ValueError(f"unknown true_p mode {self.env.true_p!r}")
         if self.env.backend not in ("auto", "host", "device"):
             raise ValueError(f"unknown env backend {self.env.backend!r}")
+        if self.eval.health not in ("off", "record", "halt"):
+            raise ValueError(f"unknown health mode {self.eval.health!r}; "
+                             "expected 'off', 'record' or 'halt'")
+        if self.train is not None and self.train.aggregator not in AGGREGATORS:
+            raise ValueError(
+                f"unknown aggregator {self.train.aggregator!r}; "
+                f"available: {AGGREGATORS}")
 
     # -- serialization -----------------------------------------------------
 
@@ -238,11 +276,20 @@ class ExperimentSpec:
                        for name, values in axes.items()))
 
 
+# Eq. 3 aggregation rules (repro.fed.robust)
+AGGREGATORS = ("mean", "trimmed_mean", "median", "clipped")
+
+
 def _set_policy_option(spec: "ExperimentSpec", key: str,
                        value) -> "ExperimentSpec":
     opts = dict(spec.policy.options)
     opts[key] = value
     return replace(spec, policy=replace(spec.policy, options=_pairs(opts)))
+
+
+def _set_fault(spec: "ExperimentSpec", **kw) -> "ExperimentSpec":
+    faults = replace(spec.env.faults or FaultSpec(), **kw)
+    return replace(spec, env=replace(spec.env, faults=faults))
 
 
 # axis name -> (batchable?, apply(spec, value) -> spec). Batchable axes
@@ -269,6 +316,14 @@ GRID_AXES: Dict[str, Tuple[bool, Any]] = {
     "model": (False, lambda s, v: replace(
         s, train=replace(s.train or TrainSpec(), model=str(v)))),
     "horizon": (False, lambda s, v: replace(s, horizon=int(v))),
+    # fault / robustness axes (sequential: faults change realized rounds
+    # and aggregation changes the training computation, not just shapes)
+    "corrupt_rate": (False, lambda s, v: _set_fault(
+        s, corrupt_rate=float(v))),
+    "dropout_rate": (False, lambda s, v: _set_fault(
+        s, dropout_rate=float(v))),
+    "aggregator": (False, lambda s, v: replace(
+        s, train=replace(s.train or TrainSpec(), aggregator=str(v)))),
 }
 
 

@@ -65,8 +65,19 @@ def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> str:
 
 
 def restore_pytree(path: str) -> Any:
+    """Inverse of ``save_pytree``. Raises a ``ValueError`` naming the file
+    when it is empty, truncated, or not a checkpoint payload (instead of
+    leaking raw msgpack decode errors)."""
     with open(path, "rb") as f:
-        return _unpack(msgpack.unpackb(f.read(), strict_map_key=False))
+        raw = f.read()
+    try:
+        if not raw:
+            raise ValueError("file is empty")
+        return _unpack(msgpack.unpackb(raw, strict_map_key=False))
+    except (ValueError, TypeError, KeyError,
+            msgpack.exceptions.UnpackException) as e:
+        raise ValueError(
+            f"corrupt or truncated checkpoint file {path!r}: {e}") from e
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:

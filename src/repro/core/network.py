@@ -81,7 +81,8 @@ class HFLNetworkSim:
 
     def __init__(self, cfg: HFLExperimentConfig, seed: int = 0,
                  mc_true_p: int = 128, mobility: float = 0.15,
-                 jitter: float = 0.30, true_p_mode: str = "mc"):
+                 jitter: float = 0.30, true_p_mode: str = "mc",
+                 faults=None):
         if true_p_mode not in ("mc", "analytic"):
             raise ValueError(f"unknown true_p mode {true_p_mode!r}")
         self.cfg = cfg
@@ -89,6 +90,10 @@ class HFLNetworkSim:
         self.mobility = mobility
         self.mc_true_p = mc_true_p
         self.true_p_mode = true_p_mode
+        # optional repro.sim.faults.FaultSpec — fault events come from the
+        # shared counter-based schedule, so the device sim injects the
+        # identical faults (None / all-zero rates: no fault draws at all)
+        self.faults = faults
         n, m = cfg.num_clients, cfg.num_edge_servers
         # ES positions on a circle; area = bounding box of coverage discs
         self.es_pos = es_positions(m)
@@ -181,6 +186,13 @@ class HFLNetworkSim:
         g0 = self._gain0(d)
         tau = self._latency(bandwidth[:, None], compute[:, None], d,
                             dr.fad_dt, dr.fad_ut, g0)
+        if self.faults is not None and self.faults.enabled:
+            from repro.sim.draws import host_fault_draws
+            from repro.sim.faults import apply_latency_faults, apply_outage
+            fd = host_fault_draws(self.seed, t, n, m)
+            tau = apply_latency_faults(self.faults, tau, fd.strag_u,
+                                       fd.strag_e, fd.drop_u, np)
+            eligible = apply_outage(self.faults, eligible, fd.out_u, np)
         outcomes = (tau <= c.deadline_s).astype(np.float64)
         # contexts: (normalized mean downlink rate, normalized compute)
         mean_rate = self._rate(bandwidth[:, None], d, 1.0, g0)  # E[|h|^2]=1

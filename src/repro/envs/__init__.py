@@ -20,14 +20,15 @@ def available() -> Tuple[str, ...]:
 
 
 def make(name: str = "paper", cfg: Optional[HFLExperimentConfig] = None,
-         true_p: str = "mc", **overrides) -> HFLEnv:
+         true_p: str = "mc", faults=None, **overrides) -> HFLEnv:
     key = name.lower()
     if key not in SCENARIOS:
         raise KeyError(f"unknown scenario {name!r}; available: {available()}")
     spec = SCENARIOS[key]
     if overrides:
         spec = replace(spec, **overrides)
-    return HFLEnv(cfg=cfg or MNIST_CONVEX, spec=spec, true_p=true_p)
+    return HFLEnv(cfg=cfg or MNIST_CONVEX, spec=spec, true_p=true_p,
+                  faults=faults)
 
 
 __all__ = ["EnvState", "HFLEnv", "SCENARIOS", "ScenarioSim", "ScenarioSpec",

@@ -49,6 +49,10 @@ class HFLEnv:
     cfg: HFLExperimentConfig
     spec: ScenarioSpec
     true_p: str = "mc"     # "mc" | "analytic" (exact Eq. 6, repro.sim.truep)
+    # optional repro.sim.faults.FaultSpec (frozen -> env stays hashable);
+    # fault events come from the shared counter-based draw schedule, so
+    # the device twin (repro.sim) injects identical faults
+    faults: Optional[object] = None
 
     @property
     def name(self) -> str:
@@ -56,7 +60,7 @@ class HFLEnv:
 
     def make_sim(self, seed: int = 0) -> HFLNetworkSim:
         return ScenarioSim(self.cfg, self.spec, seed=seed,
-                           true_p_mode=self.true_p)
+                           true_p_mode=self.true_p, faults=self.faults)
 
     def init(self, seed: int = 0) -> EnvState:
         return EnvState(sim=self.make_sim(seed), t=0)

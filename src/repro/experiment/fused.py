@@ -49,8 +49,8 @@ import jax.numpy as jnp
 from repro.fed.batched import (BatchedRoundSpec, device_batch_indices,
                                slot_train)
 from repro.fed.edge import broadcast_global, effective_mask_multi
+from repro.fed.robust import robust_aggregate_stacked
 from repro.experiment.packing import pack_assignment
-from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
 from repro.models.logistic import accuracy, softmax_xent
 from repro.policies.base import FunctionalPolicy
 
@@ -69,16 +69,25 @@ class BlockOut(NamedTuple):
 
 
 def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
-                      slots: int, batch: int, loss_fn, grid: bool = False):
+                      slots: int, batch: int, loss_fn, grid: bool = False,
+                      faults=None):
     """One training round for all seeds: ``(pstate, edge, rd, data...) ->
     (pstate', edge', outs)``. Shared by the host-rounds and device-env
     block variants so the two paths cannot drift. With ``grid=True`` the
     batch axis enumerates flattened (config cell, seed) pairs and ``step``
     takes an extra (B,) per-element budget scalar, threaded into the
     solver through ``select_with_budgets`` — config axes batch exactly
-    like seeds."""
+    like seeds.
+
+    ``faults`` (``repro.sim.faults.FaultSpec``) enables update
+    corruption: each element's corruption events are re-derived in-scan
+    from the counter-based schedule via its env seed (``env_seeds``), so
+    the host-loop engine's packed events match bitwise, and the
+    corrupted slots' deltas are scaled by ``corrupt_scale`` before the
+    Eq. 3 aggregation (``spec.aggregator`` picks the rule)."""
     m, steps = spec.num_edge_servers, spec.steps
     sqrt_u = policy.spec.sqrt_utility
+    corrupting = faults is not None and faults.corrupt_rate > 0.0
 
     def _select(pstate, rd, budgets):
         if grid:
@@ -89,7 +98,7 @@ def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
         return jax.vmap(policy.select)(pstate, rd)
 
     def step(pstate, edge, rd, stacked_x, stacked_y, stacked_sizes,
-             base_keys, budgets=None):
+             base_keys, budgets=None, env_seeds=None):
         n_seeds = base_keys.shape[0]
         assign, aux = _select(pstate, rd, budgets)
         new_pstate = jax.vmap(policy.update)(pstate, rd, assign, aux)
@@ -115,13 +124,27 @@ def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
         deltas = jax.tree.map(
             lambda d: d.reshape((n_seeds, m, slots) + d.shape[1:]),
             deltas)
+        if corrupting:
+            from repro.sim import draws
+            from repro.sim.faults import corrupt_mask
+            n_clients = rd.eligible.shape[1]
+            corr_u = jax.vmap(lambda se: draws.fault_draws(
+                se, rd.t[0], n_clients, m).corr_u)(env_seeds)   # (S, N)
+            cmask = corrupt_mask(faults, corr_u, jnp)
+            slot_c = jax.vmap(lambda cm, idx: cm[idx])(cmask, ci)
+            scale = jnp.where(slot_c, jnp.float32(faults.corrupt_scale),
+                              jnp.float32(1.0))                 # (S,M,slots)
+            deltas = jax.tree.map(
+                lambda d: d * scale.reshape(
+                    scale.shape + (1,) * (d.ndim - 3)), deltas)
         w = effective_mask_multi(
             arrived.reshape(n_seeds * m, slots),
             tau.reshape(n_seeds * m, slots),
             valid.reshape(n_seeds * m, slots),
             spec.z_min).reshape(n_seeds, m, slots)
-        new_edge = masked_aggregate_stacked(
-            edge, deltas, w, use_kernel=spec.use_kernel,
+        new_edge = robust_aggregate_stacked(
+            edge, deltas, w, aggregator=spec.aggregator,
+            trim_frac=spec.trim_frac, use_kernel=spec.use_kernel,
             tile=spec.tile, interpret=spec.interpret)
         sync = ((rd.t[0] + 1) % spec.t_es) == 0
         synced = jax.vmap(broadcast_global)(new_edge)
@@ -154,26 +177,32 @@ def _swap(a):
 
 @functools.lru_cache(maxsize=None)
 def fused_block(policy: FunctionalPolicy, spec: BatchedRoundSpec,
-                slots: int, batch: int, loss_fn, logits_fn):
+                slots: int, batch: int, loss_fn, logits_fn,
+                faults=None):
     """Compile-once block runner for one (policy, spec, shapes) variant.
 
     Returns ``block(stacked_x, stacked_y, stacked_sizes, base_keys,
-    policy_state, edge_params, rounds, test_x, test_y) -> BlockOut`` where
-    ``rounds`` is a ``Round`` pytree with (T, S, ...) leaves (scan axis
-    first), ``base_keys`` is (S,) per-seed PRNG keys and the carries have
-    a leading (S,) seed axis. Cached on value-hashable statics so every
-    sweep over an equivalent configuration shares one executable.
+    policy_state, edge_params, rounds, test_x, test_y, env_seeds) ->
+    BlockOut`` where ``rounds`` is a ``Round`` pytree with (T, S, ...)
+    leaves (scan axis first), ``base_keys`` is (S,) per-seed PRNG keys,
+    ``env_seeds`` is the (S,) uint32 env-seed vector (consumed only when
+    ``faults`` enables update corruption) and the carries have a leading
+    (S,) seed axis. Cached on value-hashable statics so every sweep over
+    an equivalent configuration shares one executable.
     """
-    round_step = _train_round_step(policy, spec, slots, batch, loss_fn)
+    round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
+                                   faults=faults)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
-              policy_state, edge_params, rounds, test_x, test_y):
+              policy_state, edge_params, rounds, test_x, test_y,
+              env_seeds):
 
         def step(carry, rd):
             pstate, edge = carry
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
-                                            base_keys)
+                                            base_keys,
+                                            env_seeds=env_seeds)
             return (pstate, edge), outs
 
         (pstate, edge), (sel, util, parts, explored) = jax.lax.scan(
@@ -201,9 +230,13 @@ def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
     the per-seed env identity and mobility state (leading (S,) axis).
     Each scan step realizes its round with ``repro.sim`` before the
     shared policy+training body runs — no host-realized observables.
+    Fault injection rides ``sim_spec.faults``: the env stage injects
+    dropout/straggler/outage, and update corruption is derived in-scan
+    from the same ``seeds`` the env consumes.
     """
     from repro.sim.core import round_batch
-    round_step = _train_round_step(policy, spec, slots, batch, loss_fn)
+    round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
+                                   faults=sim_spec.faults)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
               policy_state, edge_params, env_pos, seeds, statics,
@@ -214,7 +247,7 @@ def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
             pos, rd = round_batch(sim_spec, seeds, statics, pos, t)
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
-                                            base_keys)
+                                            base_keys, env_seeds=seeds)
             return (pstate, edge, pos), outs
 
         (pstate, edge, pos), (sel, util, parts, explored) = jax.lax.scan(
@@ -231,27 +264,31 @@ def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
 
 @functools.lru_cache(maxsize=None)
 def fused_block_grid(policy: FunctionalPolicy, spec: BatchedRoundSpec,
-                     slots: int, batch: int, loss_fn, logits_fn):
+                     slots: int, batch: int, loss_fn, logits_fn,
+                     faults=None):
     """``fused_block`` over a flattened (config cell x seed) batch axis.
 
     Same signature plus a trailing ``budgets`` (B,) argument: one per-ES
-    budget scalar per batch element, traced into the selection solver.
+    budget scalar per batch element, traced into the selection solver
+    (``env_seeds`` is (B,) here — each cell repeats its seed's env).
     Deadline cells need no extra argument here — a host-realized grid
     batch already carries per-cell outcomes (recomputed in float64 on
     host before stacking, so a cell is bitwise the rounds a sequential
     run with that deadline would realize).
     """
     round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
-                                   grid=True)
+                                   grid=True, faults=faults)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
-              policy_state, edge_params, rounds, test_x, test_y, budgets):
+              policy_state, edge_params, rounds, test_x, test_y, budgets,
+              env_seeds):
 
         def step(carry, rd):
             pstate, edge = carry
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
-                                            base_keys, budgets)
+                                            base_keys, budgets,
+                                            env_seeds=env_seeds)
             return (pstate, edge), outs
 
         (pstate, edge), (sel, util, parts, explored) = jax.lax.scan(
@@ -281,7 +318,7 @@ def fused_block_device_grid(policy: FunctionalPolicy,
     """
     from repro.sim.core import round_batch
     round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
-                                   grid=True)
+                                   grid=True, faults=sim_spec.faults)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
               policy_state, edge_params, env_pos, seeds, statics,
@@ -295,7 +332,8 @@ def fused_block_device_grid(policy: FunctionalPolicy,
             ).astype(jnp.float32))
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
-                                            base_keys, budgets)
+                                            base_keys, budgets,
+                                            env_seeds=seeds)
             return (pstate, edge, pos), outs
 
         (pstate, edge, pos), (sel, util, parts, explored) = jax.lax.scan(

@@ -28,8 +28,11 @@ policies in one result.
 """
 from __future__ import annotations
 
+import json
+import os
 import warnings
 from dataclasses import dataclass, field
+from types import SimpleNamespace
 from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
 import jax
@@ -61,6 +64,10 @@ class SweepResult:
     participants: Dict[str, np.ndarray]          # (S, T)
     selections: Dict[str, np.ndarray]            # (S, T, N)
     explored: Dict[str, np.ndarray] = field(default_factory=dict)
+    # per-policy carry-health reports when the guard is on (see
+    # ``sweep_experiments(health=...)``): {"checked": int, "events":
+    # [{"interval": int, "round_end": int, "bad": [leaf names]}]}
+    health: Dict[str, dict] = field(default_factory=dict)
 
     def final_accuracy(self, name: str) -> np.ndarray:
         return self.accuracy[name][:, -1]
@@ -128,7 +135,9 @@ def prepare_training(cfg, model_kind: str, batch_size: int,
                      data: Optional[FederatedDataset],
                      seeds: Sequence[int],
                      use_kernel: Optional[bool] = None,
-                     tile: Optional[int] = None) -> TrainingSetup:
+                     tile: Optional[int] = None,
+                     aggregator: str = "mean", trim_frac: float = 0.1,
+                     corrupt: bool = False) -> TrainingSetup:
     """Host-side training-state preparation shared by every fused path:
     synthetic-data default (shared ``seed=0`` dataset), stacked shards,
     per-seed model inits broadcast to (M, ...) edge params, per-seed
@@ -154,7 +163,8 @@ def prepare_training(cfg, model_kind: str, batch_size: int,
                       jax.tree.leaves(inits[0])) // cfg.num_edge_servers
     spec = make_round_spec(cfg, steps=steps, batch_size=batch_size,
                            use_kernel=use_kernel, tile=tile,
-                           param_count=param_count)
+                           param_count=param_count, aggregator=aggregator,
+                           trim_frac=trim_frac, corrupt=corrupt)
     base_keys = jnp.stack([jax.random.PRNGKey(s + 11) for s in seeds])
     return TrainingSetup(data=data, stacked=stacked, batch=batch,
                          steps=steps, loss_fn=loss_fn,
@@ -194,6 +204,149 @@ def _shard_seed_axis(tree, mesh, axis: int = 0):
     return jax.tree.map(put, tree)
 
 
+# -- resilient execution: checkpoint/resume + carry-health guards ------------
+# The fused runners dispatch one compiled block per eval interval; the
+# per-interval boundary is the natural checkpoint grain. A checkpoint is
+# the *exact* scan carry (policy state, edge params, env positions) plus
+# every completed interval's outputs and the interval index, written
+# atomically — so a killed-and-resumed run replays the remaining blocks
+# from the identical carry the uninterrupted run would have used and
+# reproduces its policy decisions bitwise. A fingerprint (draw-schedule
+# id, policy, spec, world, seeds, interval layout) guards against
+# resuming into a different experiment.
+
+
+class SimulatedKill(RuntimeError):
+    """Raised after ``stop_after_blocks`` checkpointed intervals: a
+    deterministic stand-in for killing the process mid-run (the resume
+    tests and ``examples/fault_injection.py`` use it)."""
+
+
+_OUT_FIELDS = ("accuracy", "loss", "utilities", "participants",
+               "selections", "explored")
+
+
+def _str_arr(s: str) -> np.ndarray:
+    # checkpoint payloads hold only array leaves; strings ride as uint8
+    return np.frombuffer(s.encode("utf-8"), np.uint8).copy()
+
+
+def _arr_str(a) -> str:
+    return bytes(np.asarray(a, np.uint8)).decode("utf-8")
+
+
+@dataclass
+class _ResilientCtx:
+    """Per-policy state for the resilient fused runner."""
+    ckpt_dir: Optional[str]          # None: health/kill hooks only
+    resume: bool
+    health: str                      # "off" | "record" | "halt"
+    stop_after: Optional[int]
+    fingerprint: str
+    report: dict = field(default_factory=lambda: {"checked": 0,
+                                                  "events": []})
+    outs_np: list = field(default_factory=list)
+
+
+def _run_fingerprint(name: str, spec, env, device_env: bool, seeds,
+                     ends, slots_blocks) -> str:
+    from repro.sim.draws import SCHEDULE_ID
+    world = (repr(env.spec) if device_env
+             else f"{env.name}/{env.cfg!r}/"
+                  f"faults={getattr(env, 'faults', None)!r}")
+    return json.dumps({"schedule": SCHEDULE_ID, "policy": name,
+                       "spec": repr(spec), "world": world,
+                       "seeds": list(seeds), "ends": list(ends),
+                       "slots": list(slots_blocks)}, sort_keys=True)
+
+
+def _like(template, restored):
+    """Rebuild a restored carry in the template's pytree structure
+    (tuples/NamedTuples degrade to lists in the msgpack payload)."""
+    leaves_t, treedef = jax.tree.flatten(template)
+    leaves_r = jax.tree.leaves(restored)
+    if len(leaves_r) != len(leaves_t):
+        raise ValueError(
+            f"checkpoint carry has {len(leaves_r)} leaves, expected "
+            f"{len(leaves_t)} — written by a different model or policy?")
+    return jax.tree.unflatten(treedef, [jnp.asarray(r)
+                                        for r in leaves_r])
+
+
+def _out_np(o) -> dict:
+    return {k: np.asarray(getattr(o, k)) for k in _OUT_FIELDS}
+
+
+def _try_resume(ctx: _ResilientCtx, template: dict):
+    """Load the newest checkpoint, verify its fingerprint, and return
+    ``(blocks_done, carry, outs)`` — or None when there is nothing to
+    resume from."""
+    from repro.checkpoint import latest_checkpoint, restore_pytree
+    if ctx.ckpt_dir is None:
+        return None
+    path = latest_checkpoint(ctx.ckpt_dir)
+    if path is None:
+        return None
+    payload = restore_pytree(path)
+    if _arr_str(payload["fingerprint"]) != ctx.fingerprint:
+        raise ValueError(
+            f"checkpoint {path!r} was written by a different run "
+            "configuration (draw schedule / policy / spec / seeds / "
+            "interval layout mismatch); refusing to resume — point "
+            "checkpoint_dir at a fresh directory or disable resume")
+    done = int(np.asarray(payload["blocks_done"]))
+    carry = {k: _like(template[k], payload["carry"][k]) for k in template}
+    ctx.outs_np = [dict(b) for b in payload["outs"]]
+    ctx.report = json.loads(_arr_str(payload["health"]))
+    return done, carry, [SimpleNamespace(**b) for b in ctx.outs_np]
+
+
+def _bad_leaves(tag: str, tree) -> list:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        a = np.asarray(leaf)
+        if np.issubdtype(a.dtype, np.floating) and \
+                not np.all(np.isfinite(a)):
+            out.append(tag + jax.tree_util.keystr(path))
+    return out
+
+
+def _after_block(ctx: _ResilientCtx, bi: int, hi: int, carry: dict, out):
+    """Post-interval bookkeeping: health scan, atomic checkpoint write,
+    simulated kill. Materializing the carry costs one device sync per
+    interval — the price of resilience; the ctx=None fast path keeps
+    blocks in flight and never lands here."""
+    from repro.checkpoint import save_pytree
+    ctx.outs_np.append(_out_np(out))
+    carry_np = jax.tree.map(np.asarray, carry)
+    if ctx.health != "off":
+        bad = (_bad_leaves("carry", carry_np)
+               + _bad_leaves("out", ctx.outs_np[-1]))
+        ctx.report["checked"] += 1
+        if bad:
+            ctx.report["events"].append(
+                {"interval": bi, "round_end": hi, "bad": bad})
+            if ctx.health == "halt":
+                raise RuntimeError(
+                    f"non-finite training state after interval {bi} "
+                    f"(round {hi}): {bad} — run with health='record' to "
+                    "log and continue instead")
+    if ctx.ckpt_dir is not None:
+        save_pytree(ctx.ckpt_dir, {
+            "fingerprint": _str_arr(ctx.fingerprint),
+            "blocks_done": np.int64(bi + 1),
+            "carry": carry_np,
+            "outs": list(ctx.outs_np),
+            "health": _str_arr(json.dumps(ctx.report)),
+        }, step=bi + 1)
+    if ctx.stop_after is not None and bi + 1 >= ctx.stop_after:
+        raise SimulatedKill(
+            f"stop_after_blocks={ctx.stop_after}: run killed after "
+            f"interval {bi + 1}"
+            + ("" if ctx.ckpt_dir is None else
+               f" (checkpoint {bi + 1} written to {ctx.ckpt_dir!r})"))
+
+
 def sweep_experiments(policies: Union[Sequence[str],
                                       Dict[str, FunctionalPolicy]],
                       env, seeds: Sequence[int], horizon: int, *,
@@ -204,7 +357,12 @@ def sweep_experiments(policies: Union[Sequence[str],
                       tile: Optional[int] = None,
                       slots_per_es: Optional[int] = None,
                       shard_seeds: Optional[bool] = None,
-                      policy_seed_offset: int = 0) -> SweepResult:
+                      policy_seed_offset: int = 0,
+                      aggregator: str = "mean", trim_frac: float = 0.1,
+                      checkpoint_dir: Optional[str] = None,
+                      resume: bool = False, health: str = "off",
+                      stop_after_blocks: Optional[int] = None
+                      ) -> SweepResult:
     """Run every policy for every seed over ``horizon`` training rounds.
 
     ``policies`` is either a dict name -> ``FunctionalPolicy`` or a list
@@ -222,6 +380,18 @@ def sweep_experiments(policies: Union[Sequence[str],
     ``repro.core.utility.POLICY_TABLE``); the env, model and sampler
     streams stay keyed on the env seeds.
 
+    Robustness knobs: ``aggregator``/``trim_frac`` select the Eq. 3
+    edge-aggregation rule (``repro.fed.robust``); faults come from the
+    env itself (``HFLEnv.faults`` / ``SimSpec.faults``). With
+    ``checkpoint_dir`` set, the fused tiers write one atomic checkpoint
+    per eval interval (per-policy subdirectory) and ``resume=True``
+    continues a killed run from the newest one, reproducing the
+    uninterrupted run's policy decisions bitwise. ``health`` guards each
+    interval's carry/outputs for non-finite values ("record" logs into
+    ``SweepResult.health``, "halt" raises). ``stop_after_blocks`` raises
+    ``SimulatedKill`` after that many checkpointed intervals (test/demo
+    hook). Host-loop policies run without the resilience hooks (warned).
+
     This is the internal engine behind the ``repro.run`` facade; prefer
     ``repro.run(ExperimentSpec(...))`` in new code.
     """
@@ -231,6 +401,14 @@ def sweep_experiments(policies: Union[Sequence[str],
     env = simmod.resolve(env)
     device_env = isinstance(env, DeviceEnv)
     cfg = env.cfg
+    if health not in ("off", "record", "halt"):
+        raise ValueError(
+            f"health must be 'off', 'record' or 'halt', got {health!r}")
+    faults = env.spec.faults if device_env else getattr(env, "faults",
+                                                        None)
+    corrupt = faults is not None and faults.corrupt_rate > 0.0
+    resilient = (checkpoint_dir is not None or health != "off"
+                 or stop_after_blocks is not None)
     seeds = [int(s) for s in seeds]
     pol_seeds = [s + int(policy_seed_offset) for s in seeds]
     if not isinstance(policies, dict):
@@ -262,7 +440,9 @@ def sweep_experiments(policies: Union[Sequence[str],
         scan_rounds = rounds_to_scan_axes(batch_st)         # (T, S, ...)
     setup = prepare_training(cfg, model_kind, batch_size,
                              batches_per_epoch, data, seeds,
-                             use_kernel=use_kernel, tile=tile)
+                             use_kernel=use_kernel, tile=tile,
+                             aggregator=aggregator, trim_frac=trim_frac,
+                             corrupt=corrupt)
     data, stacked, batch = setup.data, setup.stacked, setup.batch
     loss_fn, logits_fn = setup.loss_fn, setup.logits_fn
     edge0, base_keys, spec = setup.edge_seed, setup.base_keys, setup.spec
@@ -275,6 +455,8 @@ def sweep_experiments(policies: Union[Sequence[str],
         env_seeds = _shard_seed_axis(env_seeds, mesh)
     else:
         # slice per block on device; seed axis (axis 1) sharded
+        env_seeds = _shard_seed_axis(
+            jnp.asarray(np.asarray(seeds, np.uint32)), mesh)
         scan_rounds = _shard_seed_axis(jax.device_put(scan_rounds), mesh,
                                        axis=1)
     base_keys = _shard_seed_axis(base_keys, mesh)
@@ -291,7 +473,7 @@ def sweep_experiments(policies: Union[Sequence[str],
     result = SweepResult(policies=list(policies), seeds=seeds,
                          eval_rounds=np.asarray(ends), accuracy={}, loss={},
                          utilities={}, participants={}, selections={},
-                         explored={})
+                         explored={}, health={})
     for name, pol in policies.items():
         if pol.jax_capable:
             if slots_per_es is not None:
@@ -326,21 +508,43 @@ def sweep_experiments(policies: Union[Sequence[str],
                     slots_blocks = [slot_capacity(
                         pol.spec.budget, min_cost,
                         cfg.num_clients)] * len(ends)
+            ctx = None
+            if resilient:
+                pdir = None
+                if checkpoint_dir is not None:
+                    safe = "".join(c if c.isalnum() or c in "-_."
+                                   else "_" for c in name)
+                    pdir = os.path.join(checkpoint_dir, safe)
+                ctx = _ResilientCtx(
+                    ckpt_dir=pdir, resume=bool(resume), health=health,
+                    stop_after=stop_after_blocks,
+                    fingerprint=_run_fingerprint(
+                        name, spec, env, device_env, seeds, ends,
+                        slots_blocks))
             pstate = _shard_seed_axis(stack_states(pol, pol_seeds), mesh)
             if device_env:
                 out = _run_fused_device(pol, spec, slots_blocks, batch,
                                         loss_fn, logits_fn, stacked,
                                         base_keys, pstate, edge0,
                                         env.spec, env_seeds, env_statics,
-                                        test_x, test_y, ends)
+                                        test_x, test_y, ends, ctx=ctx)
             else:
                 out = _run_fused(pol, spec, slots_blocks, batch, loss_fn,
                                  logits_fn, stacked, base_keys, pstate,
-                                 edge0, scan_rounds, test_x, test_y, ends)
+                                 edge0, scan_rounds, test_x, test_y, ends,
+                                 faults=faults, env_seeds=env_seeds,
+                                 ctx=ctx)
+            if ctx is not None and health != "off":
+                result.health[name] = ctx.report
         else:
+            if resilient:
+                warnings.warn(
+                    "checkpoint/resume and health guards apply to the "
+                    f"fused training tiers only; host-loop policy {name!r} "
+                    "runs without them", stacklevel=2)
             out = _run_host(pol, spec, loss_fn, logits_fn, data, edge0,
                             _realized_rounds(), test_x, test_y, seeds,
-                            pol_seeds, ends, slots_per_es)
+                            pol_seeds, ends, slots_per_es, faults=faults)
         if pol.jax_capable and slots_per_es is not None:
             # a pinned capacity the solver exceeded would have silently
             # dropped the overflow clients from training (pack_assignment
@@ -381,36 +585,57 @@ def _collect_blocks(outs):
 
 
 def _run_fused(pol, spec, slots_blocks, batch, loss_fn, logits_fn, stacked,
-               base_keys, pstate, edge0, scan_rounds, test_x, test_y, ends):
+               base_keys, pstate, edge0, scan_rounds, test_x, test_y, ends,
+               faults=None, env_seeds=None, ctx=None):
     """All seeds at once: one fused dispatch per eval interval. Blocks are
     dispatched back-to-back with device outputs kept in flight; the host
-    only materializes after the last block is enqueued."""
+    only materializes after the last block is enqueued (unless a
+    resilient ``ctx`` syncs per interval for checkpoint/health)."""
     edge = jax.tree.map(jnp.copy, edge0)      # edge0 is reused per policy
-    outs = []
-    lo = 0
-    for hi, slots in zip(ends, slots_blocks):
-        fn = fused_block(pol, spec, slots, batch, loss_fn, logits_fn)
+    outs, start = [], 0
+    if ctx is not None and ctx.resume:
+        res = _try_resume(ctx, {"pstate": pstate, "edge": edge})
+        if res is not None:
+            start, carry, outs = res
+            pstate, edge = carry["pstate"], carry["edge"]
+    lo = ends[start - 1] if start > 0 else 0
+    for bi in range(start, len(ends)):
+        hi, slots = ends[bi], slots_blocks[bi]
+        fn = fused_block(pol, spec, slots, batch, loss_fn, logits_fn,
+                         faults)
         blk = Round(*(getattr(scan_rounds, f)[lo:hi]
                       for f in Round._fields))
         out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
-                 pstate, edge, blk, test_x, test_y)
+                 pstate, edge, blk, test_x, test_y, env_seeds)
         pstate, edge = out.policy_state, out.edge_params
         outs.append(out)
+        if ctx is not None:
+            _after_block(ctx, bi, hi, {"pstate": pstate, "edge": edge},
+                         out)
         lo = hi
     return _collect_blocks(outs)
 
 
 def _run_fused_device(pol, spec, slots_blocks, batch, loss_fn, logits_fn,
                       stacked, base_keys, pstate, edge0, sim_spec,
-                      env_seeds, env_statics, test_x, test_y, ends):
+                      env_seeds, env_statics, test_x, test_y, ends,
+                      ctx=None):
     """Device-env twin of ``_run_fused``: each block generates its own
     rounds in-scan; the env's mobility positions thread through the
     blocks as a donated carry (``BlockOut.env_pos``)."""
     edge = jax.tree.map(jnp.copy, edge0)
     pos = jnp.copy(env_statics.pos0)
-    outs = []
-    lo = 0
-    for hi, slots in zip(ends, slots_blocks):
+    outs, start = [], 0
+    if ctx is not None and ctx.resume:
+        res = _try_resume(ctx, {"pstate": pstate, "edge": edge,
+                                "pos": pos})
+        if res is not None:
+            start, carry, outs = res
+            pstate, edge, pos = (carry["pstate"], carry["edge"],
+                                 carry["pos"])
+    lo = ends[start - 1] if start > 0 else 0
+    for bi in range(start, len(ends)):
+        hi, slots = ends[bi], slots_blocks[bi]
         fn = fused_block_device(pol, spec, slots, batch, loss_fn,
                                 logits_fn, sim_spec)
         out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
@@ -418,12 +643,15 @@ def _run_fused_device(pol, spec, slots_blocks, batch, loss_fn, logits_fn,
                  jnp.arange(lo, hi, dtype=jnp.int32), test_x, test_y)
         pstate, edge, pos = out.policy_state, out.edge_params, out.env_pos
         outs.append(out)
+        if ctx is not None:
+            _after_block(ctx, bi, hi, {"pstate": pstate, "edge": edge,
+                                       "pos": pos}, out)
         lo = hi
     return _collect_blocks(outs)
 
 
 def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
-              test_x, test_y, seeds, pol_seeds, ends, slots):
+              test_x, test_y, seeds, pol_seeds, ends, slots, faults=None):
     """Sequential fallback for host policies: per-seed adapter loop over
     the same realized rounds, training through the host-loop batched
     engine (per-block exact capacity unless ``slots`` pins one)."""
@@ -439,7 +667,7 @@ def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
     for si, s in enumerate(seeds):
         adapter = PolicyAdapter(pol, seed=pol_seeds[si])
         engine = BatchedRoundEngine(spec, loss_fn, data, s,
-                                    slots_per_es=slots)
+                                    slots_per_es=slots, faults=faults)
         edge = jax.tree.map(lambda a: jnp.copy(a[si]), edge0)
         lo = 0
         for ei, hi in enumerate(ends):

@@ -61,9 +61,9 @@ from repro.core.network import RoundData
 from repro.data.federated import FederatedDataset, StackedClients
 from repro.fed.client import local_sgd, local_sgd_multi
 from repro.fed.edge import broadcast_global, effective_mask_multi
+from repro.fed.robust import robust_aggregate_stacked
 from repro.kernels.common import resolve_kernel_mode
-from repro.kernels.masked_aggregate.ops import (best_tile,
-                                                masked_aggregate_stacked)
+from repro.kernels.masked_aggregate.ops import best_tile
 
 
 @dataclass(frozen=True)
@@ -81,6 +81,14 @@ class BatchedRoundSpec:
     unroll: int = 1       # local-SGD scan unroll (tiny models only)
     slot_bucket: int = 1  # round slot capacity up to a multiple of this
     seq_slots: bool = False  # lax.map over slots instead of vmap (big models)
+    # Eq. 3 aggregation rule (repro.fed.robust); "mean" is bitwise the
+    # historical masked_aggregate_stacked path
+    aggregator: str = "mean"
+    trim_frac: float = 0.1
+    # update-corruption faults in play: blocks expect a per-slot delta
+    # scale in their inputs ("corrupt", packed from the shared fault
+    # draws by the engine / fused callers)
+    corrupt: bool = False
 
 
 def bucketed_capacity(peak: int, bucket: int, num_clients: int) -> int:
@@ -182,10 +190,16 @@ def _compiled_block(spec: BatchedRoundSpec, batch: int, host: bool, loss_fn):
                                 spec, loss_fn)
             deltas = jax.tree.map(
                 lambda d: d.reshape((m, slots) + d.shape[1:]), deltas)
+            if spec.corrupt:
+                scale = inp["corrupt"]                      # (M, S)
+                deltas = jax.tree.map(
+                    lambda d: d * scale.reshape(
+                        scale.shape + (1,) * (d.ndim - 2)), deltas)
             w = effective_mask_multi(inp["arrived"], inp["tau"],
                                      inp["valid"], spec.z_min)
-            new_edge = masked_aggregate_stacked(
-                edge_params, deltas, w, use_kernel=spec.use_kernel,
+            new_edge = robust_aggregate_stacked(
+                edge_params, deltas, w, aggregator=spec.aggregator,
+                trim_frac=spec.trim_frac, use_kernel=spec.use_kernel,
                 tile=spec.tile, interpret=spec.interpret)
             sync = ((inp["t"] + 1) % spec.t_es) == 0
             synced = broadcast_global(new_edge)
@@ -218,12 +232,18 @@ class BatchedRoundEngine:
     def __init__(self, spec: BatchedRoundSpec, loss_fn,
                  data: FederatedDataset, seed: int,
                  sampler: str = "device",
-                 slots_per_es: Optional[int] = None):
+                 slots_per_es: Optional[int] = None,
+                 faults=None):
         if sampler not in ("device", "host"):
             raise ValueError(f"unknown sampler {sampler!r}")
         self.spec = spec
         self.loss_fn = loss_fn
         self.sampler = sampler
+        # fault injection (repro.sim.faults.FaultSpec): ``seed`` is the
+        # env seed, so the packed corruption events reproduce the fused
+        # engines' device-side draws exactly
+        self.faults = faults
+        self.seed = int(seed)
         self.stacked: StackedClients = data.stacked()
         sizes = np.asarray(self.stacked.sizes)
         self.batch = int(min(spec.batch_size, sizes.min()))
@@ -278,9 +298,17 @@ class BatchedRoundEngine:
         host = self.sampler == "host"
         batch_idx = (np.zeros((t_blk, m, slots, steps, b), np.int32)
                      if host else None)
+        corrupt = (np.ones((t_blk, m, slots), np.float32)
+                   if self.spec.corrupt else None)
         for i, (assign, rd) in enumerate(zip(assigns, rds)):
             assert rd.latency is not None, \
                 "RoundData.latency must carry realized Eq. 5 latencies"
+            if corrupt is not None:
+                from repro.sim.draws import host_fault_draws
+                from repro.sim.faults import corrupt_mask
+                fd = host_fault_draws(self.seed, int(ts[i]),
+                                      self.num_clients, m)
+                cmask = corrupt_mask(self.faults, fd.corr_u)
             for j in range(m):
                 clients = np.nonzero(assign == j)[0]
                 for k, c in enumerate(clients):
@@ -291,10 +319,14 @@ class BatchedRoundEngine:
                     if host:
                         batch_idx[i, j, k] = self.rng.integers(
                             0, self._sizes_host[c], (steps, b))
+                    if corrupt is not None and cmask[c]:
+                        corrupt[i, j, k] = self.faults.corrupt_scale
         out = {"client_idx": client_idx, "valid": valid, "arrived": arrived,
                "tau": tau, "t": np.asarray(ts, np.int32)}
         if host:
             out["batch_idx"] = batch_idx
+        if corrupt is not None:
+            out["corrupt"] = corrupt
         return out
 
     # -- public entry --------------------------------------------------------
@@ -318,7 +350,9 @@ class BatchedRoundEngine:
 def make_round_spec(exp, *, steps: int, batch_size: int,
                     use_kernel: Optional[bool] = None,
                     tile: Optional[int] = None,
-                    param_count: Optional[int] = None) -> BatchedRoundSpec:
+                    param_count: Optional[int] = None,
+                    aggregator: str = "mean", trim_frac: float = 0.1,
+                    corrupt: bool = False) -> BatchedRoundSpec:
     """Static round-spec shared by the host-loop and fused backends.
 
     ``param_count`` (per edge model) picks the compile-vs-runtime tradeoff:
@@ -338,7 +372,8 @@ def make_round_spec(exp, *, steps: int, batch_size: int,
         use_kernel=use_k, interpret=interpret, tile=tile,
         unroll=steps if small else 1,
         slot_bucket=1 if small else 8,
-        seq_slots=not small)
+        seq_slots=not small,
+        aggregator=aggregator, trim_frac=trim_frac, corrupt=corrupt)
 
 
 def make_engine(exp, *, steps: int, batch_size: int,

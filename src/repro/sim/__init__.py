@@ -41,6 +41,7 @@ from typing import Optional, Tuple
 
 _LAZY = {
     "DeviceEnv": ("repro.sim.core", "DeviceEnv"),
+    "FaultSpec": ("repro.sim.faults", "FaultSpec"),
     "SimEnvState": ("repro.sim.core", "SimEnvState"),
     "SimRound": ("repro.sim.core", "SimRound"),
     "SimStatics": ("repro.sim.core", "SimStatics"),
@@ -74,7 +75,7 @@ def available() -> Tuple[str, ...]:
 
 def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
          true_p: str = "mc", use_kernel: Optional[bool] = None,
-         kernel_tile: int = 0, **overrides):
+         kernel_tile: int = 0, faults=None, **overrides):
     """``repro.envs.make``-style factory for device environments.
 
     ``name`` is a preset (see ``available()``), ``cfg`` overrides the
@@ -86,6 +87,9 @@ def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
     ``use_kernel``/``kernel_tile`` route the Eq. 4/5 context stage
     through the fused ``repro.kernels.context_pairwise`` Pallas kernel
     (``None`` -> jnp oracle on CPU, kernel on TPU; bitwise-identical).
+    ``faults`` is an optional ``repro.sim.faults.FaultSpec``: fault
+    events come from the shared counter-based draw schedule, matching
+    the host oracle's injection pointwise.
     """
     from repro.sim.core import DeviceEnv
     from repro.sim.spec import SimSpec, preset
@@ -95,7 +99,8 @@ def make(name: str = "paper", cfg=None, mc_true_p: int = 128,
                                            mc_true_p=mc_true_p,
                                            true_p=true_p,
                                            use_kernel=use_kernel,
-                                           kernel_tile=kernel_tile))
+                                           kernel_tile=kernel_tile,
+                                           faults=faults))
 
 
 def resolve(env, cfg: Optional[object] = None):

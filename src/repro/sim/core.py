@@ -154,6 +154,14 @@ def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
         active = ((t - statics.arrival_phase) % spec.arrival_period
                   < spec.arrival_len)
         eligible = eligible & active[:, None]
+    if spec.faults is not None and spec.faults.enabled:
+        # identical fault events as the host oracle: shared counter-based
+        # draws, float32 thresholds on both sides (repro.sim.faults)
+        from repro.sim.faults import apply_latency_faults, apply_outage
+        fd = draws.fault_draws(seed, t, n, m)
+        tau = apply_latency_faults(spec.faults, tau, fd.strag_u,
+                                   fd.strag_e, fd.drop_u, jnp)
+        eligible = apply_outage(spec.faults, eligible, fd.out_u, jnp)
     outcomes = (tau <= spec.deadline_s).astype(jnp.float32)
     phi_rate = jnp.clip(mean_rate / spec.rate_hi, 0.0, 1.0)
     phi_comp = ((compute - spec.compute_low)
@@ -253,10 +261,11 @@ class DeviceEnv:
         return self.scenario.name
 
     def host_env(self):
-        """The host parity oracle over the same (cfg, scenario)."""
+        """The host parity oracle over the same (cfg, scenario) — fault
+        injection included, so parity extends to faulty worlds."""
         from repro.envs.base import HFLEnv
         return HFLEnv(cfg=self.cfg, spec=self.scenario,
-                      true_p=self.spec.true_p)
+                      true_p=self.spec.true_p, faults=self.spec.faults)
 
     def make_sim(self, seed: int = 0):
         return self.host_env().make_sim(seed)

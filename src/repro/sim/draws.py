@@ -37,6 +37,11 @@ SCHEDULE_ID = "threefry2x32/(seed,t,tag)/v1"
 _INIT, _ROUND = 0, 1
 _POS, _PRICE, _BW0, _COMP0, _PERM, _PHASE = 0, 1, 2, 3, 4, 5
 _MOVE, _BWJ, _COMPJ, _FDT, _FUT, _MCDT, _MCUT = 0, 1, 2, 3, 4, 5, 6
+# fault-injection streams (repro.sim.faults). Appended tags: with
+# FaultSpec off these draws are simply never materialized, and because
+# the schedule is counter-based, skipping them leaves every other
+# stream bitwise unchanged.
+_FDROP, _FSTRAG_U, _FSTRAG_E, _FOUT, _FCORR = 7, 8, 9, 10, 11
 
 
 class InitDraws(NamedTuple):
@@ -58,6 +63,20 @@ class RoundDraws(NamedTuple):
     fad_ut: jax.Array    # (N, M) Exp(1) — uplink Rayleigh |h|^2
     mc_dt: jax.Array     # (K, N, M) Exp(1) — true_p Monte Carlo, downlink
     mc_ut: jax.Array     # (K, N, M) Exp(1) — true_p Monte Carlo, uplink
+
+
+class FaultDraws(NamedTuple):
+    """Per-round fault-event draws (all unit-scale).
+
+    Event *thresholding* (``u < rate``) happens in float32 on both the
+    host oracle and the device sim, so fault events match bitwise across
+    backends — the same idiom as ``tier_edges``/``arrival_phases``.
+    """
+    drop_u: jax.Array    # (N,)  U[0,1) — client dropout events
+    strag_u: jax.Array   # (N,)  U[0,1) — straggler events
+    strag_e: jax.Array   # (N,)  Exp(1) — heavy-tail latency inflation
+    out_u: jax.Array     # (M,)  U[0,1) — ES outage events
+    corr_u: jax.Array    # (N,)  U[0,1) — update-corruption events
 
 
 def init_key(seed) -> jax.Array:
@@ -95,6 +114,18 @@ def round_draws(seed, t, n: int, m: int, k_mc: int) -> RoundDraws:
     )
 
 
+def fault_draws(seed, t, n: int, m: int) -> FaultDraws:
+    k = round_key(seed, t)
+    sub = functools.partial(jax.random.fold_in, k)
+    return FaultDraws(
+        drop_u=jax.random.uniform(sub(_FDROP), (n,)),
+        strag_u=jax.random.uniform(sub(_FSTRAG_U), (n,)),
+        strag_e=jax.random.exponential(sub(_FSTRAG_E), (n,)),
+        out_u=jax.random.uniform(sub(_FOUT), (m,)),
+        corr_u=jax.random.uniform(sub(_FCORR), (n,)),
+    )
+
+
 # -- host access: jitted per shape, numpy float64 out -----------------------
 
 @functools.lru_cache(maxsize=32)
@@ -123,6 +154,20 @@ def _to_host(tree):
 def host_init_draws(seed: int, n: int) -> InitDraws:
     """Float64 numpy view of the float32 init draws for ``seed``."""
     return _to_host(_jit_init(n)(jnp.uint32(seed)))
+
+
+@functools.lru_cache(maxsize=32)
+def _jit_fault(n: int, m: int):
+    return jax.jit(functools.partial(fault_draws, n=n, m=m))
+
+
+def host_fault_draws(seed: int, t: int, n: int, m: int) -> FaultDraws:
+    """Float64 numpy view of the float32 round-``t`` fault draws.
+
+    Small arrays (one (N,)/(M,) vector per stream), so no block cache:
+    one jitted dispatch per round is cheap relative to the round draws.
+    """
+    return _to_host(_jit_fault(n, m)(jnp.uint32(seed), jnp.int32(t)))
 
 
 # block-aligned cache of realized round draws, kept as float32 (the MC

@@ -1,0 +1,144 @@
+"""Declarative fault injection for the HFL network simulators.
+
+The paper's Eq. 6 already models the *benign* failure mode — a client
+misses the deadline and contributes nothing — but mobile-edge FL
+deployments see harsher realities (Nishio & Yonetani's FedCS is built
+around them): whole-round client dropout, heavy-tail stragglers, edge-
+server outage windows, and corrupted updates. ``FaultSpec`` describes
+those four fault processes as a frozen, JSON-round-trippable bundle of
+rates, carried on ``EnvSpec``/``SimSpec``.
+
+Every fault event is drawn from the counter-based draw schedule
+(``repro.sim.draws``, tags ``_FDROP.._FCORR`` keyed by ``(seed, t)``),
+so the float64 host oracle (``repro.core.network``) and the float32
+device simulator (``repro.sim.core``) inject *identical* faults: event
+thresholds compare the shared float32 draws (the host downcasts its
+float64 view back to float32 first — the ``tier_edges`` idiom), and the
+pointwise host/device parity contract extends to faulty worlds. With
+``FaultSpec`` off the fault tags are never materialized, and because the
+schedule is counter-based, every other draw stream stays bitwise
+unchanged.
+
+Fault semantics (applied identically on both backends):
+
+  * **dropout** — a hit client's Eq. 5 latency becomes +inf this round:
+    it misses every deadline and contributes nothing (the Eq. 6 failure
+    mode, forced).
+  * **straggler** — a hit client's latency is inflated by a heavy-tail
+    factor ``1 + scale * Exp(1)``: it usually misses the deadline but
+    can squeak in. Applied *before* dropout (dropout wins).
+  * **outage** — a hit edge server disappears for the round: its whole
+    eligibility column is cleared (clients covered only by it fall back
+    to nothing — the ``bursty-arrival`` machinery already supports
+    empty eligibility rows downstream).
+  * **corruption** — a hit client's model delta is scaled by
+    ``corrupt_scale`` before edge aggregation (negative values flip the
+    sign: a gradient-ascent attacker). Consumed by the training engines
+    (``repro.experiment.fused``, ``repro.fed.batched``), not the network
+    sim — selection and latency are untouched, only the aggregated
+    update is poisoned, which is exactly what the robust Eq. 3
+    aggregators (``repro.fed.robust``) defend against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping
+
+import numpy as np
+
+_RATES = ("dropout_rate", "straggler_rate", "outage_rate", "corrupt_rate")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Frozen, hashable description of the four fault processes.
+
+    All rates are per-round event probabilities in [0, 1]; a rate of 0
+    disables that process (and its draws are never materialized).
+    """
+    dropout_rate: float = 0.0      # P[client contributes nothing]
+    straggler_rate: float = 0.0    # P[client latency inflated]
+    straggler_scale: float = 4.0   # latency factor = 1 + scale * Exp(1)
+    outage_rate: float = 0.0       # P[edge server down for the round]
+    corrupt_rate: float = 0.0      # P[client update corrupted]
+    corrupt_scale: float = -10.0   # delta multiplier on corrupted updates
+
+    def __post_init__(self):
+        for name in _RATES:
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultSpec.{name} must be in [0, 1], "
+                                 f"got {v!r}")
+        if self.straggler_scale < 0.0:
+            raise ValueError("FaultSpec.straggler_scale must be >= 0, "
+                             f"got {self.straggler_scale!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return any(getattr(self, name) > 0.0 for name in _RATES)
+
+    def to_dict(self) -> Dict[str, Any]:
+        import dataclasses
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "FaultSpec":
+        import dataclasses
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"FaultSpec: unknown field(s) "
+                             f"{sorted(unknown)}; expected {sorted(names)}")
+        return cls(**{k: float(v) for k, v in d.items()})
+
+
+def _hit(u, rate: float, xp):
+    """Float32 event threshold — identical arithmetic on both backends.
+
+    ``u`` is the shared unit draw: float32 on device, the float64 host
+    upcast on the oracle. Downcasting the host view back to float32
+    recovers the device value bitwise, so ``u32 < float32(rate)`` is the
+    same comparison on both sides.
+    """
+    return xp.asarray(u, xp.float32) < xp.float32(rate)
+
+
+def apply_latency_faults(spec: "FaultSpec", tau, strag_u, strag_e,
+                         drop_u, xp):
+    """Straggler inflation then dropout on the Eq. 5 latencies ``tau``.
+
+    ``tau`` is (N, M); the per-client event vectors broadcast over the
+    ES axis. Straggler first (heavy-tail inflation, the client may still
+    make the deadline), dropout second (latency -> +inf, it never does).
+    Magnitude math runs in the caller's precision (``xp.asarray(tau)``'s
+    dtype); only the event *masks* are float32-pinned.
+    """
+    if spec.straggler_rate > 0.0:
+        hit = _hit(strag_u, spec.straggler_rate, xp)
+        factor = 1.0 + spec.straggler_scale * xp.asarray(
+            strag_e, tau.dtype)
+        tau = xp.where(hit[:, None], tau * factor[:, None], tau)
+    if spec.dropout_rate > 0.0:
+        hit = _hit(drop_u, spec.dropout_rate, xp)
+        tau = xp.where(hit[:, None], xp.asarray(xp.inf, tau.dtype), tau)
+    return tau
+
+
+def apply_outage(spec: "FaultSpec", eligible, out_u, xp):
+    """Clear the eligibility column of every ES in outage this round."""
+    if spec.outage_rate <= 0.0:
+        return eligible
+    down = _hit(out_u, spec.outage_rate, xp)
+    return eligible & ~down[None, :]
+
+
+def corrupt_mask(spec: "FaultSpec", corr_u, xp=np):
+    """(N,) bool — which clients' updates are corrupted this round."""
+    if spec.corrupt_rate <= 0.0:
+        return xp.zeros(xp.shape(corr_u), bool)
+    return _hit(corr_u, spec.corrupt_rate, xp)
+
+
+__all__ = ["FaultSpec", "apply_latency_faults", "apply_outage",
+           "corrupt_mask"]

@@ -32,6 +32,7 @@ from typing import Dict, Optional, Tuple
 from repro.configs.paper_hfl import (BURSTY_1K, METROPOLIS_1K, MNIST_CONVEX,
                                      HFLExperimentConfig)
 from repro.envs.scenarios import SCENARIOS, ScenarioSpec, tier_edges
+from repro.sim.faults import FaultSpec
 
 
 @dataclass(frozen=True)
@@ -77,6 +78,9 @@ class SimSpec:
     # context_pairwise kernel on TPU. ``kernel_tile=0`` -> autotuned.
     use_kernel: Optional[bool] = None
     kernel_tile: int = 0
+    # optional fault injection (repro.sim.faults): frozen + hashable, so
+    # it rides the jit-static spec; None or all-zero rates draw nothing
+    faults: Optional[FaultSpec] = None
 
     def min_cost(self) -> float:
         """Analytic lower bound on any realized per-client cost — the
@@ -95,7 +99,8 @@ class SimSpec:
     def from_env(cls, cfg: HFLExperimentConfig, scen: ScenarioSpec,
                  mc_true_p: int = 128, true_p: str = "mc",
                  use_kernel: Optional[bool] = None,
-                 kernel_tile: int = 0) -> "SimSpec":
+                 kernel_tile: int = 0,
+                 faults: Optional[FaultSpec] = None) -> "SimSpec":
         if true_p not in ("mc", "analytic"):
             raise ValueError(f"unknown true_p mode {true_p!r}")
         # derived constants come from the host oracle's own helpers so
@@ -132,6 +137,7 @@ class SimSpec:
                          if scen.arrival_period > 0 else 1),
             true_p=true_p, mc_true_p=mc_true_p,
             use_kernel=use_kernel, kernel_tile=kernel_tile,
+            faults=faults,
         )
 
 

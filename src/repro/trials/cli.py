@@ -42,7 +42,8 @@ def _cmd_run(args) -> int:
     from repro.trials.report import suite_report
     from repro.trials.runner import run_suite
 
-    result = run_suite(args.suite, smoke=args.smoke, ledger=args.ledger)
+    result = run_suite(args.suite, smoke=args.smoke, ledger=args.ledger,
+                       resume=args.resume)
     if args.report:
         print(suite_report(result))
     else:
@@ -107,6 +108,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                             "JSON store")
     p_run.add_argument("--report", action="store_true",
                        help="print the markdown suite report")
+    p_run.add_argument("--resume", action="store_true",
+                       help="skip cells already recorded in --ledger "
+                            "with the identical resolved spec "
+                            "(git-rev-agnostic); requires --ledger")
     p_run.set_defaults(fn=_cmd_run)
 
     p_check = sub.add_parser("check", help="suite-wide committed-baseline "

@@ -27,6 +27,7 @@ from __future__ import annotations
 import json
 import os
 import subprocess
+import tempfile
 from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
 
 Entry = Dict[str, Any]
@@ -99,6 +100,12 @@ def merge_entries(new_entries: Iterable[Entry], path: str) -> List[Entry]:
     (new - old per shared numeric metric) — the quality trajectory that
     parallels the timing one. Returns the merged list (also written to
     ``path``).
+
+    The write is atomic (temp file in the target directory +
+    ``os.replace``): a run killed mid-write — exactly the fault mode the
+    resilient runner is built for — leaves the previous ledger intact
+    instead of a truncated JSON that ``load_entries`` silently reads as
+    empty.
     """
     previous = load_entries(path)
     order: List[str] = list(previous)
@@ -124,9 +131,17 @@ def merge_entries(new_entries: Iterable[Entry], path: str) -> List[Entry]:
             order.append(name)
         merged[name] = entry
     out = [merged[n] for n in order]
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
-        f.write("\n")
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(out, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
     return out
 
 

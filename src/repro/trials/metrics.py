@@ -85,8 +85,40 @@ class TrialRecord:
             "policy": self.policy,
             "coord": {a: v for a, v in self.coord},
             "metrics": metrics,
+            "draw_schedule": self.draw_schedule,
             "provenance": dict(self.provenance),
         }
+
+
+def record_from_entry(entry: Mapping[str, Any]) -> TrialRecord:
+    """Rebuild a :class:`TrialRecord` from its ledger entry — the inverse
+    of ``to_entry`` up to JSON normalization (tuples come back from
+    lists). The resume path uses this to carry already-recorded cells
+    into a partially re-run suite's result."""
+    m = entry.get("metrics") or {}
+
+    def tup(key):
+        v = m.get(key)
+        return None if v is None else tuple(float(x) for x in v)
+
+    return TrialRecord(
+        suite=str(entry["suite"]), policy=str(entry["policy"]),
+        coord=tuple((str(a), v) for a, v in
+                    dict(entry.get("coord") or {}).items()),
+        cum_utility=float(m["cum_utility"]),
+        cum_utility_seeds=tup("cum_utility_seeds") or (),
+        participation=float(m.get("participation", 0.0)),
+        regret=(None if m.get("regret") is None
+                else float(m["regret"])),
+        regret_seeds=tup("regret_seeds"),
+        final_acc=(None if m.get("final_acc") is None
+                   else float(m["final_acc"])),
+        acc_curve=tup("acc_curve"),
+        us_per_call=(None if entry.get("us_per_call") is None
+                     else float(entry["us_per_call"])),
+        tier=int((entry.get("provenance") or {}).get("tier", 0)),
+        draw_schedule=str(entry.get("draw_schedule", "")),
+        provenance=tuple((entry.get("provenance") or {}).items()))
 
 
 @dataclass
@@ -105,16 +137,28 @@ def _cum_final(result) -> np.ndarray:
 def score_cells(suite_label: str, oracle: str,
                 cells: Mapping[Tuple[str, Tuple[Tuple[str, Any], ...]],
                                ScoredCell],
-                provenance: Tuple[Tuple[str, Any], ...] = ()
+                provenance: Tuple[Tuple[str, Any], ...] = (),
+                oracle_fallback: Optional[Mapping[
+                    Tuple[Tuple[str, Any], ...],
+                    Tuple[Tuple[float, ...], str]]] = None
                 ) -> List[TrialRecord]:
     """Score every (policy, coord) cell against the oracle cell at the
     same config coordinate. Keyed like the runner produces them; cells
     whose coordinate has no oracle run score without regret. Raises if
     a cell and its oracle reference disagree on the draw-schedule id —
     regret across different randomness contracts is meaningless.
+
+    ``oracle_fallback`` supplies ``coord -> (cum_utility_seeds,
+    draw_schedule)`` references for coordinates whose oracle cell was
+    not executed this run — the resume path's already-recorded oracle
+    rows (utilities are draw-schedule-deterministic, so a recorded
+    reference equals a re-run one exactly).
     """
     oracle_cum: Dict[Tuple[Tuple[str, Any], ...], np.ndarray] = {}
     oracle_sched: Dict[Tuple[Tuple[str, Any], ...], str] = {}
+    for coord, (cum_seeds, sched) in (oracle_fallback or {}).items():
+        oracle_cum[coord] = np.asarray(cum_seeds, np.float64)
+        oracle_sched[coord] = sched
     for (policy, coord), sc in cells.items():
         if policy == oracle:
             oracle_cum[coord] = _cum_final(sc.result)
@@ -128,7 +172,10 @@ def score_cells(suite_label: str, oracle: str,
         # the oracle is the reference, not a comparison — no regret row
         ref = None if policy == oracle else oracle_cum.get(coord)
         if ref is not None:
-            if res.draw_schedule != oracle_sched[coord]:
+            # "" = legacy recorded reference without a schedule id:
+            # nothing to compare against, accept it
+            if oracle_sched[coord] and \
+                    res.draw_schedule != oracle_sched[coord]:
                 raise ValueError(
                     f"{suite_label}/{policy}: draw schedule "
                     f"{res.draw_schedule!r} != oracle's "
@@ -160,4 +207,5 @@ def score_cells(suite_label: str, oracle: str,
     return records
 
 
-__all__ = ["ScoredCell", "TrialRecord", "score_cells"]
+__all__ = ["ScoredCell", "TrialRecord", "record_from_entry",
+           "score_cells"]

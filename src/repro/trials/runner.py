@@ -17,13 +17,15 @@ id, smoke flag.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, replace
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Set, Tuple, Union
 
 from repro.api.spec import GRID_AXES
 from repro.trials import ledger as ledger_mod
-from repro.trials.metrics import ScoredCell, TrialRecord, score_cells
+from repro.trials.metrics import (ScoredCell, TrialRecord,
+                                  record_from_entry, score_cells)
 from repro.trials.suite import TrialSuite, get_suite
 
 
@@ -50,15 +52,53 @@ class SuiteResult:
         return [r for r in self.records if r.policy == policy]
 
 
-def _run_cells(suite: TrialSuite, smoke: bool, data
+def _json_norm(obj) -> str:
+    """Canonical JSON text of a spec dict — the resolved-spec identity
+    the resume skip test compares (tuples/lists and int/float unify the
+    way the ledger stored them)."""
+    return json.dumps(json.loads(json.dumps(obj)), sort_keys=True)
+
+
+def _resumable_cells(suite: TrialSuite, smoke: bool, label: str,
+                     entries) -> Dict[Tuple[str, Tuple[Tuple[str, Any],
+                                                       ...]], TrialRecord]:
+    """Cells of this suite variant whose TrialRecord already sits in the
+    target ledger *with the identical resolved spec* (git-rev-agnostic:
+    only the spec is compared, not run provenance) — safe to skip
+    because every recorded quantity is deterministic given the spec."""
+    done = {}
+    for cell in suite.cells(smoke):
+        rec_name = f"trial_{label}_{cell.policy}" + "".join(
+            f"_{a}_{v}" for a, v in cell.coord)
+        entry = entries.get(rec_name)
+        if entry is None:
+            continue
+        spec_old = (entry.get("provenance") or {}).get("spec")
+        if spec_old is None or \
+                _json_norm(spec_old) != _json_norm(cell.spec.to_dict()):
+            continue
+        done[(cell.policy, cell.coord)] = record_from_entry(entry)
+    return done
+
+
+def _run_cells(suite: TrialSuite, smoke: bool, data,
+               skip: Optional[Set[Tuple[str, Tuple[Tuple[str, Any], ...]]]]
+               = None
                ) -> Dict[Tuple[str, Tuple[Tuple[str, Any], ...]],
                          ScoredCell]:
     """Execute every suite cell, batching the batchable axes through the
-    fused grid path. Returns (policy, coord) -> ScoredCell."""
+    fused grid path. Returns (policy, coord) -> ScoredCell.
+
+    ``skip`` names (policy, coord) cells to not run (the resume path's
+    already-recorded ones). A batched group is skipped only when *all*
+    its cells are — a partially-recorded group re-runs whole, which is
+    harmless (re-scored values are deterministic) and keeps the one-
+    dispatch-per-group contract."""
     import itertools
 
     from repro import api
 
+    skip = skip or set()
     base = suite.resolved_base(smoke)
     batchable = [(a, v) for a, v in suite.axes if GRID_AXES[a][0]]
     sequential = [(a, v) for a, v in suite.axes if not GRID_AXES[a][0]]
@@ -77,6 +117,13 @@ def _run_cells(suite: TrialSuite, smoke: bool, data
             for axis, value in seq_coord:
                 spec1 = GRID_AXES[axis][1](spec1, value)
             if batchable:
+                names = [a for a, _ in batchable]
+                group_coords = [
+                    canonical(seq_coord + tuple(zip(names, combo)))
+                    for combo in itertools.product(
+                        *(v for _, v in batchable))]
+                if all((display, c) in skip for c in group_coords):
+                    continue
                 grid = spec1.grid(**{a: list(v) for a, v in batchable})
                 t0 = time.perf_counter()
                 gres = api.run(grid, data=data)
@@ -88,6 +135,8 @@ def _run_cells(suite: TrialSuite, smoke: bool, data
                         result=res, us=us,
                         batched_axes=tuple(res.batched_axes))
             else:
+                if (display, canonical(seq_coord)) in skip:
+                    continue
                 t0 = time.perf_counter()
                 res = api.run(spec1, data=data)
                 us = (time.perf_counter() - t0) * 1e6
@@ -97,7 +146,8 @@ def _run_cells(suite: TrialSuite, smoke: bool, data
 
 
 def run_suite(suite: Union[str, TrialSuite], *, smoke: bool = False,
-              ledger: Optional[str] = None, data=None) -> SuiteResult:
+              ledger: Optional[str] = None, data=None,
+              resume: bool = False) -> SuiteResult:
     """Run a trial suite (by registered name or as an object).
 
     ``smoke=True`` applies the suite's declared tiny-horizon overrides
@@ -107,21 +157,41 @@ def run_suite(suite: Union[str, TrialSuite], *, smoke: bool = False,
     JSON store (merge-by-name with trajectory annotations —
     ``repro.trials.ledger``). ``data`` optionally shares one
     ``FederatedDataset`` across training cells.
+
+    ``resume=True`` (with ``ledger``) skips cells whose record already
+    sits in the target ledger with the identical resolved spec
+    (git-rev-agnostic) — a suite run killed between cells picks up where
+    the last atomic ledger write left it. Skipped cells' records are
+    carried into the result unchanged; executed cells score their regret
+    against the recorded oracle rows when the oracle itself was skipped.
     """
     # resolve named suites late so repro.trials.suites registration ran
     from repro.trials import suites as _suites          # noqa: F401
 
     suite = get_suite(suite)
     label = suite.label(smoke)
+    done: Dict[Any, TrialRecord] = {}
+    if resume and ledger:
+        done = _resumable_cells(suite, smoke, label,
+                                ledger_mod.load_entries(ledger))
     t0 = time.perf_counter()
-    cells = _run_cells(suite, smoke, data)
+    cells = _run_cells(suite, smoke, data, skip=set(done))
     total_us = (time.perf_counter() - t0) * 1e6
     rev = ledger_mod.git_rev()
     schedules = {sc.result.draw_schedule for sc in cells.values()}
+    schedules |= {r.draw_schedule for r in done.values()
+                  if r.draw_schedule}
     provenance = (("suite", suite.to_dict()), ("smoke", smoke),
                   ("git_rev", rev))
+    oracle_fallback = {
+        coord: (rec.cum_utility_seeds, rec.draw_schedule)
+        for (policy, coord), rec in done.items()
+        if policy == suite.oracle and (policy, coord) not in cells}
     records = score_cells(label, suite.oracle, cells,
-                          provenance=provenance)
+                          provenance=provenance,
+                          oracle_fallback=oracle_fallback)
+    scored = {(r.policy, r.coord) for r in records}
+    records += [rec for key, rec in done.items() if key not in scored]
     result = SuiteResult(
         suite=suite, label=label, smoke=smoke, records=records,
         total_us=total_us, git_rev=rev,

@@ -1,0 +1,94 @@
+"""``benchmarks/check_regression.py --entry NAME:REF``: the relative
+guard must fail with a *named* error line when the reference row is
+missing or timing-less — never a KeyError/ZeroDivisionError traceback —
+while absent guarded rows keep skipping cleanly."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _SCRIPT)
+check_regression = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_regression)
+
+
+def _write(path, entries):
+    with open(path, "w") as f:
+        json.dump(entries, f)
+    return str(path)
+
+
+def _entry(name, us):
+    return {"name": name, "us_per_call": us, "derived": ""}
+
+
+def _run(tmp_path, baseline, current, argv_extra):
+    base = _write(tmp_path / "base.json", baseline)
+    cur = _write(tmp_path / "cur.json", current)
+    return check_regression.main(
+        ["--baseline", base, "--current", cur] + argv_extra)
+
+
+def test_relative_guard_passes(tmp_path, capsys):
+    rc = _run(tmp_path,
+              [_entry("fused", 10.0), _entry("seq", 100.0)],
+              [_entry("fused", 12.0), _entry("seq", 100.0)],
+              ["--entry", "fused:seq", "--max-ratio", "1.5"])
+    assert rc == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_missing_reference_row_fails_with_named_error(tmp_path, capsys):
+    """REF absent from the current file while NAME measured fine: a
+    misconfigured or broken reference must FAIL loudly, not skip."""
+    rc = _run(tmp_path,
+              [_entry("fused", 10.0), _entry("seq", 100.0)],
+              [_entry("fused", 12.0)],                  # seq row gone
+              ["--entry", "fused:seq"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "reference row 'seq' is missing" in out
+    assert "FAIL" in out
+
+
+def test_null_timing_reference_fails_with_named_error(tmp_path, capsys):
+    """REF present but ``us_per_call: null`` (an ERROR row): same named
+    failure, and never a ZeroDivisionError for ``us_per_call: 0``."""
+    for bad_us in (None, 0.0):
+        rc = _run(tmp_path,
+                  [_entry("fused", 10.0), _entry("seq", 100.0)],
+                  [_entry("fused", 12.0), _entry("seq", bad_us)],
+                  ["--entry", "fused:seq"])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "timing-less" in out and "FAIL" in out
+
+
+def test_reference_error_in_baseline_file_also_named(tmp_path, capsys):
+    rc = _run(tmp_path,
+              [_entry("fused", 10.0)],                  # no seq in baseline
+              [_entry("fused", 12.0), _entry("seq", 100.0)],
+              ["--entry", "fused:seq"])
+    out = capsys.readouterr().out
+    assert rc == 1 and "baseline file" in out
+
+
+def test_new_entry_still_skips_cleanly(tmp_path, capsys):
+    """A guarded row with no baseline trajectory (and no current row
+    either) keeps the historical skip semantics."""
+    rc = _run(tmp_path,
+              [_entry("other", 5.0)],
+              [_entry("other", 6.0)],
+              ["--entry", "fused:seq"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "skipping" in out
+
+
+def test_reference_row_error_is_a_value_error():
+    assert issubclass(check_regression.ReferenceRowError, ValueError)
+    with pytest.raises(ValueError):
+        check_regression._checked_metric(
+            {"a": _entry("a", 1.0)}, "a", "missing-ref", "current")

@@ -1,0 +1,267 @@
+"""Deterministic fault injection (``repro.sim.faults``) and robust
+Eq. 3 aggregation (``repro.fed.robust``): FaultSpec contract, faults-off
+bitwise invariance on every preset, host/device fault-event parity
+through the shared draw schedule, robust aggregators vs a float64
+reference, and the corruption-only-poisons-training invariant."""
+import dataclasses as dc
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import envs, policies, sim
+from repro.configs.paper_hfl import MNIST_CONVEX
+from repro.fed.robust import AGGREGATORS, robust_aggregate_stacked
+from repro.kernels.masked_aggregate.ops import masked_aggregate_stacked
+from repro.sim.faults import FaultSpec
+
+HOST_PRESETS = ["paper", "static-clients", "high-mobility",
+                "tiered-pricing", "flash-crowd"]
+SEEDS = [0, 1]
+HORIZON = 6
+FAULTY = FaultSpec(dropout_rate=0.2, straggler_rate=0.2, outage_rate=0.15,
+                   corrupt_rate=0.25)
+
+
+def _np_round(batch):
+    return type(batch)(*(np.asarray(x) for x in batch))
+
+
+# -- FaultSpec contract ------------------------------------------------------
+
+
+def test_fault_spec_json_round_trip():
+    back = FaultSpec.from_dict(json.loads(json.dumps(FAULTY.to_dict())))
+    assert back == FAULTY
+    assert back is not FAULTY and hash(back) == hash(FAULTY)
+
+
+def test_fault_spec_enabled_and_validation():
+    assert not FaultSpec().enabled
+    assert not FaultSpec(straggler_scale=9.0).enabled   # scale alone: no events
+    assert FaultSpec(dropout_rate=0.01).enabled
+    with pytest.raises(ValueError):
+        FaultSpec(dropout_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(outage_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultSpec(straggler_scale=-1.0)
+    with pytest.raises(ValueError):
+        FaultSpec.from_dict({"droput_rate": 0.1})       # typo'd field
+
+
+def test_fault_tags_extend_schedule_without_renumbering():
+    """The fault tags append to the draw-tag table; the pre-fault tags
+    keep their historical numbers (stream stability)."""
+    from repro.sim import draws
+    assert (draws._FDROP, draws._FSTRAG_U, draws._FSTRAG_E,
+            draws._FOUT, draws._FCORR) == (7, 8, 9, 10, 11)
+
+
+# -- faults off: bitwise no-op on every preset ------------------------------
+
+
+@pytest.mark.parametrize("name", HOST_PRESETS)
+def test_disabled_faultspec_is_bitwise_noop(name):
+    """FaultSpec() (all rates 0) leaves every realized stream bitwise
+    identical to no FaultSpec at all, on both backends."""
+    hb = envs.make(name).rollout_multi(SEEDS, HORIZON)
+    hb_f = envs.make(name, faults=FaultSpec()).rollout_multi(SEEDS, HORIZON)
+    for field in hb._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(hb, field)),
+                                      np.asarray(getattr(hb_f, field)))
+    db = _np_round(sim.make(name).rollout_multi(SEEDS, HORIZON))
+    db_f = _np_round(
+        sim.make(name, faults=FaultSpec()).rollout_multi(SEEDS, HORIZON))
+    for field in db._fields:
+        np.testing.assert_array_equal(getattr(db, field),
+                                      getattr(db_f, field))
+
+
+# -- host/device fault-event parity -----------------------------------------
+
+
+@pytest.mark.parametrize("name", HOST_PRESETS)
+def test_fault_event_parity_host_device(name):
+    """The float64 host oracle and the float32 device sim inject the
+    same fault events pointwise: identical outage-cleared eligibility,
+    identical dropout (+inf latency) masks, straggler-inflated finite
+    latencies within the usual float32 tolerance."""
+    henv = envs.make(name, faults=FAULTY)
+    denv = sim.make(name, faults=FAULTY)
+    hb = henv.rollout_multi(SEEDS, HORIZON)
+    db = _np_round(denv.rollout_multi(SEEDS, HORIZON))
+
+    np.testing.assert_array_equal(hb.t, db.t)
+    np.testing.assert_array_equal(hb.eligible, db.eligible)   # outages too
+    h_inf = ~np.isfinite(np.asarray(hb.latency, np.float64))
+    d_inf = ~np.isfinite(np.asarray(db.latency, np.float64))
+    np.testing.assert_array_equal(h_inf, d_inf)               # dropouts
+    finite = ~h_inf
+    np.testing.assert_allclose(np.asarray(hb.latency)[finite],
+                               db.latency[finite], rtol=2e-4)
+    deadline = henv.cfg.deadline_s
+    boundary = np.abs(np.where(finite, hb.latency, 0.0)
+                      - deadline) < 1e-4 * deadline
+    assert ((hb.outcomes == db.outcomes) | boundary).all()
+
+    # the faults must actually fire at these rates/horizons
+    clean = envs.make(name).rollout_multi(SEEDS, HORIZON)
+    assert h_inf.any(), "no dropout event fired"
+    assert (np.asarray(hb.eligible) != np.asarray(clean.eligible)).any(), \
+        "no outage event fired"
+
+
+def test_faulty_latencies_only_grow():
+    """Straggler inflation and dropout can only delay a client — the
+    faulty Eq. 5 latency dominates the clean one pointwise."""
+    clean = envs.make("paper").rollout_multi(SEEDS, HORIZON)
+    faulty = envs.make("paper", faults=FAULTY).rollout_multi(SEEDS, HORIZON)
+    assert (np.asarray(faulty.latency)
+            >= np.asarray(clean.latency) - 1e-12).all()
+
+
+# -- robust Eq. 3 aggregation ----------------------------------------------
+
+
+def _np_robust(flat_p, flat_d, w, aggregator, trim_frac=0.1):
+    """float64 per-ES loop reference for the jnp order-statistic rules."""
+    m, s, d_dim = flat_d.shape
+    out = np.array(flat_p, np.float64, copy=True)
+    for j in range(m):
+        valid = w[j] > 0
+        c = int(valid.sum())
+        if c == 0:
+            continue
+        v = flat_d[j][valid].astype(np.float64)            # (c, D)
+        sv = np.sort(v, axis=0)
+        if aggregator == "trimmed_mean":
+            k = (min(max(1, int(np.floor(trim_frac * c))), (c - 1) // 2)
+                 if c >= 3 else 0)
+            agg = sv[k:c - k].mean(axis=0)
+        elif aggregator == "median":
+            agg = 0.5 * (sv[(c - 1) // 2] + sv[c // 2])
+        else:                                              # "clipped"
+            norms = np.linalg.norm(v, axis=1)
+            sn = np.sort(norms)
+            med = 0.5 * (sn[(c - 1) // 2] + sn[c // 2])
+            scale = np.minimum(1.0, med / np.maximum(norms, 1e-12))
+            wv = w[j][valid].astype(np.float64)
+            agg = ((wv[:, None] * v * scale[:, None]).sum(0)
+                   / max(wv.sum(), 1.0))
+        out[j] += agg
+    return out
+
+
+def _cohort(seed=0, m=4, s=5, d=7):
+    rng = np.random.default_rng(seed)
+    flat_p = rng.normal(size=(m, d)).astype(np.float32)
+    flat_d = rng.normal(size=(m, s, d)).astype(np.float32)
+    w = rng.uniform(0.2, 1.0, size=(m, s)).astype(np.float32)
+    w[rng.uniform(size=(m, s)) < 0.3] = 0.0     # dropped/padded slots
+    w[-1] = 0.0                                 # one empty cohort
+    return flat_p, flat_d, w
+
+
+@pytest.mark.parametrize("aggregator", ["trimmed_mean", "median", "clipped"])
+def test_robust_rules_match_float64_reference(aggregator):
+    flat_p, flat_d, w = _cohort()
+    got = robust_aggregate_stacked(jnp.asarray(flat_p), jnp.asarray(flat_d),
+                                   jnp.asarray(w), aggregator=aggregator)
+    ref = _np_robust(flat_p, flat_d, w, aggregator)
+    np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-5, atol=1e-6)
+    # empty cohort: edge params unchanged, bitwise
+    np.testing.assert_array_equal(np.asarray(got)[-1], flat_p[-1])
+
+
+def test_robust_mean_delegates_bitwise():
+    flat_p, flat_d, w = _cohort(seed=3)
+    got = robust_aggregate_stacked(jnp.asarray(flat_p), jnp.asarray(flat_d),
+                                   jnp.asarray(w), aggregator="mean")
+    ref = masked_aggregate_stacked(jnp.asarray(flat_p), jnp.asarray(flat_d),
+                                   jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_robust_pytree_and_rank3_folding():
+    """A two-leaf pytree under the fused (B, M, S) layout folds to the
+    per-b rank-2 call exactly."""
+    rng = np.random.default_rng(7)
+    b, m, s = 3, 4, 5
+    params = {"w": rng.normal(size=(b, m, 6, 2)).astype(np.float32),
+              "b": rng.normal(size=(b, m, 2)).astype(np.float32)}
+    deltas = {"w": rng.normal(size=(b, m, s, 6, 2)).astype(np.float32),
+              "b": rng.normal(size=(b, m, s, 2)).astype(np.float32)}
+    w = rng.uniform(0.0, 1.0, size=(b, m, s)).astype(np.float32)
+    w[w < 0.3] = 0.0
+    got = robust_aggregate_stacked(
+        jax.tree.map(jnp.asarray, params), jax.tree.map(jnp.asarray, deltas),
+        jnp.asarray(w), aggregator="median")
+    for bi in range(b):
+        per_b = robust_aggregate_stacked(
+            {k: jnp.asarray(v[bi]) for k, v in params.items()},
+            {k: jnp.asarray(v[bi]) for k, v in deltas.items()},
+            jnp.asarray(w[bi]), aggregator="median")
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(got[k][bi]),
+                                          np.asarray(per_b[k]))
+
+
+def test_robust_unknown_aggregator_raises():
+    flat_p, flat_d, w = _cohort()
+    with pytest.raises(ValueError, match="krum"):
+        robust_aggregate_stacked(jnp.asarray(flat_p), jnp.asarray(flat_d),
+                                 jnp.asarray(w), aggregator="krum")
+    assert set(AGGREGATORS) == {"mean", "trimmed_mean", "median", "clipped"}
+
+
+# -- corruption poisons training, never selection ---------------------------
+
+
+@pytest.fixture(scope="module")
+def shared_data():
+    from repro.data.federated import FederatedDataset
+    return FederatedDataset.synthetic(MNIST_CONVEX.num_clients,
+                                      kind="mnist", seed=0)
+
+
+def _fused_run(faults, aggregator, shared_data, horizon=8):
+    from repro.experiment import sweep_experiments
+    exp = dc.replace(MNIST_CONVEX, lr=0.01)
+    # budget 8.0: cohorts of >= 3 clients per ES, so the order statistics
+    # can actually differ from the mean (the robustness-panel setting)
+    spec = policies.PolicySpec.from_experiment(exp, horizon, budget=8.0)
+    pol = policies.make("cocs", spec, alpha=exp.holder_alpha, h_t=exp.h_t)
+    return sweep_experiments(
+        {"cocs": pol}, envs.make("paper", exp, faults=faults),
+        [0], horizon, eval_every=4, data=shared_data,
+        aggregator=aggregator)
+
+
+def test_corruption_changes_accuracy_not_selections(shared_data):
+    """Corrupted deltas poison Eq. 3 (accuracy moves) but selection,
+    utility and exploration streams stay bitwise — corruption is
+    consumed by the training engines only."""
+    clean = _fused_run(None, "mean", shared_data)
+    bad = _fused_run(FaultSpec(corrupt_rate=0.4, corrupt_scale=-10.0),
+                     "mean", shared_data)
+    np.testing.assert_array_equal(clean.selections["cocs"],
+                                  bad.selections["cocs"])
+    np.testing.assert_array_equal(clean.utilities["cocs"],
+                                  bad.utilities["cocs"])
+    np.testing.assert_array_equal(clean.explored["cocs"],
+                                  bad.explored["cocs"])
+    assert not np.allclose(clean.accuracy["cocs"], bad.accuracy["cocs"])
+
+
+def test_robust_rule_beats_mean_under_corruption(shared_data):
+    """Under heavy sign-flip corruption the per-coordinate median keeps
+    training; the paper's plain mean collapses (the robustness-panel
+    suite gates the full grid — this is the one-cell smoke check)."""
+    faults = FaultSpec(corrupt_rate=0.3, corrupt_scale=-10.0)
+    mean = _fused_run(faults, "mean", shared_data, horizon=10)
+    median = _fused_run(faults, "median", shared_data, horizon=10)
+    assert (median.accuracy["cocs"][0, -1]
+            > mean.accuracy["cocs"][0, -1] + 0.05)

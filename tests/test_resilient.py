@@ -1,0 +1,210 @@
+"""Resilient fused execution: per-interval checkpoint/resume reproduces
+the uninterrupted run bitwise (kill after first / middle / last-but-one
+interval, host and device env tiers), fingerprint guards against
+resuming a different run, the carry-health guard records or halts on
+non-finite values, and the checkpoint store's failure modes raise clear
+errors."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api.run import build_env, build_policy
+from repro.api.spec import (EnvSpec, EvalSpec, ExperimentSpec, PolicySpec,
+                            TrainSpec)
+from repro.checkpoint import latest_checkpoint, restore_pytree, save_pytree
+from repro.experiment.sweep import SimulatedKill, sweep_experiments
+
+HORIZON, EVERY = 16, 4          # 4 checkpointed eval intervals
+SEEDS = (0, 1)
+
+
+def _spec(backend="auto", checkpoint_dir=None, resume=False, health="off",
+          horizon=HORIZON, lr=None):
+    overrides = (("lr", lr),) if lr is not None else ()
+    return ExperimentSpec(
+        env=EnvSpec(scenario="paper", backend=backend, overrides=overrides),
+        policy=PolicySpec(name="COCS"),
+        train=TrainSpec(model="logreg"),
+        eval=EvalSpec(eval_every=EVERY, checkpoint_dir=checkpoint_dir,
+                      resume=resume, health=health),
+        horizon=horizon, seeds=SEEDS)
+
+
+def _kill_after(spec, ckpt_dir, blocks):
+    """Run the fused engine under the facade's exact construction and
+    kill it after ``blocks`` checkpointed intervals."""
+    env = build_env(spec.env)
+    pol = build_policy(spec.policy, env.cfg, spec.horizon)
+    with pytest.raises(SimulatedKill):
+        sweep_experiments({spec.policy.name: pol}, env, list(spec.seeds),
+                          spec.horizon, eval_every=spec.eval.eval_every,
+                          checkpoint_dir=ckpt_dir,
+                          stop_after_blocks=blocks)
+
+
+def _assert_same_run(a, b):
+    np.testing.assert_array_equal(a.selections, b.selections)
+    np.testing.assert_array_equal(a.utilities, b.utilities)
+    np.testing.assert_array_equal(a.explored, b.explored)
+    np.testing.assert_array_equal(a.accuracy, b.accuracy)
+    np.testing.assert_array_equal(a.loss, b.loss)
+
+
+@pytest.fixture(scope="module")
+def uninterrupted():
+    return repro.run(_spec())
+
+
+def test_checkpointing_does_not_perturb_the_run(tmp_path, uninterrupted):
+    """A checkpointed run is bitwise the plain run, and writes one
+    checkpoint per eval interval into the per-policy subdirectory."""
+    ck = str(tmp_path / "ck")
+    res = repro.run(_spec(checkpoint_dir=ck))
+    _assert_same_run(uninterrupted, res)
+    files = sorted(os.listdir(os.path.join(ck, "COCS")))
+    assert len(files) == HORIZON // EVERY
+    assert files[-1].endswith(".msgpack")
+
+
+@pytest.mark.parametrize("kill_after", [1, 2, 3])
+def test_kill_and_resume_bitwise(tmp_path, uninterrupted, kill_after):
+    """Kill after the first / middle / last-but-one interval; the
+    resumed run reproduces the uninterrupted run's policy decisions and
+    final accuracy bitwise."""
+    ck = str(tmp_path / "ck")
+    _kill_after(_spec(), ck, kill_after)
+    resumed = repro.run(_spec(checkpoint_dir=ck, resume=True))
+    _assert_same_run(uninterrupted, resumed)
+
+
+def test_kill_and_resume_bitwise_device_env(tmp_path):
+    """Same contract on the device-env fused tier (tier 4)."""
+    plain = repro.run(_spec(backend="device"))
+    ck = str(tmp_path / "ck")
+    _kill_after(_spec(backend="device"), ck, 2)
+    resumed = repro.run(_spec(backend="device", checkpoint_dir=ck,
+                              resume=True))
+    _assert_same_run(plain, resumed)
+
+
+def test_resume_with_empty_dir_runs_fresh(tmp_path, uninterrupted):
+    ck = str(tmp_path / "nothing-here")
+    res = repro.run(_spec(checkpoint_dir=ck, resume=True))
+    _assert_same_run(uninterrupted, res)
+
+
+def test_resume_rejects_foreign_checkpoint(tmp_path):
+    """A checkpoint written by a different run (other horizon => other
+    interval bounds) must be refused, not silently consumed."""
+    ck = str(tmp_path / "ck")
+    _kill_after(_spec(), ck, 1)
+    with pytest.raises(ValueError, match="different run"):
+        repro.run(_spec(horizon=24, checkpoint_dir=ck, resume=True))
+
+
+# -- carry-health guard ------------------------------------------------------
+
+
+def test_health_record_clean_run(uninterrupted):
+    res = repro.run(_spec(health="record"))
+    assert res.health == {"checked": HORIZON // EVERY, "events": []}
+    _assert_same_run(uninterrupted, res)
+
+
+def test_health_record_flags_nonfinite_carry():
+    """A NaN learning rate poisons the fused carry; "record" logs the
+    offending leaves per interval and the run still completes."""
+    res = repro.run(_spec(horizon=8, lr=float("nan"), health="record"))
+    assert res.health["checked"] == 2
+    assert len(res.health["events"]) == 2
+    bad = res.health["events"][0]["bad"]
+    assert any("edge" in leaf for leaf in bad)
+    assert res.health["events"][0]["round_end"] == 4
+
+
+def test_health_halt_raises():
+    with pytest.raises(RuntimeError, match="non-finite"):
+        repro.run(_spec(horizon=8, lr=float("nan"), health="halt"))
+
+
+def test_health_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="health"):
+        sweep_experiments(["random"], "paper", [0], 4, eval_every=2,
+                          health="sometimes")
+
+
+# -- checkpoint store --------------------------------------------------------
+
+
+def test_latest_checkpoint_numeric_ordering(tmp_path):
+    """12 sequential steps plus a hand-written unpadded ``ckpt_9`` name:
+    the newest checkpoint is picked by step number, not lexically
+    (lexically ``ckpt_9...`` sorts after every zero-padded name)."""
+    d = str(tmp_path)
+    for step in range(1, 13):
+        save_pytree(d, {"x": jnp.full((2,), step)}, step=step)
+    assert latest_checkpoint(d).endswith("ckpt_00000012.msgpack")
+    with open(os.path.join(d, "ckpt_00000012.msgpack"), "rb") as f:
+        payload = f.read()
+    with open(os.path.join(d, "ckpt_9.msgpack"), "wb") as f:
+        f.write(payload)
+    assert latest_checkpoint(d).endswith("ckpt_00000012.msgpack")
+    np.testing.assert_array_equal(
+        restore_pytree(latest_checkpoint(d))["x"], np.full((2,), 12))
+    assert latest_checkpoint(str(tmp_path / "missing")) is None
+
+
+def test_restore_empty_file_raises(tmp_path):
+    p = str(tmp_path / "ckpt_00000001.msgpack")
+    open(p, "wb").close()
+    with pytest.raises(ValueError, match="empty"):
+        restore_pytree(p)
+
+
+def test_restore_garbage_raises(tmp_path):
+    p = str(tmp_path / "ckpt_00000001.msgpack")
+    with open(p, "wb") as f:
+        f.write(b"\xc1 this is not msgpack \xc1")
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        restore_pytree(p)
+
+
+def test_restore_truncated_raises(tmp_path):
+    d = str(tmp_path)
+    save_pytree(d, {"w": jnp.arange(4096, dtype=jnp.float32)}, step=1)
+    p = latest_checkpoint(d)
+    with open(p, "rb") as f:
+        payload = f.read()
+    with open(p, "wb") as f:
+        f.write(payload[: len(payload) // 2])
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        restore_pytree(p)
+
+
+def test_carry_pytree_dtype_shape_round_trip(tmp_path):
+    """A fused-scan-style carry (nested dict, mixed dtypes incl.
+    bfloat16/int32/bool) survives save/restore with dtypes, shapes and
+    values intact."""
+    carry = {
+        "edge": {"w": jnp.linspace(-1, 1, 28).reshape(4, 7),
+                 "b": jnp.zeros((4,), jnp.bfloat16)},
+        "pstate": {"counts": jnp.arange(12, dtype=jnp.int32).reshape(3, 4),
+                   "mask": jnp.array([True, False, True])},
+        "pos": jnp.int32(5),
+    }
+    save_pytree(str(tmp_path), carry, step=3)
+    back = restore_pytree(latest_checkpoint(str(tmp_path)))
+    for path, a in (("edge.w", carry["edge"]["w"]),
+                    ("edge.b", carry["edge"]["b"]),
+                    ("pstate.counts", carry["pstate"]["counts"]),
+                    ("pstate.mask", carry["pstate"]["mask"])):
+        outer, inner = path.split(".")
+        b = back[outer][inner]
+        assert np.asarray(b).dtype == np.asarray(a).dtype, path
+        assert np.asarray(b).shape == np.asarray(a).shape, path
+        np.testing.assert_array_equal(np.asarray(b, np.float32),
+                                      np.asarray(a, np.float32), err_msg=path)
+    assert int(back["pos"]) == 5

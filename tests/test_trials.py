@@ -10,17 +10,19 @@ import pytest
 from repro.api.spec import EnvSpec, ExperimentSpec, PolicySpec
 from repro.core.utility import POLICY_TABLE
 from repro.trials import ledger
-from repro.trials.metrics import ScoredCell, TrialRecord, score_cells
+from repro.trials.metrics import (ScoredCell, TrialRecord,
+                                  record_from_entry, score_cells)
 from repro.trials.runner import run_suite
 from repro.trials.suite import TrialSuite, get_suite
-from repro.trials.suites import PAPER_FIG3, PAPER_FIG4_QUICK
+from repro.trials.suites import (PAPER_FIG3, PAPER_FIG4_QUICK,
+                                 ROBUSTNESS_PANEL)
 
 
 # -- suite declaration / serialization ---------------------------------------
 
 
 def test_suite_json_round_trip():
-    for suite in (PAPER_FIG3, PAPER_FIG4_QUICK):
+    for suite in (PAPER_FIG3, PAPER_FIG4_QUICK, ROBUSTNESS_PANEL):
         back = TrialSuite.from_json(suite.to_json())
         assert back == suite
         # and the serialized form is plain JSON data
@@ -257,3 +259,112 @@ def test_run_suite_end_to_end(tmp_path):
     n, report = ledger.check_suite(entries, ledger.load_entries(path),
                                    "mini")
     assert n == 0, report
+
+
+# -- resume: recorded cells skip, changed specs re-run ----------------------
+
+
+def test_record_from_entry_round_trip():
+    rec = TrialRecord(
+        suite="s", policy="COCS", coord=(("budget", 3.5),),
+        cum_utility=90.0, cum_utility_seeds=(88.0, 92.0),
+        participation=2.0, regret=10.0, regret_seeds=(11.0, 9.0),
+        final_acc=0.8, acc_curve=(0.5, 0.8), us_per_call=123.0,
+        tier=3, draw_schedule="sched/v1",
+        provenance=(("spec", {"horizon": 10}), ("tier", 3)))
+    back = record_from_entry(json.loads(json.dumps(rec.to_entry())))
+    assert (back.suite, back.policy, back.coord) == ("s", "COCS",
+                                                     (("budget", 3.5),))
+    assert back.cum_utility_seeds == rec.cum_utility_seeds
+    assert back.regret == rec.regret
+    assert back.regret_seeds == rec.regret_seeds
+    assert back.final_acc == rec.final_acc
+    assert back.acc_curve == rec.acc_curve
+    assert back.us_per_call == rec.us_per_call
+    assert back.tier == 3
+    assert back.draw_schedule == "sched/v1"
+    assert back.name == rec.name
+
+
+def test_run_suite_resume_skips_recorded_cells(tmp_path, monkeypatch):
+    """With every cell already in the ledger under the identical resolved
+    spec, a --resume run executes nothing and carries the recorded
+    records through unchanged."""
+    from repro import api
+
+    path = str(tmp_path / "BENCH_mini.json")
+    suite = _mini_suite()
+    first = run_suite(suite, ledger=path)
+
+    def boom(*a, **k):
+        raise AssertionError("resume must not re-run recorded cells")
+
+    monkeypatch.setattr(api, "run", boom)
+    second = run_suite(suite, ledger=path, resume=True)
+    assert {(r.policy, r.coord) for r in second.records} == \
+        {(r.policy, r.coord) for r in first.records}
+    for rec in first.records:
+        again = second.record(rec.policy, rec.coord)
+        assert again.cum_utility == pytest.approx(rec.cum_utility)
+        if rec.regret is None:
+            assert again.regret is None
+        else:
+            assert again.regret == pytest.approx(rec.regret)
+    assert second.draw_schedule == first.draw_schedule
+
+
+def test_run_suite_resume_reruns_on_spec_change(tmp_path, monkeypatch):
+    """A recorded cell whose resolved spec differs (here: a different
+    horizon under the same record names) is not trusted — every cell
+    re-runs."""
+    from repro import api
+    from dataclasses import replace
+
+    path = str(tmp_path / "BENCH_mini.json")
+    suite = _mini_suite()
+    run_suite(suite, ledger=path)
+    changed = TrialSuite(name="mini",
+                         base=replace(suite.base, horizon=24),
+                         policies=suite.policies)
+    calls = []
+    real = api.run
+
+    def spy(spec, **kw):
+        calls.append(spec)
+        return real(spec, **kw)
+
+    monkeypatch.setattr(api, "run", spy)
+    run_suite(changed, ledger=path, resume=True)
+    assert len(calls) == len(changed.policies)
+
+
+def test_run_suite_resume_partial_scores_against_recorded_oracle(
+        tmp_path, monkeypatch):
+    """Drop one non-oracle record from the ledger: resume re-runs only
+    that cell and scores its regret against the *recorded* oracle row
+    (utilities are draw-schedule-deterministic, so it matches the
+    original regret exactly)."""
+    from repro import api
+
+    path = str(tmp_path / "BENCH_mini.json")
+    suite = _mini_suite()
+    first = run_suite(suite, ledger=path)
+    with open(path) as f:
+        on_disk = json.load(f)
+    with open(path, "w") as f:
+        json.dump([e for e in on_disk if e["name"] != "trial_mini_COCS"],
+                  f)
+    calls = []
+    real = api.run
+
+    def spy(spec, **kw):
+        calls.append(spec)
+        return real(spec, **kw)
+
+    monkeypatch.setattr(api, "run", spy)
+    second = run_suite(suite, ledger=path, resume=True)
+    assert len(calls) == 1           # only the dropped COCS cell re-ran
+    assert second.record("COCS").regret == pytest.approx(
+        first.record("COCS").regret)
+    assert second.record("COCS").cum_utility_seeds == \
+        first.record("COCS").cum_utility_seeds
