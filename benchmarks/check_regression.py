@@ -31,6 +31,9 @@ except ImportError:  # invoked as a bare script without PYTHONPATH=src
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
     from repro.trials.ledger import entry_metric, load_entries, timing
 
+from repro.obs.logging_setup import (add_logging_args, get_logger,
+                                     setup_from_args)
+
 
 class ReferenceRowError(ValueError):
     """A ``NAME:REF`` reference row is missing or carries no usable
@@ -74,7 +77,10 @@ def main(argv=None) -> int:
                          "(hardware-independent guard)")
     ap.add_argument("--max-ratio", type=float, default=1.5,
                     help="fail when current/baseline exceeds this")
+    add_logging_args(ap)
     args = ap.parse_args(argv)
+    setup_from_args(args)
+    log = get_logger("repro.bench")
     entries = args.entry or ["fig4_sweep_fused"]
 
     baseline = load_entries(args.baseline)
@@ -87,14 +93,14 @@ def main(argv=None) -> int:
             base = _checked_metric(baseline, name, ref, "baseline")
             cur = _checked_metric(current, name, ref, "current")
         except ReferenceRowError as e:
-            print(f"{name}: {e} — FAIL")
+            log.warning(f"{name}: {e} — FAIL")
             failures += 1
             continue
         if base is None:
-            print(f"{name}: no usable baseline entry — skipping")
+            log.info(f"{name}: no usable baseline entry — skipping")
             continue
         if cur is None:
-            print(f"{name}: missing/errored in current run — FAIL")
+            log.warning(f"{name}: missing/errored in current run — FAIL")
             failures += 1
             continue
         # write_json merges by name, so a benchmark that stopped emitting
@@ -104,15 +110,16 @@ def main(argv=None) -> int:
                  and current[name].get("us_per_call")
                  == baseline[name].get("us_per_call"))
         if stale:
-            print(f"{name}: timing identical to baseline — the benchmark "
-                  "did not re-measure this entry — FAIL")
+            log.warning(f"{name}: timing identical to baseline — the "
+                        "benchmark did not re-measure this entry — FAIL")
             failures += 1
             continue
         ratio = cur / base
         unit = (f"x {ref}" if ref else "us")
         verdict = "OK" if ratio <= args.max_ratio else "REGRESSION"
-        print(f"{name}: {base:.3g}{unit} -> {cur:.3g}{unit} "
-              f"({ratio:.2f}x, limit {args.max_ratio:.2f}x) {verdict}")
+        line = (f"{name}: {base:.3g}{unit} -> {cur:.3g}{unit} "
+                f"({ratio:.2f}x, limit {args.max_ratio:.2f}x) {verdict}")
+        (log.info if ratio <= args.max_ratio else log.warning)(line)
         if ratio > args.max_ratio:
             failures += 1
     return 1 if failures else 0

@@ -67,9 +67,16 @@ def timed(fn: Callable, repeats: int = 1) -> Tuple[float, object]:
 
 
 def emit(rows: List[Row]) -> None:
+    """Print benchmark CSV rows via the shared ``repro`` logger — the
+    default rendering is byte-identical to the old bare ``print`` (the
+    INFO format is ``%(message)s`` on stdout), so CI greps over the CSV
+    stay stable while ``-v``/``--quiet`` now apply."""
+    from repro.obs.logging_setup import get_logger
+
+    log = get_logger("repro.bench")
     for name, us, derived in rows:
         stamp = "" if us is None else f"{us:.1f}"
-        print(f"{name},{stamp},{derived}")
+        log.info(f"{name},{stamp},{derived}")
 
 
 def write_json(rows: List[Row], path: str) -> None:

@@ -7,6 +7,12 @@ merges the rows by name into the JSON list at PATH (e.g.
 ``speedup_vs`` ratio against the previous value, so the perf trajectory
 accumulates across PRs (uploaded as a CI artifact; guarded by
 ``benchmarks/check_regression.py``).
+
+Output goes through ``repro.obs.logging_setup`` — default stdout is
+byte-identical to the historical ``print`` CSV; ``-v`` adds timestamped
+DEBUG records, ``--quiet`` keeps only warnings. Set
+``REPRO_TRACE=bench.jsonl`` (optionally ``REPRO_TRACE_PERFETTO=...``)
+to capture a span trace of every run the suite dispatches.
 """
 from __future__ import annotations
 
@@ -15,6 +21,8 @@ import sys
 import traceback
 
 from benchmarks.common import Row, emit, write_json
+from repro.obs.logging_setup import (add_logging_args, get_logger,
+                                     setup_from_args)
 
 MODULES = [
     "benchmarks.fig2_participation",
@@ -39,11 +47,15 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as a JSON list to PATH "
                          "(convention: BENCH_<name>.json)")
+    add_logging_args(ap)
     args = ap.parse_args(argv)
-    print("name,us_per_call,derived")
+    setup_from_args(args)
+    log = get_logger("repro.bench")
+    log.info("name,us_per_call,derived")
     all_rows: list[Row] = []
     failures = 0
     for modname in MODULES:
+        log.debug("running %s", modname)
         try:
             mod = __import__(modname, fromlist=["run"])
             rows = mod.run()
@@ -51,7 +63,7 @@ def main(argv=None) -> None:
             all_rows.extend(rows)
         except Exception as e:  # noqa: BLE001 — keep the suite going
             failures += 1
-            print(f"{modname},,ERROR:{type(e).__name__}:{e}")
+            log.error(f"{modname},,ERROR:{type(e).__name__}:{e}")
             all_rows.append((modname, None, f"ERROR:{type(e).__name__}:{e}"))
             traceback.print_exc(file=sys.stderr)
     if args.json:

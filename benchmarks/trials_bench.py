@@ -18,9 +18,48 @@ from __future__ import annotations
 import os
 from typing import List
 
-from benchmarks.common import FULL, Row
+from benchmarks.common import FULL, Row, timed
 
 LEDGER = os.environ.get("REPRO_TRIALS_LEDGER", "BENCH_trials.json")
+
+
+def _telemetry_overhead_rows() -> List[Row]:
+    """Same-run telemetry-on vs telemetry-off pair on a small fused
+    (tier-3) run: the on-device taps are pure arithmetic threaded
+    through the existing scan carry, so the ``trials_telemetry_on``
+    row must stay within 1.1x of its ``trials_telemetry_off``
+    same-file reference (the CI NAME:REF guard). Both variants warm
+    their own compile cache before the timed calls."""
+    import dataclasses as dc
+
+    from repro import api
+    from repro.obs import ObsSpec
+
+    spec_off = api.ExperimentSpec(
+        policy=api.PolicySpec(name="COCS"),
+        env=api.EnvSpec(scenario="paper"),
+        train=api.TrainSpec(model="logreg"),
+        eval=api.EvalSpec(eval_every=8),
+        horizon=48 if FULL else 24, seeds=(0, 1))
+    spec_on = dc.replace(spec_off, obs=ObsSpec(telemetry=True))
+    rows: List[Row] = []
+    timings = {}
+    for name, spec in (("trials_telemetry_off", spec_off),
+                       ("trials_telemetry_on", spec_on)):
+        api.run(spec)                       # compile + env-cache warmup
+        us, res = timed(lambda s=spec: api.run(s), repeats=3)
+        timings[name] = us
+        tele = "" if res.telemetry is None else (
+            f";deadline_miss_rate="
+            f"{res.telemetry['summary']['deadline_miss_rate']:.3f}")
+        rows.append((name, us,
+                     f"tier={res.tier};horizon={spec.horizon};"
+                     f"seeds={len(spec.seeds)}{tele}"))
+    ratio = timings["trials_telemetry_on"] / max(
+        timings["trials_telemetry_off"], 1e-9)
+    rows.append(("trials_telemetry_overhead", None,
+                 f"ratio={ratio:.3f};guard=1.1x_relative"))
+    return rows
 
 
 def run() -> List[Row]:
@@ -42,4 +81,5 @@ def run() -> List[Row]:
             f"records={len(result.records)};"
             f"cocs_regret={regrets.get('COCS', float('nan')):.1f};"
             f"worst={worst};ledger={os.path.basename(LEDGER)}"))
+    rows.extend(_telemetry_overhead_rows())
     return rows

@@ -368,7 +368,9 @@ def _fused_grid(key: ExperimentSpec, policy, env, device: bool, seeds,
             pstate, edge = out.policy_state, out.edge_params
             outs.append(out)
             lo = hi
-    acc, loss, utils, parts, sels, expl = _collect_blocks(outs)
+    # grid batches carry no telemetry taps (telemetry=None, trailing
+    # element dropped) — the observability surface is per-run, tiers 3/4
+    acc, loss, utils, parts, sels, expl, _ = _collect_blocks(outs)
     if train.slots_per_es is not None:
         # same loud-failure contract as the sweep engine: a pinned
         # capacity the solver exceeded silently dropped clients

@@ -35,6 +35,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from repro.api.spec import EnvSpec, ExperimentGrid, ExperimentSpec, PolicySpec
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -62,6 +63,11 @@ class RunResult:
     # {"checked": int, "events": [{"interval": int, "round_end": int,
     #  "bad": [leaf names]}, ...]}; None when the guard is off
     health: Optional[dict] = None
+    # on-device telemetry when ObsSpec.telemetry is on (tiers 3/4;
+    # repro.obs.telemetry): {"series": {metric: (S, T)}, "totals":
+    # {metric: (S,)}, "summary": {scalars}}; None when off or on a tier
+    # without taps (1/2, grid batches)
+    telemetry: Optional[dict] = None
 
     def final_accuracy(self) -> np.ndarray:
         if self.accuracy is None:
@@ -177,40 +183,54 @@ def run(spec, *, data=None):
     if not isinstance(spec, ExperimentSpec):
         raise TypeError("repro.run expects an ExperimentSpec or "
                         f"ExperimentGrid, got {type(spec).__name__}")
+    with obs_trace.run_tracing(spec.obs):
+        return _run_spec(spec, data)
 
+
+def _run_spec(spec: ExperimentSpec, data):
     from repro.sim.core import DeviceEnv
     from repro.sim.draws import SCHEDULE_ID
 
-    env = build_env(spec.env)
-    policy = build_policy(spec.policy, env.cfg, spec.horizon)
-    tier = select_tier(spec, policy, env)
-    backend = "device" if isinstance(env, DeviceEnv) else "host"
+    with obs_trace.span("run.resolve", policy=spec.policy.name,
+                        scenario=spec.env.scenario) as at:
+        env = build_env(spec.env)
+        policy = build_policy(spec.policy, env.cfg, spec.horizon)
+        tier = select_tier(spec, policy, env)
+        backend = "device" if isinstance(env, DeviceEnv) else "host"
+        at["tier"], at["backend"] = tier, backend
     seeds = [int(s) for s in spec.seeds]
     pol_seeds = [s + spec.policy.seed_offset for s in seeds]
 
     if tier == 1:
-        out = _run_bandit(policy, env, seeds, pol_seeds, spec.horizon,
-                          backend)
+        with obs_trace.span("run.dispatch", tier=tier):
+            out = _run_bandit(policy, env, seeds, pol_seeds, spec.horizon,
+                              backend)
+        # bandit scans carry no training taps: telemetry stays None
         return RunResult(spec=spec, tier=tier, env_backend=backend,
                          draw_schedule=SCHEDULE_ID, **out)
 
     from repro.experiment.sweep import sweep_experiments
     name = spec.policy.name
-    res = sweep_experiments(
-        {name: policy}, env, seeds, spec.horizon,
-        model_kind=spec.train.model_kind,
-        batch_size=spec.train.batch_size,
-        batches_per_epoch=spec.train.batches_per_epoch,
-        eval_every=spec.eval.eval_every, data=data,
-        use_kernel=spec.train.use_kernel,
-        slots_per_es=spec.train.slots_per_es,
-        shard_seeds=spec.shard_seeds,
-        policy_seed_offset=spec.policy.seed_offset,
-        aggregator=spec.train.aggregator,
-        trim_frac=spec.train.trim_frac,
-        checkpoint_dir=spec.eval.checkpoint_dir,
-        resume=spec.eval.resume,
-        health=spec.eval.health)
+    with obs_trace.span("run.dispatch", tier=tier, policy=name):
+        res = sweep_experiments(
+            {name: policy}, env, seeds, spec.horizon,
+            model_kind=spec.train.model_kind,
+            batch_size=spec.train.batch_size,
+            batches_per_epoch=spec.train.batches_per_epoch,
+            eval_every=spec.eval.eval_every, data=data,
+            use_kernel=spec.train.use_kernel,
+            slots_per_es=spec.train.slots_per_es,
+            shard_seeds=spec.shard_seeds,
+            policy_seed_offset=spec.policy.seed_offset,
+            aggregator=spec.train.aggregator,
+            trim_frac=spec.train.trim_frac,
+            checkpoint_dir=spec.eval.checkpoint_dir,
+            resume=spec.eval.resume,
+            health=spec.eval.health,
+            telemetry=spec.obs.telemetry)
+    telemetry = res.telemetry.get(name)
+    if telemetry is not None and obs_trace.active() is not None:
+        _emit_telemetry_event(name, telemetry)
     return RunResult(
         spec=spec, tier=tier, env_backend=backend,
         draw_schedule=SCHEDULE_ID,
@@ -218,7 +238,20 @@ def run(spec, *, data=None):
         participants=res.participants[name], explored=res.explored[name],
         eval_rounds=np.asarray(res.eval_rounds),
         accuracy=res.accuracy[name], loss=res.loss[name],
-        health=res.health.get(name))
+        health=res.health.get(name), telemetry=telemetry)
+
+
+def _emit_telemetry_event(name: str, telemetry: dict) -> None:
+    """Put the run's telemetry profile into the trace so ``python -m
+    repro.obs report`` can render exploration/participation traces."""
+    def series(key):
+        return [round(float(v), 4)
+                for v in np.mean(telemetry["series"][key], axis=0)]
+    obs_trace.event("telemetry", policy=name,
+                    summary=telemetry["summary"],
+                    participation=series("arrived"),
+                    explored=series("underexplored"),
+                    ucb_width=series("ucb_width"))
 
 
 def _run_bandit(policy, env, seeds: Sequence[int],

@@ -28,6 +28,7 @@ import json
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, Mapping, Optional, Tuple
 
+from repro.obs.spec import ObsSpec
 from repro.sim.faults import FaultSpec
 
 
@@ -215,7 +216,14 @@ class EvalSpec:
 
 @dataclass(frozen=True)
 class ExperimentSpec:
-    """One complete, serializable experiment description."""
+    """One complete, serializable experiment description.
+
+    ``obs`` (``repro.obs.ObsSpec``) declares how the run is observed:
+    on-device telemetry taps (``RunResult.telemetry``), a JSONL span
+    trace of the run lifecycle, Perfetto export, and an opt-in
+    ``jax.profiler`` capture. The default ``ObsSpec()`` is all-off —
+    byte-for-byte the seed behavior.
+    """
     policy: PolicySpec = field(default_factory=PolicySpec)
     env: EnvSpec = field(default_factory=EnvSpec)
     train: Optional[TrainSpec] = None
@@ -223,6 +231,7 @@ class ExperimentSpec:
     horizon: int = 200
     seeds: Tuple[int, ...] = (0,)
     shard_seeds: Optional[bool] = None
+    obs: ObsSpec = field(default_factory=ObsSpec)
 
     def __post_init__(self):
         if self.horizon <= 0:
@@ -251,7 +260,8 @@ class ExperimentSpec:
         return _from_dict(cls, d, nested=(("policy", PolicySpec),
                                           ("env", EnvSpec),
                                           ("train", TrainSpec),
-                                          ("eval", EvalSpec)))
+                                          ("eval", EvalSpec),
+                                          ("obs", ObsSpec)))
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)

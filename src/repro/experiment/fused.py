@@ -52,6 +52,7 @@ from repro.fed.edge import broadcast_global, effective_mask_multi
 from repro.fed.robust import robust_aggregate_stacked
 from repro.experiment.packing import pack_assignment
 from repro.models.logistic import accuracy, softmax_xent
+from repro.obs.telemetry import acc_init, acc_update, round_frame
 from repro.policies.base import FunctionalPolicy
 
 
@@ -66,11 +67,14 @@ class BlockOut(NamedTuple):
     accuracy: jax.Array      # (S,) test accuracy at block end
     loss: jax.Array          # (S,) test loss at block end
     env_pos: Optional[jax.Array] = None  # (S, N, 2) device-env carry
+    # observability taps (telemetry=True variants only; repro.obs):
+    telemetry: Optional[object] = None   # TelemetryFrame, (S, T) leaves
+    tele_acc: Optional[object] = None    # TelemetryAcc, (S,) running totals
 
 
 def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
                       slots: int, batch: int, loss_fn, grid: bool = False,
-                      faults=None):
+                      faults=None, telemetry: bool = False):
     """One training round for all seeds: ``(pstate, edge, rd, data...) ->
     (pstate', edge', outs)``. Shared by the host-rounds and device-env
     block variants so the two paths cannot drift. With ``grid=True`` the
@@ -84,7 +88,12 @@ def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
     from the counter-based schedule via its env seed (``env_seeds``), so
     the host-loop engine's packed events match bitwise, and the
     corrupted slots' deltas are scaled by ``corrupt_scale`` before the
-    Eq. 3 aggregation (``spec.aggregator`` picks the rule)."""
+    Eq. 3 aggregation (``spec.aggregator`` picks the rule).
+
+    ``telemetry`` appends a fifth element to ``outs`` — a per-round
+    ``repro.obs.telemetry.TelemetryFrame`` derived purely from the
+    intermediates this step already computes (no RNG, no extra draws),
+    so the existing outputs stay bitwise identical either way."""
     m, steps = spec.num_edge_servers, spec.steps
     sqrt_u = policy.spec.sqrt_utility
     corrupting = faults is not None and faults.corrupt_rate > 0.0
@@ -124,6 +133,7 @@ def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
         deltas = jax.tree.map(
             lambda d: d.reshape((n_seeds, m, slots) + d.shape[1:]),
             deltas)
+        slot_c = None
         if corrupting:
             from repro.sim import draws
             from repro.sim.faults import corrupt_mask
@@ -156,7 +166,12 @@ def _train_round_step(policy: FunctionalPolicy, spec: BatchedRoundSpec,
                             jnp.zeros((n_seeds,), bool))
                     if isinstance(aux, dict)
                     else jnp.zeros((n_seeds,), bool))
-        return new_pstate, new_edge, (assign, util, parts, explored)
+        outs = (assign, util, parts, explored)
+        if telemetry:
+            frame = round_frame(policy, pstate, rd, assign, arrived,
+                                valid, deltas, w, budgets, spec, slot_c)
+            outs = outs + (frame,)
+        return new_pstate, new_edge, outs
 
     return step
 
@@ -178,7 +193,7 @@ def _swap(a):
 @functools.lru_cache(maxsize=None)
 def fused_block(policy: FunctionalPolicy, spec: BatchedRoundSpec,
                 slots: int, batch: int, loss_fn, logits_fn,
-                faults=None):
+                faults=None, telemetry: bool = False):
     """Compile-once block runner for one (policy, spec, shapes) variant.
 
     Returns ``block(stacked_x, stacked_y, stacked_sizes, base_keys,
@@ -189,30 +204,46 @@ def fused_block(policy: FunctionalPolicy, spec: BatchedRoundSpec,
     ``faults`` enables update corruption) and the carries have a leading
     (S,) seed axis. Cached on value-hashable statics so every sweep over
     an equivalent configuration shares one executable.
+
+    ``telemetry`` threads a ``TelemetryAcc`` through the scan carry and
+    stacks per-round ``TelemetryFrame``s into ``BlockOut.telemetry`` —
+    pure extra outputs, so the original streams are bitwise unchanged.
     """
     round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
-                                   faults=faults)
+                                   faults=faults, telemetry=telemetry)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
               policy_state, edge_params, rounds, test_x, test_y,
               env_seeds):
 
         def step(carry, rd):
-            pstate, edge = carry
+            if telemetry:
+                pstate, edge, tacc = carry
+            else:
+                pstate, edge = carry
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
                                             base_keys,
                                             env_seeds=env_seeds)
+            if telemetry:
+                tacc = acc_update(tacc, outs[4], outs[3])
+                return (pstate, edge, tacc), outs
             return (pstate, edge), outs
 
-        (pstate, edge), (sel, util, parts, explored) = jax.lax.scan(
-            step, (policy_state, edge_params), rounds)
+        init = ((policy_state, edge_params,
+                 acc_init(base_keys.shape[0]))
+                if telemetry else (policy_state, edge_params))
+        carry, ys = jax.lax.scan(step, init, rounds)
+        pstate, edge = carry[0], carry[1]
+        sel, util, parts, explored = ys[:4]
         acc, loss = _block_eval(logits_fn, edge, test_x, test_y)
         return BlockOut(
             policy_state=pstate, edge_params=edge,
             selections=_swap(sel), utilities=_swap(util),
             participants=_swap(parts), explored=_swap(explored),
-            accuracy=acc, loss=loss)
+            accuracy=acc, loss=loss,
+            telemetry=(jax.tree.map(_swap, ys[4]) if telemetry else None),
+            tele_acc=(carry[2] if telemetry else None))
 
     return jax.jit(block, donate_argnums=(4, 5))
 
@@ -220,7 +251,7 @@ def fused_block(policy: FunctionalPolicy, spec: BatchedRoundSpec,
 @functools.lru_cache(maxsize=None)
 def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
                        slots: int, batch: int, loss_fn, logits_fn,
-                       sim_spec):
+                       sim_spec, telemetry: bool = False):
     """``fused_block`` with the environment *inside* the compiled region.
 
     Returns ``block(stacked_x, stacked_y, stacked_sizes, base_keys,
@@ -236,28 +267,41 @@ def fused_block_device(policy: FunctionalPolicy, spec: BatchedRoundSpec,
     """
     from repro.sim.core import round_batch
     round_step = _train_round_step(policy, spec, slots, batch, loss_fn,
-                                   faults=sim_spec.faults)
+                                   faults=sim_spec.faults,
+                                   telemetry=telemetry)
 
     def block(stacked_x, stacked_y, stacked_sizes, base_keys,
               policy_state, edge_params, env_pos, seeds, statics,
               ts, test_x, test_y):
 
         def step(carry, t):
-            pstate, edge, pos = carry
+            if telemetry:
+                pstate, edge, pos, tacc = carry
+            else:
+                pstate, edge, pos = carry
             pos, rd = round_batch(sim_spec, seeds, statics, pos, t)
             pstate, edge, outs = round_step(pstate, edge, rd, stacked_x,
                                             stacked_y, stacked_sizes,
                                             base_keys, env_seeds=seeds)
+            if telemetry:
+                tacc = acc_update(tacc, outs[4], outs[3])
+                return (pstate, edge, pos, tacc), outs
             return (pstate, edge, pos), outs
 
-        (pstate, edge, pos), (sel, util, parts, explored) = jax.lax.scan(
-            step, (policy_state, edge_params, env_pos), ts)
+        init = ((policy_state, edge_params, env_pos,
+                 acc_init(base_keys.shape[0]))
+                if telemetry else (policy_state, edge_params, env_pos))
+        carry, ys = jax.lax.scan(step, init, ts)
+        pstate, edge, pos = carry[0], carry[1], carry[2]
+        sel, util, parts, explored = ys[:4]
         acc, loss = _block_eval(logits_fn, edge, test_x, test_y)
         return BlockOut(
             policy_state=pstate, edge_params=edge,
             selections=_swap(sel), utilities=_swap(util),
             participants=_swap(parts), explored=_swap(explored),
-            accuracy=acc, loss=loss, env_pos=pos)
+            accuracy=acc, loss=loss, env_pos=pos,
+            telemetry=(jax.tree.map(_swap, ys[4]) if telemetry else None),
+            tele_acc=(carry[3] if telemetry else None))
 
     return jax.jit(block, donate_argnums=(4, 5, 6))
 

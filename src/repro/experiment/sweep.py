@@ -47,6 +47,7 @@ from repro.fed.batched import (BatchedRoundEngine, bucketed_capacity,
                                make_round_spec)
 from repro.fed.hfl import _eval_fn
 from repro.models.logistic import make_loss_fn, make_model
+from repro.obs import trace as obs_trace
 from repro.policies.base import (FunctionalPolicy, PolicyAdapter, Round,
                                  rounds_to_scan_axes)
 from repro.policies.engine import (run_rounds_multi_seed, stack_states)
@@ -68,6 +69,11 @@ class SweepResult:
     # ``sweep_experiments(health=...)``): {"checked": int, "events":
     # [{"interval": int, "round_end": int, "bad": [leaf names]}]}
     health: Dict[str, dict] = field(default_factory=dict)
+    # per-policy on-device telemetry when ``telemetry=True``
+    # (``repro.obs.telemetry``): {"series": {metric: (S, T)},
+    # "totals": {metric: (S,)}, "summary": {scalars}}; None per policy
+    # on paths without taps (host-loop fallback)
+    telemetry: Dict[str, Optional[dict]] = field(default_factory=dict)
 
     def final_accuracy(self, name: str) -> np.ndarray:
         return self.accuracy[name][:, -1]
@@ -249,15 +255,20 @@ class _ResilientCtx:
 
 
 def _run_fingerprint(name: str, spec, env, device_env: bool, seeds,
-                     ends, slots_blocks) -> str:
+                     ends, slots_blocks, telemetry: bool = False) -> str:
     from repro.sim.draws import SCHEDULE_ID
     world = (repr(env.spec) if device_env
              else f"{env.name}/{env.cfg!r}/"
                   f"faults={getattr(env, 'faults', None)!r}")
-    return json.dumps({"schedule": SCHEDULE_ID, "policy": name,
-                       "spec": repr(spec), "world": world,
-                       "seeds": list(seeds), "ends": list(ends),
-                       "slots": list(slots_blocks)}, sort_keys=True)
+    fp = {"schedule": SCHEDULE_ID, "policy": name,
+          "spec": repr(spec), "world": world,
+          "seeds": list(seeds), "ends": list(ends),
+          "slots": list(slots_blocks)}
+    if telemetry:
+        # telemetry-on checkpoints carry extra out leaves; keep the
+        # telemetry-off fingerprint byte-identical to the seed format
+        fp["telemetry"] = True
+    return json.dumps(fp, sort_keys=True)
 
 
 def _like(template, restored):
@@ -274,7 +285,17 @@ def _like(template, restored):
 
 
 def _out_np(o) -> dict:
-    return {k: np.asarray(getattr(o, k)) for k in _OUT_FIELDS}
+    d = {k: np.asarray(getattr(o, k)) for k in _OUT_FIELDS}
+    # telemetry taps (when on) checkpoint alongside the result streams,
+    # as plain dicts of array leaves (msgpack payloads hold no classes)
+    if getattr(o, "telemetry", None) is not None:
+        from repro.obs.telemetry import TelemetryAcc, TelemetryFrame
+        tele, acc = o.telemetry, o.tele_acc
+        d["telemetry"] = {k: np.asarray(getattr(tele, k))
+                          for k in TelemetryFrame._fields}
+        d["tele_acc"] = {k: np.asarray(getattr(acc, k))
+                         for k in TelemetryAcc._fields}
+    return d
 
 
 def _try_resume(ctx: _ResilientCtx, template: dict):
@@ -326,19 +347,24 @@ def _after_block(ctx: _ResilientCtx, bi: int, hi: int, carry: dict, out):
         if bad:
             ctx.report["events"].append(
                 {"interval": bi, "round_end": hi, "bad": bad})
+            # carry-guard findings join the telemetry event stream, so
+            # a traced run shows them in-line with the block spans
+            obs_trace.event("health", interval=bi, round_end=hi, bad=bad)
             if ctx.health == "halt":
                 raise RuntimeError(
                     f"non-finite training state after interval {bi} "
                     f"(round {hi}): {bad} — run with health='record' to "
                     "log and continue instead")
     if ctx.ckpt_dir is not None:
-        save_pytree(ctx.ckpt_dir, {
-            "fingerprint": _str_arr(ctx.fingerprint),
-            "blocks_done": np.int64(bi + 1),
-            "carry": carry_np,
-            "outs": list(ctx.outs_np),
-            "health": _str_arr(json.dumps(ctx.report)),
-        }, step=bi + 1)
+        with obs_trace.span("checkpoint.save", interval=bi,
+                            step=bi + 1):
+            save_pytree(ctx.ckpt_dir, {
+                "fingerprint": _str_arr(ctx.fingerprint),
+                "blocks_done": np.int64(bi + 1),
+                "carry": carry_np,
+                "outs": list(ctx.outs_np),
+                "health": _str_arr(json.dumps(ctx.report)),
+            }, step=bi + 1)
     if ctx.stop_after is not None and bi + 1 >= ctx.stop_after:
         raise SimulatedKill(
             f"stop_after_blocks={ctx.stop_after}: run killed after "
@@ -361,8 +387,8 @@ def sweep_experiments(policies: Union[Sequence[str],
                       aggregator: str = "mean", trim_frac: float = 0.1,
                       checkpoint_dir: Optional[str] = None,
                       resume: bool = False, health: str = "off",
-                      stop_after_blocks: Optional[int] = None
-                      ) -> SweepResult:
+                      stop_after_blocks: Optional[int] = None,
+                      telemetry: bool = False) -> SweepResult:
     """Run every policy for every seed over ``horizon`` training rounds.
 
     ``policies`` is either a dict name -> ``FunctionalPolicy`` or a list
@@ -391,6 +417,11 @@ def sweep_experiments(policies: Union[Sequence[str],
     ``SweepResult.health``, "halt" raises). ``stop_after_blocks`` raises
     ``SimulatedKill`` after that many checkpointed intervals (test/demo
     hook). Host-loop policies run without the resilience hooks (warned).
+
+    ``telemetry=True`` threads the ``repro.obs`` metric taps through the
+    fused scans (observer-only: selections/utilities/explored stay
+    bitwise identical) and fills ``SweepResult.telemetry`` per policy;
+    host-loop policies report ``None`` there.
 
     This is the internal engine behind the ``repro.run`` facade; prefer
     ``repro.run(ExperimentSpec(...))`` in new code.
@@ -431,18 +462,22 @@ def sweep_experiments(policies: Union[Sequence[str],
     rounds_per_seed = None          # host RoundData lists, realized lazily
     batch_st = scan_rounds = None
     if not device_env and any_jax_pol:
-        if any_host_pol:
-            from repro.policies.engine import stack_rounds_multi
-            rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
-            batch_st = stack_rounds_multi(rounds_per_seed)  # (S, T, ...)
-        else:
-            batch_st = env.rollout_multi(seeds, horizon)    # (S, T, ...)
-        scan_rounds = rounds_to_scan_axes(batch_st)         # (T, S, ...)
-    setup = prepare_training(cfg, model_kind, batch_size,
-                             batches_per_epoch, data, seeds,
-                             use_kernel=use_kernel, tile=tile,
-                             aggregator=aggregator, trim_frac=trim_frac,
-                             corrupt=corrupt)
+        with obs_trace.span("env.realize", seeds=len(seeds),
+                            horizon=horizon):
+            if any_host_pol:
+                from repro.policies.engine import stack_rounds_multi
+                rounds_per_seed = [env.rollout(s, horizon) for s in seeds]
+                batch_st = stack_rounds_multi(rounds_per_seed)  # (S,T,...)
+            else:
+                batch_st = env.rollout_multi(seeds, horizon)    # (S,T,...)
+            scan_rounds = rounds_to_scan_axes(batch_st)         # (T,S,...)
+    with obs_trace.span("train.prepare", seeds=len(seeds),
+                        model=model_kind):
+        setup = prepare_training(cfg, model_kind, batch_size,
+                                 batches_per_epoch, data, seeds,
+                                 use_kernel=use_kernel, tile=tile,
+                                 aggregator=aggregator,
+                                 trim_frac=trim_frac, corrupt=corrupt)
     data, stacked, batch = setup.data, setup.stacked, setup.batch
     loss_fn, logits_fn = setup.loss_fn, setup.logits_fn
     edge0, base_keys, spec = setup.edge_seed, setup.base_keys, setup.spec
@@ -473,7 +508,7 @@ def sweep_experiments(policies: Union[Sequence[str],
     result = SweepResult(policies=list(policies), seeds=seeds,
                          eval_rounds=np.asarray(ends), accuracy={}, loss={},
                          utilities={}, participants={}, selections={},
-                         explored={}, health={})
+                         explored={}, health={}, telemetry={})
     for name, pol in policies.items():
         if pol.jax_capable:
             if slots_per_es is not None:
@@ -483,14 +518,15 @@ def sweep_experiments(policies: Union[Sequence[str],
                 # falling back to the budget bound if the pre-scan fails
                 # (surfaced — padding then costs perf, never correctness)
                 try:
-                    if device_env:
-                        from repro.sim.engine import run_bandit_device
-                        pre = run_bandit_device(pol, env.spec, seeds,
-                                                horizon,
-                                                policy_seeds=pol_seeds)
-                    else:
-                        pre = run_rounds_multi_seed(pol, batch_st,
-                                                    pol_seeds)
+                    with obs_trace.span("slots.prescan", policy=name):
+                        if device_env:
+                            from repro.sim.engine import run_bandit_device
+                            pre = run_bandit_device(pol, env.spec, seeds,
+                                                    horizon,
+                                                    policy_seeds=pol_seeds)
+                        else:
+                            pre = run_rounds_multi_seed(pol, batch_st,
+                                                        pol_seeds)
                     slots_blocks = _block_slots(
                         pre["selections"], cfg.num_edge_servers, ends,
                         spec.slot_bucket)
@@ -520,20 +556,21 @@ def sweep_experiments(policies: Union[Sequence[str],
                     stop_after=stop_after_blocks,
                     fingerprint=_run_fingerprint(
                         name, spec, env, device_env, seeds, ends,
-                        slots_blocks))
+                        slots_blocks, telemetry=telemetry))
             pstate = _shard_seed_axis(stack_states(pol, pol_seeds), mesh)
             if device_env:
                 out = _run_fused_device(pol, spec, slots_blocks, batch,
                                         loss_fn, logits_fn, stacked,
                                         base_keys, pstate, edge0,
                                         env.spec, env_seeds, env_statics,
-                                        test_x, test_y, ends, ctx=ctx)
+                                        test_x, test_y, ends, ctx=ctx,
+                                        telemetry=telemetry)
             else:
                 out = _run_fused(pol, spec, slots_blocks, batch, loss_fn,
                                  logits_fn, stacked, base_keys, pstate,
                                  edge0, scan_rounds, test_x, test_y, ends,
                                  faults=faults, env_seeds=env_seeds,
-                                 ctx=ctx)
+                                 ctx=ctx, telemetry=telemetry)
             if ctx is not None and health != "off":
                 result.health[name] = ctx.report
         else:
@@ -561,7 +598,7 @@ def sweep_experiments(policies: Union[Sequence[str],
                     "leave it None for the exact pre-scan capacity")
         (result.accuracy[name], result.loss[name], result.utilities[name],
          result.participants[name], result.selections[name],
-         result.explored[name]) = out
+         result.explored[name], result.telemetry[name]) = out
     return result
 
 
@@ -574,23 +611,56 @@ def run_experiment_sweep(*args, **kwargs) -> SweepResult:
     return sweep_experiments(*args, **kwargs)
 
 
-def _collect_blocks(outs):
+def _collect_blocks(outs, telemetry: bool = False):
+    tele = None
+    if telemetry:
+        from repro.obs.telemetry import collect
+        tele = collect([getattr(o, "telemetry", None) for o in outs],
+                       [getattr(o, "tele_acc", None) for o in outs])
     return (np.stack([np.asarray(o.accuracy) for o in outs], axis=1),
             np.stack([np.asarray(o.loss) for o in outs], axis=1),
             np.concatenate([np.asarray(o.utilities) for o in outs], axis=1),
             np.concatenate([np.asarray(o.participants) for o in outs],
                            axis=1),
             np.concatenate([np.asarray(o.selections) for o in outs], axis=1),
-            np.concatenate([np.asarray(o.explored) for o in outs], axis=1))
+            np.concatenate([np.asarray(o.explored) for o in outs], axis=1),
+            tele)
+
+
+def _traced_block(factory, make_args, bi, hi, lo, slots, attrs):
+    """Dispatch one fused block under a tracer span (when active):
+    records factory compile-cache hit/miss, whether this dispatch jit-
+    compiled, and the dispatch (trace+compile) vs execute time split.
+    With no tracer active this is the bare factory+call fast path — no
+    sync, outputs stay in flight."""
+    with obs_trace.span("fused_block" + attrs.pop("suffix", ""),
+                        interval=bi, round_end=hi, rounds=hi - lo,
+                        slots=slots, **attrs) as at:
+        misses0 = factory.cache_info().misses
+        fn, args = make_args()
+        tr = obs_trace.active()
+        if tr is None:
+            return fn(*args)
+        at["factory_hit"] = factory.cache_info().misses == misses0
+        cache0 = fn._cache_size()
+        t0 = obs_trace.now_us()
+        out = fn(*args)
+        at["dispatch_us"] = obs_trace.now_us() - t0
+        t1 = obs_trace.now_us()
+        jax.block_until_ready(out)
+        at["execute_us"] = obs_trace.now_us() - t1
+        at["compiled"] = fn._cache_size() > cache0
+        return out
 
 
 def _run_fused(pol, spec, slots_blocks, batch, loss_fn, logits_fn, stacked,
                base_keys, pstate, edge0, scan_rounds, test_x, test_y, ends,
-               faults=None, env_seeds=None, ctx=None):
+               faults=None, env_seeds=None, ctx=None, telemetry=False):
     """All seeds at once: one fused dispatch per eval interval. Blocks are
     dispatched back-to-back with device outputs kept in flight; the host
     only materializes after the last block is enqueued (unless a
-    resilient ``ctx`` syncs per interval for checkpoint/health)."""
+    resilient ``ctx`` syncs per interval for checkpoint/health, or an
+    active tracer syncs to split dispatch/execute time)."""
     edge = jax.tree.map(jnp.copy, edge0)      # edge0 is reused per policy
     outs, start = [], 0
     if ctx is not None and ctx.resume:
@@ -601,25 +671,30 @@ def _run_fused(pol, spec, slots_blocks, batch, loss_fn, logits_fn, stacked,
     lo = ends[start - 1] if start > 0 else 0
     for bi in range(start, len(ends)):
         hi, slots = ends[bi], slots_blocks[bi]
-        fn = fused_block(pol, spec, slots, batch, loss_fn, logits_fn,
-                         faults)
-        blk = Round(*(getattr(scan_rounds, f)[lo:hi]
-                      for f in Round._fields))
-        out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
-                 pstate, edge, blk, test_x, test_y, env_seeds)
+
+        def make_args(lo=lo, slots=slots, pstate=pstate, edge=edge):
+            fn = fused_block(pol, spec, slots, batch, loss_fn, logits_fn,
+                             faults, telemetry)
+            blk = Round(*(getattr(scan_rounds, f)[lo:ends[bi]]
+                          for f in Round._fields))
+            return fn, (stacked.x, stacked.y, stacked.sizes, base_keys,
+                        pstate, edge, blk, test_x, test_y, env_seeds)
+
+        out = _traced_block(fused_block, make_args, bi, hi, lo, slots,
+                            {"policy": pol.name})
         pstate, edge = out.policy_state, out.edge_params
         outs.append(out)
         if ctx is not None:
             _after_block(ctx, bi, hi, {"pstate": pstate, "edge": edge},
                          out)
         lo = hi
-    return _collect_blocks(outs)
+    return _collect_blocks(outs, telemetry)
 
 
 def _run_fused_device(pol, spec, slots_blocks, batch, loss_fn, logits_fn,
                       stacked, base_keys, pstate, edge0, sim_spec,
                       env_seeds, env_statics, test_x, test_y, ends,
-                      ctx=None):
+                      ctx=None, telemetry=False):
     """Device-env twin of ``_run_fused``: each block generates its own
     rounds in-scan; the env's mobility positions thread through the
     blocks as a donated carry (``BlockOut.env_pos``)."""
@@ -636,18 +711,26 @@ def _run_fused_device(pol, spec, slots_blocks, batch, loss_fn, logits_fn,
     lo = ends[start - 1] if start > 0 else 0
     for bi in range(start, len(ends)):
         hi, slots = ends[bi], slots_blocks[bi]
-        fn = fused_block_device(pol, spec, slots, batch, loss_fn,
-                                logits_fn, sim_spec)
-        out = fn(stacked.x, stacked.y, stacked.sizes, base_keys,
-                 pstate, edge, pos, env_seeds, env_statics,
-                 jnp.arange(lo, hi, dtype=jnp.int32), test_x, test_y)
+
+        def make_args(lo=lo, slots=slots, pstate=pstate, edge=edge,
+                      pos=pos):
+            fn = fused_block_device(pol, spec, slots, batch, loss_fn,
+                                    logits_fn, sim_spec, telemetry)
+            return fn, (stacked.x, stacked.y, stacked.sizes, base_keys,
+                        pstate, edge, pos, env_seeds, env_statics,
+                        jnp.arange(lo, ends[bi], dtype=jnp.int32),
+                        test_x, test_y)
+
+        out = _traced_block(fused_block_device, make_args, bi, hi, lo,
+                            slots, {"suffix": "_device",
+                                    "policy": pol.name})
         pstate, edge, pos = out.policy_state, out.edge_params, out.env_pos
         outs.append(out)
         if ctx is not None:
             _after_block(ctx, bi, hi, {"pstate": pstate, "edge": edge,
                                        "pos": pos}, out)
         lo = hi
-    return _collect_blocks(outs)
+    return _collect_blocks(outs, telemetry)
 
 
 def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
@@ -686,4 +769,6 @@ def _run_host(pol, spec, loss_fn, logits_fn, data, edge0, rounds_per_seed,
             acc, loss = eval_fn(edge, test_x, test_y)
             accs[si, ei], losses[si, ei] = float(acc), float(loss)
             lo = hi
-    return accs, losses, utils, parts, sels, expl
+    # host-loop tier: no on-device taps (telemetry is a fused-scan
+    # feature); callers see None and fall back gracefully
+    return accs, losses, utils, parts, sels, expl, None

@@ -1,0 +1,94 @@
+"""Shared logging setup for the repo's CLI surfaces.
+
+Everything user-facing that used to be a bare ``print`` goes through
+the ``repro`` logger instead. The default rendering is deliberately
+byte-identical to what ``print`` produced — ``%(message)s`` to stdout
+at INFO — so CI greps over benchmark CSV lines and trials summaries
+keep working. ``-v`` adds DEBUG records with a timestamped prefix;
+``--quiet`` drops everything below WARNING.
+
+Progress lines (live per-cell ETA output from the trials runner) use
+the separate ``repro.progress`` logger, which writes to **stderr** and
+does not propagate — interleaved progress can never corrupt a stdout
+stream that is being piped into a file or a parser.
+"""
+from __future__ import annotations
+
+import logging
+import sys
+
+_CONFIGURED = False
+
+
+class _LiveStream:
+    """Resolves ``sys.stdout``/``sys.stderr`` at *emit* time, so stream
+    redirection (contextlib.redirect_stdout, pytest capture) applies to
+    records logged after the handler was created."""
+
+    def __init__(self, name: str):
+        self._name = name
+
+    def write(self, s: str) -> None:
+        getattr(sys, self._name).write(s)
+
+    def flush(self) -> None:
+        stream = getattr(sys, self._name)
+        if hasattr(stream, "flush"):
+            stream.flush()
+
+
+def setup(verbosity: int = 0, quiet: bool = False) -> logging.Logger:
+    """Configure the ``repro`` logger tree. Idempotent; later calls
+    re-apply the level/format (so tests can flip verbosity)."""
+    global _CONFIGURED
+    root = logging.getLogger("repro")
+    prog = logging.getLogger("repro.progress")
+    if not _CONFIGURED:
+        h = logging.StreamHandler(_LiveStream("stdout"))
+        root.addHandler(h)
+        ph = logging.StreamHandler(_LiveStream("stderr"))
+        ph.setFormatter(logging.Formatter("%(message)s"))
+        prog.addHandler(ph)
+        prog.propagate = False
+        root.propagate = False
+        _CONFIGURED = True
+    handler = root.handlers[0]
+    if quiet:
+        root.setLevel(logging.WARNING)
+        prog.setLevel(logging.WARNING)
+        handler.setFormatter(logging.Formatter("%(message)s"))
+    elif verbosity >= 1:
+        root.setLevel(logging.DEBUG)
+        prog.setLevel(logging.DEBUG)
+        handler.setFormatter(logging.Formatter(
+            "%(asctime)s %(levelname).1s %(name)s: %(message)s",
+            datefmt="%H:%M:%S"))
+    else:
+        root.setLevel(logging.INFO)
+        prog.setLevel(logging.INFO)
+        handler.setFormatter(logging.Formatter("%(message)s"))
+    return root
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    """A logger under the ``repro`` tree; configures defaults on first
+    use so library callers never see 'no handler' warnings."""
+    if not _CONFIGURED:
+        setup()
+    return logging.getLogger(name)
+
+
+def add_logging_args(parser) -> None:
+    """Attach the shared ``-v/--quiet`` flags to an argparse parser."""
+    parser.add_argument("-v", "--verbose", action="count", default=0,
+                        help="verbose logging (repeatable)")
+    parser.add_argument("--quiet", action="store_true",
+                        help="only warnings and errors")
+
+
+def setup_from_args(args) -> logging.Logger:
+    return setup(verbosity=getattr(args, "verbose", 0),
+                 quiet=getattr(args, "quiet", False))
+
+
+__all__ = ["setup", "get_logger", "add_logging_args", "setup_from_args"]

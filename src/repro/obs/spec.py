@@ -1,0 +1,70 @@
+"""``ObsSpec``: the declarative observability surface of an experiment.
+
+Like every other sub-spec on ``ExperimentSpec`` this is a frozen
+dataclass of plain values — hashable, jit-static-argument-safe, and
+JSON-round-trippable — so "how a run is observed" serializes with the
+run itself and rides provenance into the trials ledger.
+
+Two independent switches:
+
+  * ``telemetry`` turns on the **on-device taps**: a pure
+    metric-accumulator pytree threaded through the tier-3/4 fused
+    per-interval scan (per-round CC-MAB confidence widths and
+    exploration counts, per-ES budget utilization, Eq. 6 deadline-miss
+    and fault-event counts, update-delta norms, robust-aggregator
+    trim/clip counts), surfaced as ``RunResult.telemetry``. The taps
+    are strictly observer-only: they derive every number from values
+    the run already computes, draw nothing from the schedule, and leave
+    selections/utilities/explored bitwise unchanged (test-enforced).
+    Tiers 1-2 and the device-batched grid path run without taps and
+    report ``telemetry=None``.
+  * ``trace`` names a JSONL event-log path and turns on the **host
+    span tracer** (``repro.obs.trace``) for the run: spec resolution,
+    env realization, per-interval fused-block dispatch with
+    compile-cache hit/miss, checkpoint writes and carry-health events
+    all land in the log. ``perfetto`` additionally exports a
+    Chrome/Perfetto ``trace_event`` file when the trace closes, and
+    ``jax_profiler`` captures a ``jax.profiler.trace`` into that
+    directory for the run's duration (opt-in: the profile is large).
+
+Both default off; a default ``ObsSpec()`` is the seed behavior exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional
+
+
+@dataclass(frozen=True)
+class ObsSpec:
+    """Observability knobs for one run (all off by default)."""
+    telemetry: bool = False              # on-device metric taps
+    trace: Optional[str] = None          # JSONL span/event log path
+    perfetto: Optional[str] = None       # Chrome trace_event export path
+    jax_profiler: Optional[str] = None   # jax.profiler.trace directory
+
+    def __post_init__(self):
+        if self.perfetto is not None and self.trace is None:
+            raise ValueError("ObsSpec.perfetto requires ObsSpec.trace: "
+                             "the export is rendered from the JSONL log")
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.telemetry or self.trace or self.jax_profiler)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ObsSpec":
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"ObsSpec: unknown field(s) "
+                             f"{sorted(unknown)}; expected {sorted(names)}")
+        return cls(**dict(d))
+
+
+__all__ = ["ObsSpec"]

@@ -1,0 +1,218 @@
+"""On-device telemetry taps for the fused tiers (3/4).
+
+A tap is a *pure observer*: every number below is derived from values
+the fused round step already computes (the CC-MAB state at select time,
+the packed assignment, the Eq. 6 arrival masks, the slot deltas and
+effective weights) — no RNG draw, no extra schedule consumption, no
+feedback into the selection or the training math. Turning telemetry on
+therefore leaves selections/utilities/explored bitwise unchanged
+(test-enforced in ``tests/test_obs.py``).
+
+Two pytrees ride the scan:
+
+* ``TelemetryFrame`` — one record per round per batch element, stacked
+  by ``lax.scan`` into (T, B) ys and swapped to (B, T) series;
+* ``TelemetryAcc``  — running totals threaded through the scan carry
+  (and across eval-interval blocks via ``BlockOut.tele_acc``), so
+  whole-run counts accumulate on device without host round-trips.
+
+``collect``/``summarize`` shape the host-side result:
+``RunResult.telemetry = {"series": {field: (S, T)},
+"totals": {field: (S,)}, "summary": {scalars}}``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class TelemetryFrame(NamedTuple):
+    """Per-round observables, one (B,) float32 leaf per metric (B = the
+    fused batch axis: seeds)."""
+    ucb_width: jax.Array      # mean CC-MAB confidence width, eligible pairs
+    underexplored: jax.Array  # count of under-explored eligible pairs
+    budget_util: jax.Array    # spent cost / total per-round budget
+    selected: jax.Array       # clients selected this round
+    arrived: jax.Array        # Eq. 6: selected clients that met the deadline
+    deadline_miss: jax.Array  # Eq. 6: selected clients that missed it
+    delta_norm: jax.Array     # L2 norm over all arrived slot updates
+    agg_adjusted: jax.Array   # robust-aggregator trimmed/clipped slot count
+    corrupted: jax.Array      # fault-injected (corrupted) arrived slots
+
+
+class TelemetryAcc(NamedTuple):
+    """Running totals carried through the scan (all (B,) float32)."""
+    rounds: jax.Array
+    explored: jax.Array       # rounds with an exploration step
+    selected: jax.Array
+    arrived: jax.Array
+    deadline_miss: jax.Array
+    corrupted: jax.Array
+
+
+def acc_init(n: int) -> TelemetryAcc:
+    z = jnp.zeros((n,), jnp.float32)
+    return TelemetryAcc(*([z] * len(TelemetryAcc._fields)))
+
+
+def acc_update(acc: TelemetryAcc, frame: TelemetryFrame,
+               explored: jax.Array) -> TelemetryAcc:
+    return TelemetryAcc(
+        rounds=acc.rounds + 1.0,
+        explored=acc.explored + explored.astype(jnp.float32),
+        selected=acc.selected + frame.selected,
+        arrived=acc.arrived + frame.arrived,
+        deadline_miss=acc.deadline_miss + frame.deadline_miss,
+        corrupted=acc.corrupted + frame.corrupted)
+
+
+def aggregator_adjusted(aggregator: str, trim_frac: float, w: jax.Array,
+                        slot_norms: jax.Array) -> jax.Array:
+    """How many arrived slot updates the Eq. 3 robust rule discounted
+    this round, per batch element — mirroring ``repro.fed.robust``'s
+    rank arithmetic exactly (same ``k``/median-rank formulas over the
+    same ``w > 0`` validity), so the count names real trims/clips.
+
+    w: (B, M, slots) effective weights; slot_norms: (B, M, slots) L2
+    norms of the slot deltas (used by the ``clipped`` rule only).
+    """
+    valid = w > 0
+    c = jnp.sum(valid.astype(jnp.int32), axis=2)            # (B, M)
+    if aggregator == "mean":
+        return jnp.zeros(w.shape[0], jnp.float32)
+    if aggregator == "trimmed_mean":
+        k = jnp.where(c >= 3,
+                      jnp.minimum(jnp.maximum(
+                          1, jnp.floor(trim_frac * c).astype(jnp.int32)),
+                          (c - 1) // 2),
+                      0)
+        return jnp.sum(2 * k, axis=1).astype(jnp.float32)
+    if aggregator == "median":
+        # odd cohorts keep 1 order statistic, even keep 2
+        dropped = jnp.maximum(c - 2 + (c % 2), 0)
+        return jnp.sum(dropped, axis=1).astype(jnp.float32)
+    if aggregator == "clipped":
+        keyed = jnp.where(valid, slot_norms, jnp.inf)
+        s = jnp.sort(keyed, axis=2)
+        s = jnp.where(jnp.isfinite(s), s, 0.0)
+        cc = c[:, :, None]
+        lo = jnp.maximum((cc - 1) // 2, 0)
+        hi = jnp.maximum(cc // 2, 0)
+        med = 0.5 * (jnp.take_along_axis(s, lo, axis=2)
+                     + jnp.take_along_axis(s, hi, axis=2))  # (B, M, 1)
+        clipped = valid & (slot_norms > med[..., 0][..., None])
+        return jnp.sum(clipped, axis=(1, 2)).astype(jnp.float32)
+    raise ValueError(f"unknown aggregator {aggregator!r}")
+
+
+def round_frame(policy, pstate, rd, assign, arrived, valid, deltas, w,
+                budgets, spec, slot_c: Optional[jax.Array] = None
+                ) -> TelemetryFrame:
+    """Derive one round's TelemetryFrame from the fused step's existing
+    intermediates. ``pstate`` is the state *at select time* (pre-update),
+    so the policy tap sees the counts the solver saw.
+
+    assign (B, N); arrived/valid/w (B, M, slots); deltas pytree with
+    (B, M, slots, ...) leaves; budgets None (single-budget path: the
+    policy spec's scalar) or (B,) per-element scalars.
+    """
+    b = assign.shape[0]
+    m = w.shape[1]
+    zeros = jnp.zeros((b,), jnp.float32)
+
+    tap = jax.vmap(policy.telemetry_tap)(pstate, rd)
+    ucb_width = jnp.asarray(tap.get("ucb_width", zeros), jnp.float32)
+    under = jnp.asarray(tap.get("underexplored", zeros), jnp.float32)
+
+    sel_mask = assign >= 0                                   # (B, N)
+    selected = jnp.sum(sel_mask, axis=1).astype(jnp.float32)
+    costs = jnp.asarray(rd.costs, jnp.float32)
+    spent = jnp.sum(jnp.where(sel_mask, costs, 0.0), axis=1)
+    if budgets is None:
+        total = jnp.full((b,), float(policy.spec.budget) * m, jnp.float32)
+    else:
+        total = jnp.asarray(budgets, jnp.float32) * m
+    budget_util = spent / jnp.maximum(total, 1e-12)
+
+    v = valid > 0
+    a = (arrived > 0) & v
+    arrived_n = jnp.sum(a, axis=(1, 2)).astype(jnp.float32)
+    miss = jnp.sum(v & ~a, axis=(1, 2)).astype(jnp.float32)
+
+    slot_sq = zeros[:, None, None]                           # (B, 1, 1)
+    for d in jax.tree.leaves(deltas):
+        slot_sq = slot_sq + jnp.sum(
+            jnp.square(d.astype(jnp.float32)),
+            axis=tuple(range(3, d.ndim)))                    # (B, M, slots)
+    slot_norms = jnp.sqrt(slot_sq)
+    wmask = (w > 0).astype(jnp.float32)
+    delta_norm = jnp.sqrt(jnp.sum(slot_sq * wmask, axis=(1, 2)))
+
+    adjusted = aggregator_adjusted(spec.aggregator, float(spec.trim_frac),
+                                   w, slot_norms)
+    corrupted = (jnp.sum(slot_c & v, axis=(1, 2)).astype(jnp.float32)
+                 if slot_c is not None else zeros)
+
+    return TelemetryFrame(ucb_width=ucb_width, underexplored=under,
+                          budget_util=budget_util, selected=selected,
+                          arrived=arrived_n, deadline_miss=miss,
+                          delta_norm=delta_norm, agg_adjusted=adjusted,
+                          corrupted=corrupted)
+
+
+# -- host-side collection ------------------------------------------------------
+
+
+def _as_dict(t, fields) -> Dict[str, np.ndarray]:
+    # BlockOut carries NamedTuples; checkpoint-restored outs carry the
+    # same leaves as plain dicts — accept both
+    if isinstance(t, dict):
+        return {k: np.asarray(t[k]) for k in fields}
+    return {k: np.asarray(getattr(t, k)) for k in fields}
+
+
+def collect(frames: List[object], accs: List[object]) -> Optional[dict]:
+    """Host-side assembly of ``RunResult.telemetry``: concatenate the
+    per-block (S, T_b) frame stacks into full-horizon series and sum the
+    per-block carried totals (each block's acc starts at zero)."""
+    if not frames or any(f is None for f in frames):
+        return None
+    fd = [_as_dict(f, TelemetryFrame._fields) for f in frames]
+    series = {k: np.concatenate([d[k] for d in fd], axis=1)
+              for k in TelemetryFrame._fields}
+    totals: Dict[str, np.ndarray] = {}
+    if accs and all(a is not None for a in accs):
+        ad = [_as_dict(a, TelemetryAcc._fields) for a in accs]
+        totals = {k: np.sum([d[k] for d in ad], axis=0)
+                  for k in TelemetryAcc._fields}
+    return {"series": series, "totals": totals,
+            "summary": summarize(series, totals)}
+
+
+def summarize(series: Dict[str, np.ndarray],
+              totals: Dict[str, np.ndarray]) -> Dict[str, float]:
+    """Seed-averaged scalars for ledger rows and the report CLI."""
+    out: Dict[str, float] = {}
+    rounds = float(np.mean(totals["rounds"])) if totals else 0.0
+    out["rounds"] = rounds
+    if rounds > 0:
+        out["explore_rate"] = float(np.mean(totals["explored"])) / rounds
+        out["selected_per_round"] = (float(np.mean(totals["selected"]))
+                                     / rounds)
+        out["participants_per_round"] = (float(np.mean(totals["arrived"]))
+                                         / rounds)
+        sel = float(np.mean(totals["selected"]))
+        out["deadline_miss_rate"] = (
+            float(np.mean(totals["deadline_miss"])) / sel if sel > 0
+            else 0.0)
+        out["corrupted_total"] = float(np.mean(totals["corrupted"]))
+    for f in ("ucb_width", "budget_util", "delta_norm", "agg_adjusted"):
+        out[f"mean_{f}"] = float(np.mean(series[f]))
+    return out
+
+
+__all__ = ["TelemetryFrame", "TelemetryAcc", "acc_init", "acc_update",
+           "aggregator_adjusted", "round_frame", "collect", "summarize"]

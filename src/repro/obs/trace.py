@@ -1,0 +1,234 @@
+"""Host span tracer: a JSONL event log for the run lifecycle.
+
+The tracer is deliberately tiny — no external deps, one file handle, a
+thread lock — because it sits on the hot dispatch path of the fused
+engine. Each record is one JSON object per line:
+
+    {"ev": "span",  "name": "fused_block", "ts": ..., "dur_us": ...,
+     "pid": ..., "tid": ..., ...attrs}
+    {"ev": "event", "name": "health",      "ts": ..., ...attrs}
+
+``ts`` is microseconds from ``time.perf_counter_ns`` (monotonic; only
+deltas within one log are meaningful), plus a ``wall`` ISO timestamp on
+the header record for humans. ``export_perfetto`` renders the log as a
+Chrome ``trace_event`` JSON that chrome://tracing and ui.perfetto.dev
+load directly.
+
+Activation is explicit (``configure``/``trace_to``/``run_tracing``) or
+via environment for zero-code capture of existing entry points:
+
+    REPRO_TRACE=run.jsonl REPRO_TRACE_PERFETTO=run.trace.json \
+        python benchmarks/run.py ...
+
+Instrumentation sites call ``span``/``event`` unconditionally; when no
+tracer is active they cost one attribute check and no allocation.
+"""
+from __future__ import annotations
+
+import atexit
+import contextlib
+import datetime
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, Iterator, Optional
+
+_SCHEMA = "repro-trace/v1"
+
+
+def now_us() -> int:
+    """Monotonic microsecond clock (the timestamps in trace records)."""
+    return time.perf_counter_ns() // 1000
+
+
+_now_us = now_us
+
+
+class Tracer:
+    """Appends span/event records to a JSONL file, thread-safely."""
+
+    def __init__(self, path: str, perfetto: Optional[str] = None):
+        self.path = path
+        self.perfetto = perfetto
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+        self._pid = os.getpid()
+        self._write({"ev": "begin", "name": _SCHEMA, "ts": _now_us(),
+                     "wall": datetime.datetime.now(datetime.timezone.utc)
+                     .isoformat()})
+
+    def _write(self, rec: Dict[str, Any]) -> None:
+        line = json.dumps(rec, default=_jsonable)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def event(self, name: str, **attrs: Any) -> None:
+        self._write({"ev": "event", "name": name, "ts": _now_us(),
+                     "pid": self._pid,
+                     "tid": threading.get_ident() & 0xFFFF, **attrs})
+
+    def span_record(self, name: str, ts: int, dur_us: int,
+                    attrs: Dict[str, Any]) -> None:
+        self._write({"ev": "span", "name": name, "ts": ts,
+                     "dur_us": dur_us, "pid": self._pid,
+                     "tid": threading.get_ident() & 0xFFFF, **attrs})
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f.closed:
+                return
+            self._f.close()
+        if self.perfetto:
+            export_perfetto(self.path, self.perfetto)
+
+
+def _jsonable(x: Any) -> Any:
+    # numpy / jax scalars and arrays reach the tracer from attrs; keep
+    # the hot path free of imports by duck-typing them here.
+    if hasattr(x, "item") and getattr(x, "ndim", None) in (0, None):
+        return x.item()
+    if hasattr(x, "tolist"):
+        return x.tolist()
+    return str(x)
+
+
+# -- global activation -------------------------------------------------------
+
+_TRACER: Optional[Tracer] = None
+_ENV_CHECKED = False
+
+
+def active() -> Optional[Tracer]:
+    """The current tracer, if any. First call honors REPRO_TRACE."""
+    global _TRACER, _ENV_CHECKED
+    if _TRACER is None and not _ENV_CHECKED:
+        _ENV_CHECKED = True
+        path = os.environ.get("REPRO_TRACE")
+        if path:
+            _TRACER = Tracer(path,
+                             os.environ.get("REPRO_TRACE_PERFETTO") or None)
+            atexit.register(_close_global)
+    return _TRACER
+
+
+def _close_global() -> None:
+    global _TRACER
+    if _TRACER is not None:
+        _TRACER.close()
+        _TRACER = None
+
+
+def configure(path: Optional[str],
+              perfetto: Optional[str] = None) -> Optional[Tracer]:
+    """Install (or, with ``path=None``, remove) the global tracer."""
+    global _TRACER
+    _close_global()
+    if path is not None:
+        _TRACER = Tracer(path, perfetto)
+    return _TRACER
+
+
+@contextlib.contextmanager
+def trace_to(path: str, perfetto: Optional[str] = None) -> Iterator[Tracer]:
+    """Trace the enclosed block to ``path``, restoring the previous
+    tracer afterwards."""
+    global _TRACER
+    prev = _TRACER
+    _TRACER = Tracer(path, perfetto)
+    try:
+        yield _TRACER
+    finally:
+        _TRACER.close()
+        _TRACER = prev
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs: Any) -> Iterator[Dict[str, Any]]:
+    """Time the enclosed block. Yields the attrs dict so the body can
+    attach results (e.g. compile hit/miss) before the record is
+    written. No-op (and no allocation beyond the dict) when inactive."""
+    tr = active()
+    if tr is None:
+        yield attrs
+        return
+    t0 = _now_us()
+    try:
+        yield attrs
+    finally:
+        tr.span_record(name, t0, _now_us() - t0, attrs)
+
+
+def event(name: str, **attrs: Any) -> None:
+    """Emit an instant event. No-op when no tracer is active."""
+    tr = active()
+    if tr is not None:
+        tr.event(name, **attrs)
+
+
+@contextlib.contextmanager
+def run_tracing(obs_spec) -> Iterator[None]:
+    """Scope a run's tracing to its ObsSpec: JSONL trace, optional
+    Perfetto export on close, optional jax.profiler capture."""
+    prof = None
+    if getattr(obs_spec, "jax_profiler", None):
+        import jax
+        prof = jax.profiler.trace(obs_spec.jax_profiler)
+        prof.__enter__()
+    try:
+        if getattr(obs_spec, "trace", None):
+            with trace_to(obs_spec.trace, obs_spec.perfetto):
+                yield
+        else:
+            yield
+    finally:
+        if prof is not None:
+            prof.__exit__(None, None, None)
+
+
+# -- Perfetto / Chrome trace_event export -------------------------------------
+
+
+def export_perfetto(jsonl_path: str, out_path: str) -> int:
+    """Render a repro JSONL trace as Chrome ``trace_event`` JSON.
+    Returns the number of trace events written."""
+    events = []
+    with open(jsonl_path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(
+                    f"{jsonl_path}:{lineno}: not a repro JSONL trace "
+                    f"(expected one JSON object per line: {e})") from e
+            if not isinstance(rec, dict):
+                raise ValueError(
+                    f"{jsonl_path}:{lineno}: not a repro JSONL trace "
+                    f"(line decodes to {type(rec).__name__})")
+            ev = rec.get("ev")
+            common = {"name": rec.get("name", "?"),
+                      "pid": rec.get("pid", 0), "tid": rec.get("tid", 0),
+                      "ts": rec.get("ts", 0)}
+            args = {k: v for k, v in rec.items()
+                    if k not in ("ev", "name", "ts", "dur_us", "pid", "tid")}
+            if ev == "span":
+                events.append({**common, "ph": "X",
+                               "dur": rec.get("dur_us", 0), "args": args})
+            elif ev == "event":
+                events.append({**common, "ph": "i", "s": "t", "args": args})
+    d = os.path.dirname(os.path.abspath(out_path))
+    os.makedirs(d, exist_ok=True)
+    with open(out_path, "w", encoding="utf-8") as f:
+        json.dump({"traceEvents": events,
+                   "displayTimeUnit": "ms"}, f)
+    return len(events)
+
+
+__all__ = ["Tracer", "active", "configure", "trace_to", "span", "event",
+           "run_tracing", "export_perfetto", "now_us"]

@@ -129,6 +129,15 @@ class FunctionalPolicy:
     def update(self, state, rd, assign, aux):
         return state
 
+    def telemetry_tap(self, state, rd) -> dict:
+        """Pure observability read on the pre-update state (repro.obs):
+        a dict of scalar jnp metrics (e.g. ``ucb_width``,
+        ``underexplored``) derived without consuming any randomness, so
+        enabling telemetry can never perturb select/update. The base
+        policy reports nothing."""
+        del state, rd
+        return {}
+
 
 # Compiled per *policy value* (frozen dataclasses hash by field values), so
 # every adapter / simulation over an equivalent policy shares one jit cache

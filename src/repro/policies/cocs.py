@@ -123,6 +123,29 @@ class COCS(FunctionalPolicy):
                                    tile=self.kernel_tile)
         return assign, {"explored": under.any()}
 
+    def telemetry_tap(self, state: COCSState, rd) -> dict:
+        """CC-MAB confidence profile at select time (repro.obs): the
+        eligible-pair mean of the UCB width the solver saw — the exact
+        ``bonus_scale * sqrt(2 log t / count)`` term of
+        ``select_with_params``, optimistic 1.0 for unvisited cubes — and
+        the count of under-explored eligible pairs (the Theorem-2
+        ``k(t)`` threshold). Pure gathers on existing state: no draw,
+        no state change."""
+        z, h = self._params()
+        cubes = self._cubes(rd.contexts, h)
+        counts = self._gather(state.counters, cubes)           # (N, M)
+        eligible = jnp.asarray(rd.eligible, bool)
+        t1 = jnp.asarray(rd.t, jnp.int32) + 1
+        tf = jnp.maximum(t1.astype(jnp.float32), 2.0)
+        bonus = self.bonus_scale * jnp.sqrt(
+            2.0 * jnp.log(tf) / jnp.maximum(counts, 1))
+        width = jnp.where(counts == 0, 1.0, jnp.minimum(bonus, 1.0))
+        n_el = jnp.maximum(jnp.sum(eligible), 1)
+        under = eligible & (counts <= self.k_of_t(t1, z))
+        return {"ucb_width": jnp.sum(jnp.where(eligible, width, 0.0))
+                / n_el,
+                "underexplored": jnp.sum(under).astype(jnp.float32)}
+
     def update(self, state: COCSState, rd, assign, aux=None) -> COCSState:
         _, h = self._params()
         return self.update_with_params(state, rd, assign, h, aux)

@@ -14,6 +14,12 @@ baseline and skips cleanly when the baseline has no entries for the
 suite label — the same guard semantics as
 ``benchmarks/check_regression.py``, generalized from one timing entry
 to every quality record a suite produced.
+
+All subcommands take the shared ``-v``/``--quiet`` logging flags
+(``repro.obs.logging_setup``); default stdout stays byte-identical to
+the historical ``print`` output. ``run`` additionally emits live
+per-cell progress lines with an ETA on **stderr** (the
+``repro.progress`` logger), so piped stdout never sees them.
 """
 from __future__ import annotations
 
@@ -21,20 +27,24 @@ import argparse
 import sys
 from typing import Optional, Sequence
 
+from repro.obs.logging_setup import (add_logging_args, get_logger,
+                                     setup_from_args)
+
 
 def _cmd_list(_args) -> int:
     from repro.trials import suites  # noqa: F401 — registration
     from repro.trials.suite import SUITES
+    log = get_logger("repro.trials")
     for name in sorted(SUITES):
         suite = SUITES[name]
         n_cells = len(suite.policies) * max(
             1, len(tuple(suite.coords())))
-        print(f"{name}: {n_cells} cells "
-              f"({len(suite.policies)} policies"
-              + (f" x {dict(suite.axes)}" if suite.axes else "")
-              + f"), oracle={suite.oracle}")
+        log.info(f"{name}: {n_cells} cells "
+                 f"({len(suite.policies)} policies"
+                 + (f" x {dict(suite.axes)}" if suite.axes else "")
+                 + f"), oracle={suite.oracle}")
         if suite.description:
-            print(f"    {suite.description}")
+            log.info(f"    {suite.description}")
     return 0
 
 
@@ -42,10 +52,11 @@ def _cmd_run(args) -> int:
     from repro.trials.report import suite_report
     from repro.trials.runner import run_suite
 
+    log = get_logger("repro.trials")
     result = run_suite(args.suite, smoke=args.smoke, ledger=args.ledger,
                        resume=args.resume)
     if args.report:
-        print(suite_report(result))
+        log.info(suite_report(result))
     else:
         for rec in result.records:
             us = "-" if rec.us_per_call is None \
@@ -54,17 +65,18 @@ def _cmd_run(args) -> int:
                 else f" regret={rec.regret:.1f}"
             acc = "" if rec.final_acc is None \
                 else f" final_acc={rec.final_acc:.3f}"
-            print(f"{rec.name}: cum_utility={rec.cum_utility:.1f}"
-                  f"{extra}{acc} [{us}]")
+            log.info(f"{rec.name}: cum_utility={rec.cum_utility:.1f}"
+                     f"{extra}{acc} [{us}]")
     if args.ledger:
-        print(f"ledger: appended {len(result.records)} records to "
-              f"{args.ledger}")
+        log.info(f"ledger: appended {len(result.records)} records to "
+                 f"{args.ledger}")
     return 0
 
 
 def _cmd_check(args) -> int:
     from repro.trials.ledger import check_suite, load_entries
 
+    log = get_logger("repro.trials")
     baseline = load_entries(args.baseline)
     current = load_entries(args.current)
     failures = 0
@@ -74,7 +86,7 @@ def _cmd_check(args) -> int:
             max_time_ratio=args.max_time_ratio,
             time_reference=args.time_reference)
         for line in report:
-            print(line)
+            (log.warning if line.endswith("FAIL") else log.info)(line)
         failures += n
     return 1 if failures else 0
 
@@ -83,9 +95,10 @@ def _cmd_report(args) -> int:
     from repro.trials.ledger import load_entries
     from repro.trials.report import ledger_report
 
+    log = get_logger("repro.trials")
     entries = load_entries(args.ledger)
     for label in args.suite:
-        print(ledger_report(entries, label))
+        log.info(ledger_report(entries, label))
     return 0
 
 
@@ -134,7 +147,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p_rep.add_argument("--suite", action="append", required=True)
     p_rep.set_defaults(fn=_cmd_report)
 
+    add_logging_args(ap)
     args = ap.parse_args(argv)
+    setup_from_args(args)
     return args.fn(args)
 
 

@@ -44,6 +44,11 @@ class TrialRecord:
     batched_axes: Tuple[str, ...] = ()
     draw_schedule: str = ""
     provenance: Tuple[Tuple[str, Any], ...] = ()
+    # scalar on-device telemetry summary (repro.obs.telemetry) when the
+    # cell ran with ObsSpec.telemetry on; rides in the ledger entry as a
+    # top-level key, NOT under ``metrics`` — observability numbers are
+    # never part of the committed quality gate
+    telemetry: Optional[Dict[str, float]] = None
 
     @property
     def cell_id(self) -> str:
@@ -76,7 +81,7 @@ class TrialRecord:
             metrics["final_acc"] = round(self.final_acc, 5)
             if self.acc_curve is not None:
                 metrics["acc_curve"] = [round(a, 4) for a in self.acc_curve]
-        return {
+        entry = {
             "name": self.name,
             "us_per_call": (None if self.us_per_call is None
                             else float(self.us_per_call)),
@@ -88,6 +93,11 @@ class TrialRecord:
             "draw_schedule": self.draw_schedule,
             "provenance": dict(self.provenance),
         }
+        if self.telemetry is not None:
+            entry["telemetry"] = {k: (round(float(v), 6)
+                                      if isinstance(v, float) else v)
+                                  for k, v in self.telemetry.items()}
+        return entry
 
 
 def record_from_entry(entry: Mapping[str, Any]) -> TrialRecord:
@@ -118,7 +128,9 @@ def record_from_entry(entry: Mapping[str, Any]) -> TrialRecord:
                      else float(entry["us_per_call"])),
         tier=int((entry.get("provenance") or {}).get("tier", 0)),
         draw_schedule=str(entry.get("draw_schedule", "")),
-        provenance=tuple((entry.get("provenance") or {}).items()))
+        provenance=tuple((entry.get("provenance") or {}).items()),
+        telemetry=(dict(entry["telemetry"])
+                   if entry.get("telemetry") else None))
 
 
 @dataclass
@@ -203,6 +215,8 @@ def score_cells(suite_label: str, oracle: str,
             provenance=provenance + (
                 ("spec", res.spec.to_dict()), ("tier", int(res.tier)),
                 ("env_backend", res.env_backend)),
+            telemetry=(res.telemetry["summary"]
+                       if getattr(res, "telemetry", None) else None),
         ))
     return records
 

@@ -97,6 +97,8 @@ def _run_cells(suite: TrialSuite, smoke: bool, data,
     import itertools
 
     from repro import api
+    from repro.obs import trace as obs_trace
+    from repro.obs.logging_setup import get_logger
 
     skip = skip or set()
     base = suite.resolved_base(smoke)
@@ -108,6 +110,25 @@ def _run_cells(suite: TrialSuite, smoke: bool, data,
         d = dict(coord_pairs)
         return tuple((a, d[a]) for a in axis_order)
 
+    # live per-dispatch progress with ETA on stderr (repro.progress):
+    # one tick per dispatch group — batched groups count once, matching
+    # the one-dispatch-per-group timing contract
+    progress = get_logger("repro.progress")
+    n_seq = 1
+    for _, v in sequential:
+        n_seq *= max(1, len(v))
+    total = max(1, len(suite.policies) * n_seq)
+    done_n = 0
+    t_start = time.perf_counter()
+
+    def tick(label: str, note: str = "") -> None:
+        nonlocal done_n
+        done_n += 1
+        elapsed = time.perf_counter() - t_start
+        eta = elapsed / done_n * (total - done_n)
+        progress.info(f"[{suite.label(smoke)}] {done_n}/{total} {label}"
+                      f"{note} ({elapsed:.1f}s elapsed, eta {eta:.0f}s)")
+
     cells: Dict[Tuple[str, Tuple[Tuple[str, Any], ...]], ScoredCell] = {}
     for display, pspec in suite.policies:
         spec0 = replace(base, policy=pspec)
@@ -116,6 +137,7 @@ def _run_cells(suite: TrialSuite, smoke: bool, data,
             spec1 = spec0
             for axis, value in seq_coord:
                 spec1 = GRID_AXES[axis][1](spec1, value)
+            label = display + "".join(f" {a}={v}" for a, v in seq_coord)
             if batchable:
                 names = [a for a, _ in batchable]
                 group_coords = [
@@ -123,10 +145,14 @@ def _run_cells(suite: TrialSuite, smoke: bool, data,
                     for combo in itertools.product(
                         *(v for _, v in batchable))]
                 if all((display, c) in skip for c in group_coords):
+                    tick(label, " skipped (resume)")
                     continue
                 grid = spec1.grid(**{a: list(v) for a, v in batchable})
                 t0 = time.perf_counter()
-                gres = api.run(grid, data=data)
+                with obs_trace.span("trials.cell", policy=display,
+                                    cells=len(group_coords),
+                                    batched=names):
+                    gres = api.run(grid, data=data)
                 us = (time.perf_counter() - t0) * 1e6 / len(gres.results)
                 names = [a for a, _ in batchable]
                 for combo, res in zip(grid.coords(), gres.results):
@@ -134,14 +160,19 @@ def _run_cells(suite: TrialSuite, smoke: bool, data,
                     cells[(display, coord)] = ScoredCell(
                         result=res, us=us,
                         batched_axes=tuple(res.batched_axes))
+                tick(label, f" [{len(group_coords)} cells batched]")
             else:
                 if (display, canonical(seq_coord)) in skip:
+                    tick(label, " skipped (resume)")
                     continue
                 t0 = time.perf_counter()
-                res = api.run(spec1, data=data)
+                with obs_trace.span("trials.cell", policy=display,
+                                    cells=1):
+                    res = api.run(spec1, data=data)
                 us = (time.perf_counter() - t0) * 1e6
                 cells[(display, canonical(seq_coord))] = ScoredCell(
                     result=res, us=us)
+                tick(label)
     return cells
 
 
