@@ -148,4 +148,28 @@ def run() -> List[Row]:
         f"N={env1k.spec.num_clients};horizon={horizon};"
         f"mean_participants={parts:.0f};"
         f"final_acc={float(res.final_accuracy()[0]):.3f}"))
+
+    # paper-scale horizon: the full 200-round metropolis-1k cohort
+    # through the fused device-env tier (analytic Eq. 6 true-p, one
+    # compiled block) — the configuration the sharded mesh engine
+    # (repro.mesh) inherits per shard. CI normalizes this row by the
+    # short env_fused_device_1k row above so runner speed cancels;
+    # per-round cost is the stable quantity.
+    horizon_p = 200
+    spec_paper = api.ExperimentSpec(
+        policy=api.PolicySpec("cocs"),
+        env=api.EnvSpec("metropolis-1k", true_p="analytic"),
+        train=api.TrainSpec(), eval=api.EvalSpec(eval_every=horizon_p),
+        horizon=horizon_p, seeds=(0,))
+    res_p = api.run(spec_paper, data=data)    # warm (compile)
+    assert res_p.tier == 4 and res_p.env_backend == "device"
+    t0 = time.perf_counter()
+    res_p = api.run(spec_paper, data=data)
+    us_p = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        "env_fused_device_1k_paper", us_p,
+        f"N={env1k.spec.num_clients};horizon={horizon_p};"
+        f"us_per_round={us_p / horizon_p:.0f};"
+        f"mean_participants={float(np.mean(res_p.participants)):.0f};"
+        f"final_acc={float(res_p.final_accuracy()[0]):.3f}"))
     return rows

@@ -34,12 +34,12 @@ from repro.api.grid import GridResult, run_grid
 from repro.api.run import (RunResult, build_env, build_policy,
                            resolve_config, run, select_tier)
 from repro.api.spec import (GRID_AXES, EnvSpec, EvalSpec, ExperimentGrid,
-                            ExperimentSpec, PolicySpec, TrainSpec,
-                            env_spec_from_config)
+                            ExperimentSpec, PolicySpec, ShardSpec,
+                            TrainSpec, env_spec_from_config)
 
 __all__ = [
     "EnvSpec", "EvalSpec", "ExperimentGrid", "ExperimentSpec", "GRID_AXES",
-    "GridResult", "PolicySpec", "RunResult", "TrainSpec", "build_env",
-    "build_policy", "env_spec_from_config", "resolve_config", "run",
-    "run_grid", "select_tier",
+    "GridResult", "PolicySpec", "RunResult", "ShardSpec", "TrainSpec",
+    "build_env", "build_policy", "env_spec_from_config", "resolve_config",
+    "run", "run_grid", "select_tier",
 ]

@@ -201,6 +201,15 @@ def _run_spec(spec: ExperimentSpec, data):
     seeds = [int(s) for s in spec.seeds]
     pol_seeds = [s + spec.policy.seed_offset for s in seeds]
 
+    shard = spec.shard
+    if (shard is not None and (shard.clients > 1 or shard.seeds > 1)
+            and tier != 4):
+        raise ValueError(
+            f"ShardSpec(clients={shard.clients}, seeds={shard.seeds}) "
+            "needs the device-env fused tier (tier 4): a device "
+            "backend env and a jax-capable policy; this spec "
+            f"resolved to tier {tier}")
+
     if tier == 1:
         with obs_trace.span("run.dispatch", tier=tier):
             out = _run_bandit(policy, env, seeds, pol_seeds, spec.horizon,
@@ -209,8 +218,37 @@ def _run_spec(spec: ExperimentSpec, data):
         return RunResult(spec=spec, tier=tier, env_backend=backend,
                          draw_schedule=SCHEDULE_ID, **out)
 
-    from repro.experiment.sweep import sweep_experiments
     name = spec.policy.name
+    if shard is not None and (shard.clients > 1 or shard.seeds > 1):
+        from repro.mesh.runner import sweep_sharded
+        with obs_trace.span("run.dispatch", tier=tier, policy=name,
+                            mesh=f"{shard.seeds}x{shard.clients}"):
+            res = sweep_sharded(
+                {name: policy}, env, seeds, spec.horizon, shard=shard,
+                model_kind=spec.train.model_kind,
+                batch_size=spec.train.batch_size,
+                batches_per_epoch=spec.train.batches_per_epoch,
+                eval_every=spec.eval.eval_every, data=data,
+                slots_per_es=spec.train.slots_per_es,
+                policy_seed_offset=spec.policy.seed_offset,
+                aggregator=spec.train.aggregator,
+                trim_frac=spec.train.trim_frac,
+                telemetry=spec.obs.telemetry)
+        telemetry = res.telemetry.get(name)
+        if telemetry is not None and obs_trace.active() is not None:
+            _emit_telemetry_event(name, telemetry)
+        return RunResult(
+            spec=spec, tier=tier, env_backend=backend,
+            draw_schedule=SCHEDULE_ID,
+            selections=res.selections[name],
+            utilities=res.utilities[name],
+            participants=res.participants[name],
+            explored=res.explored[name],
+            eval_rounds=np.asarray(res.eval_rounds),
+            accuracy=res.accuracy[name], loss=res.loss[name],
+            health=res.health.get(name), telemetry=telemetry)
+
+    from repro.experiment.sweep import sweep_experiments
     with obs_trace.span("run.dispatch", tier=tier, policy=name):
         res = sweep_experiments(
             {name: policy}, env, seeds, spec.horizon,

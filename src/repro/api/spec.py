@@ -187,6 +187,45 @@ class TrainSpec:
 
 
 @dataclass(frozen=True)
+class ShardSpec:
+    """Cohort-mesh layout for the client-sharded tier-4 engine
+    (``repro.mesh``): how many ways to split the client axis and the
+    seed axis over the device mesh.
+
+    ``clients > 1`` activates the sharded engine — the env, the
+    hierarchical selection merge and the packing all run on
+    ``(N / clients,)``-sized shards, bitwise-reproducing the dense
+    tier-4 block (device envs + jax policies only). ``clients = 1``
+    leaves the spec inert (the dense tiers run exactly as without it).
+    ``seeds`` additionally splits the seed axis (must divide
+    ``len(spec.seeds)``); the mesh needs ``clients * seeds`` visible
+    devices — on CPU, export ``XLA_FLAGS=
+    --xla_force_host_platform_device_count=<n>`` before importing jax.
+    """
+    clients: int = 1
+    seeds: int = 1
+
+    def __post_init__(self):
+        if self.clients < 1 or self.seeds < 1:
+            raise ValueError("ShardSpec axes must be >= 1, got "
+                             f"clients={self.clients} seeds={self.seeds}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _spec_dict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ShardSpec":
+        # bypass _from_dict's seeds-as-tuple coercion: here ``seeds``
+        # is the shard count, not the experiment seed list
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise ValueError(f"ShardSpec: unknown field(s) "
+                             f"{sorted(unknown)}; expected {sorted(names)}")
+        return cls(**{k: int(v) for k, v in d.items()})
+
+
+@dataclass(frozen=True)
 class EvalSpec:
     """Test-set evaluation cadence (one fused eval per ``eval_every``
     training rounds, plus one after the final round) — plus the
@@ -231,6 +270,7 @@ class ExperimentSpec:
     horizon: int = 200
     seeds: Tuple[int, ...] = (0,)
     shard_seeds: Optional[bool] = None
+    shard: Optional[ShardSpec] = None
     obs: ObsSpec = field(default_factory=ObsSpec)
 
     def __post_init__(self):
@@ -249,6 +289,11 @@ class ExperimentSpec:
             raise ValueError(
                 f"unknown aggregator {self.train.aggregator!r}; "
                 f"available: {AGGREGATORS}")
+        if self.shard is not None and self.shard.seeds > 1 \
+                and len(self.seeds) % self.shard.seeds != 0:
+            raise ValueError(
+                f"ShardSpec.seeds={self.shard.seeds} must divide the "
+                f"{len(self.seeds)} experiment seeds")
 
     # -- serialization -----------------------------------------------------
 
@@ -261,6 +306,7 @@ class ExperimentSpec:
                                           ("env", EnvSpec),
                                           ("train", TrainSpec),
                                           ("eval", EvalSpec),
+                                          ("shard", ShardSpec),
                                           ("obs", ObsSpec)))
 
     def to_json(self, **kw) -> str:

@@ -59,6 +59,25 @@ BURSTY_1K = HFLExperimentConfig(
     budget=8.0,
 )
 
+# Metropolis-scale cohorts for the client-sharded mesh engine
+# (``repro.mesh``): 10^5-10^6 clients split over the ("clients",) mesh
+# axis. Budgets keep per-ES admissions bounded — the slot capacity, not
+# N, sizes the training tensors — and the client count divides the
+# power-of-two shard counts the mesh uses (8, 16, ...).
+METROPOLIS_100K = HFLExperimentConfig(
+    name="mnist-metropolis-100k",
+    num_clients=100_000,
+    num_edge_servers=32,
+    budget=16.0,
+)
+
+METROPOLIS_1M = HFLExperimentConfig(
+    name="mnist-metropolis-1m",
+    num_clients=1_000_000,
+    num_edge_servers=64,
+    budget=16.0,
+)
+
 CIFAR10_NONCONVEX = HFLExperimentConfig(
     name="cifar10-nonconvex",
     update_bits=18.7e6,
@@ -77,7 +96,8 @@ CIFAR10_NONCONVEX = HFLExperimentConfig(
 # named registry: what lets a serialized ExperimentSpec (repro.api) refer
 # to an experiment configuration by string and round-trip through JSON
 CONFIGS = {c.name: c for c in (MNIST_CONVEX, CIFAR10_NONCONVEX,
-                               METROPOLIS_1K, BURSTY_1K)}
+                               METROPOLIS_1K, BURSTY_1K,
+                               METROPOLIS_100K, METROPOLIS_1M)}
 
 
 def get_config(name: str) -> HFLExperimentConfig:

@@ -86,7 +86,11 @@ class FederatedDataset:
                   labels_per_client: int = 2, seed: int = 0
                   ) -> "FederatedDataset":
         shapes = {"mnist": (784,), "cifar": (32, 32, 3),
-                  "cifar_small": (16, 16, 3)}
+                  "cifar_small": (16, 16, 3),
+                  # metropolis-scale cohorts: 16-d features keep the
+                  # stacked (N, L, 16) client tensor ~100 MB at N=10^5
+                  # (the mnist shape would need terabytes)
+                  "tiny": (16,)}
         shape = shapes[kind]
         total = num_clients * samples_per_client + test_samples
         x, y = make_synthetic_classification(total, shape=shape, seed=seed)

@@ -22,6 +22,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.policies.solvers import feasible_cohort_bound
 
@@ -67,4 +68,55 @@ def pack_assignment(assign: jax.Array, outcomes: jax.Array,
     valid = scatter(0.0, jnp.ones((n,), jnp.float32), jnp.float32)
     arrived = scatter(0.0, outcomes[ii, j], jnp.float32)
     tau = scatter(jnp.inf, latency[ii, j], jnp.float32)
+    return client_idx, valid, arrived, tau
+
+
+def pack_assignment_sharded(assign: jax.Array, outcomes: jax.Array,
+                            latency: jax.Array, num_es: int, slots: int,
+                            axis_name: str, lo
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                       jax.Array]:
+    """``pack_assignment`` for a client-sharded assignment (shard_map).
+
+    assign/outcomes/latency carry this shard's (n_local, ...) rows of
+    the global client axis (rows ``lo .. lo + n_local``); each shard
+    scatters its rows at global slots — its local per-ES rank plus the
+    exclusive prefix of earlier shards' per-ES counts (shards own
+    contiguous client blocks, so shard-major + local-ascending is
+    exactly the dense ascending-client order) — and a ``psum`` over
+    ``axis_name`` assembles the replicated (M, S) arrays. Exactly one
+    shard contributes each realized slot, the rest contribute the fill,
+    so the result matches the dense pack bitwise; ``client_idx``
+    carries *global* client ids (row gathers against client-sharded
+    data resolve ownership with ``lo``).
+    """
+    n_local = assign.shape[0]
+    assign = assign.astype(jnp.int32)
+    onehot = assign[:, None] == jnp.arange(num_es, dtype=jnp.int32)[None, :]
+    rank = jnp.cumsum(onehot, axis=0) - 1                   # (n_local, M)
+    counts = jnp.sum(onehot, axis=0)                        # (M,)
+    all_counts = lax.all_gather(counts, axis_name)          # (shards, M)
+    before = (jnp.cumsum(all_counts, axis=0)
+              - all_counts)[lax.axis_index(axis_name)]      # (M,)
+    ii = jnp.arange(n_local)
+    j = jnp.clip(assign, 0, num_es - 1)
+    slot = rank[ii, j] + before[j]
+    ok = (assign >= 0) & (slot < slots)
+    row = jnp.where(ok, j, num_es)
+    col = jnp.where(ok, slot, slots)
+
+    def scatter(vals, dtype):
+        buf = jnp.zeros((num_es + 1, slots + 1), dtype)
+        return lax.psum(buf.at[row, col].set(
+            vals.astype(dtype), mode="drop")[:num_es, :slots], axis_name)
+
+    client_idx = scatter(jnp.asarray(lo, jnp.int32) + ii, jnp.int32)
+    valid = scatter(jnp.ones((n_local,), jnp.float32), jnp.float32)
+    arrived = scatter(outcomes[ii, j], jnp.float32)
+    # the dense pack fills unrealized tau slots with +inf, which a sum
+    # cannot carry; scatter 0-filled, then restore inf where no shard
+    # contributed (realized taus may themselves be +inf — dropout faults
+    # — and inf + 0 sums exactly)
+    tau = scatter(latency[ii, j], jnp.float32)
+    tau = jnp.where(valid > 0, tau, jnp.inf)
     return client_idx, valid, arrived, tau

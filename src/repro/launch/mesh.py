@@ -19,6 +19,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_cohort_mesh(seed_shards: int = 1, client_shards: int = 1):
+    """The cohort-engine mesh: ``(seed_shards, client_shards)`` over
+    ``("seed", "clients")``. The "seed" axis is the existing independent
+    seed-sweep parallelism (``experiment.sweep``); "clients" is the new
+    client-population axis the sharded tier-4 engine (``repro.mesh``)
+    partitions statics, positions, draws and bandit state over. On CPU
+    runs, force a host mesh via ``XLA_FLAGS
+    --xla_force_host_platform_device_count=<n>`` before importing jax."""
+    return jax.make_mesh((seed_shards, client_shards), ("seed", "clients"))
+
+
 def mesh_num_devices(mesh) -> int:
     n = 1
     for s in mesh.devices.shape:

@@ -134,6 +134,24 @@ def param_shardings(params_abs: Any, mesh: Mesh, edge_stacked: bool = False
     return jax.tree_util.tree_map_with_path(rule, params_abs)
 
 
+def dim_shardings(specs: Any, mesh: Mesh, axes: Any) -> Any:
+    """NamedShardings placing mesh axis names on fixed array dims.
+
+    ``axes`` maps dim index -> mesh axis name (e.g. ``{0: "seed",
+    1: "clients"}`` for per-seed client-sharded statics in the cohort
+    engine, ``repro.mesh.topology``); dims beyond a leaf's rank or not
+    divisible by the axis size are left replicated."""
+
+    def rule(leaf):
+        spec = [None] * len(leaf.shape)
+        for d, a in axes.items():
+            if d < len(leaf.shape) and leaf.shape[d] % mesh.shape[a] == 0:
+                spec[d] = a
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(rule, specs)
+
+
 def _batch_axes(mesh: Mesh, dim: int) -> Optional[Tuple[str, ...]]:
     axes = [a for a in ("pod", "data") if a in mesh.shape]
     chosen = []

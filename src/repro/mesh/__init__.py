@@ -1,0 +1,24 @@
+"""Client-axis sharded cohort engine: the tier-4 fused HFL loop
+partitioned over a ``("seed", "clients")`` device mesh.
+
+Everything client-indexed — statics, mobility positions, per-round
+draws, CC-MAB state, the candidate tables the P2/P3 solvers walk — is
+sharded over the ``("clients",)`` mesh axis; everything ES-indexed
+(edge models, budgets, packed slots) stays replicated. The counter-based
+draw schedule (``repro.sim.draws``) makes shard-local generation bitwise
+equal to the dense stream, and the cross-shard merge walk
+(``repro.mesh.select``) makes hierarchical selection bitwise equal to
+the dense greedy solvers, so sharding is a pure capacity move: same
+numbers, ``num_clients`` bounded by mesh memory instead of one device.
+"""
+from repro.mesh.engine import ShardDims, sharded_block_device
+from repro.mesh.runner import sweep_sharded
+from repro.mesh.select import (hier_flgreedy_assign, hier_greedy_assign,
+                               merge_over_shards, shard_assign,
+                               shard_segments)
+from repro.mesh.topology import cohort_mesh, shard_layouts
+
+__all__ = ["ShardDims", "cohort_mesh", "hier_flgreedy_assign",
+           "hier_greedy_assign", "merge_over_shards", "shard_assign",
+           "shard_layouts", "shard_segments", "sharded_block_device",
+           "sweep_sharded"]

@@ -1,0 +1,51 @@
+"""Cohort-mesh construction and input staging for the sharded engine.
+
+Thin glue over the production-launch helpers (``repro.launch.mesh``,
+``repro.launch.sharding``): ``cohort_mesh`` builds the
+``("seed", "clients")`` mesh and validates it against the visible
+devices, ``shard_layouts`` derives the NamedShardings that stage each
+input of the sharded tier-4 block — client-indexed arrays on
+``"clients"``, per-seed arrays on ``"seed"``, everything else
+replicated. On CPU, set ``XLA_FLAGS
+--xla_force_host_platform_device_count=<n>`` *before importing jax* to
+expose a forced host mesh (the CI parity step runs with 8).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.launch.mesh import make_cohort_mesh, mesh_num_devices
+from repro.launch.sharding import dim_shardings
+
+
+def cohort_mesh(seed_shards: int = 1, client_shards: int = 1):
+    """The ``(seed_shards, client_shards)`` mesh over
+    ``("seed", "clients")``, validated against the device count."""
+    need = seed_shards * client_shards
+    have = len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"ShardSpec wants {seed_shards}x{client_shards} = {need} "
+            f"devices but only {have} are visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before "
+            "importing jax")
+    mesh = make_cohort_mesh(seed_shards, client_shards)
+    assert mesh_num_devices(mesh) == need
+    return mesh
+
+
+def shard_layouts(mesh, *, seed_client: Any = None, seed_only: Any = None,
+                  client_only: Any = None, replicated: Any = None) -> tuple:
+    """NamedShardings for the four staging layouts of the sharded block.
+
+    Each argument is a pytree of abstract or concrete arrays; returns
+    the matching pytrees of shardings in the same order. ``seed_client``
+    leaves carry (S, N, ...) (dim0 -> "seed", dim1 -> "clients"),
+    ``seed_only`` (S, ...), ``client_only`` (N, ...), ``replicated``
+    anything."""
+    return (dim_shardings(seed_client, mesh, {0: "seed", 1: "clients"}),
+            dim_shardings(seed_only, mesh, {0: "seed"}),
+            dim_shardings(client_only, mesh, {0: "clients"}),
+            dim_shardings(replicated, mesh, {}))

@@ -95,10 +95,17 @@ class COCS(FunctionalPolicy):
         z, h = self._params()
         return self.select_with_params(state, rd, budgets, h, z)
 
-    def select_with_params(self, state: COCSState, rd, budgets, h, z):
-        """``select_with_budgets`` with the hypercube resolution ``h`` and
-        exponent ``z`` as explicit (possibly traced) data — the batched
-        h_t/alpha config-axis path. ``state`` may be ``init_padded``."""
+    def pair_values(self, state: COCSState, rd, h=None, z=None):
+        """The optimistic score table ``select_with_params`` feeds the
+        greedy solver, as ``(values, under)`` (both (N, M)).
+
+        Every op is row-local in the client axis — gathers into the
+        per-(client, ES) lattice, UCB bonus arithmetic, the ``k(t)``
+        threshold — so the sharded cohort engine (``repro.mesh``) calls
+        this on shard-local state/round rows and gets the bitwise row
+        slice of the dense table, feeding the cross-shard merge walk."""
+        if h is None or z is None:
+            z, h = self._params()
         cubes = self._cubes(rd.contexts, h)
         counts = self._gather(state.counters, cubes)           # (N, M)
         est = self._gather(state.p_hat, cubes)                 # (N, M)
@@ -110,7 +117,14 @@ class COCS(FunctionalPolicy):
             2.0 * jnp.log(tf) / jnp.maximum(counts, 1))
         optimistic = jnp.where(counts == 0, 1.0,
                                jnp.minimum(est + bonus, 1.0))
-        values = jnp.where(under, optimistic, est)
+        return jnp.where(under, optimistic, est), under
+
+    def select_with_params(self, state: COCSState, rd, budgets, h, z):
+        """``select_with_budgets`` with the hypercube resolution ``h`` and
+        exponent ``z`` as explicit (possibly traced) data — the batched
+        h_t/alpha config-axis path. ``state`` may be ``init_padded``."""
+        values, under = self.pair_values(state, rd, h, z)
+        eligible = jnp.asarray(rd.eligible, bool)
         costs = jnp.asarray(rd.costs, values.dtype)
         budgets = jnp.asarray(budgets, values.dtype)
         if self.spec.sqrt_utility:
@@ -123,14 +137,12 @@ class COCS(FunctionalPolicy):
                                    tile=self.kernel_tile)
         return assign, {"explored": under.any()}
 
-    def telemetry_tap(self, state: COCSState, rd) -> dict:
-        """CC-MAB confidence profile at select time (repro.obs): the
-        eligible-pair mean of the UCB width the solver saw — the exact
-        ``bonus_scale * sqrt(2 log t / count)`` term of
-        ``select_with_params``, optimistic 1.0 for unvisited cubes — and
-        the count of under-explored eligible pairs (the Theorem-2
-        ``k(t)`` threshold). Pure gathers on existing state: no draw,
-        no state change."""
+    def telemetry_sums(self, state: COCSState, rd) -> dict:
+        """Row-local partial sums behind ``telemetry_tap``: the UCB-width
+        sum over eligible pairs, the eligible-pair count and the
+        under-explored count. Client-shardable — the sharded engine
+        (``repro.mesh``) psums these over the ("clients",) axis before
+        forming the same ratios the dense tap reports."""
         z, h = self._params()
         cubes = self._cubes(rd.contexts, h)
         counts = self._gather(state.counters, cubes)           # (N, M)
@@ -140,11 +152,23 @@ class COCS(FunctionalPolicy):
         bonus = self.bonus_scale * jnp.sqrt(
             2.0 * jnp.log(tf) / jnp.maximum(counts, 1))
         width = jnp.where(counts == 0, 1.0, jnp.minimum(bonus, 1.0))
-        n_el = jnp.maximum(jnp.sum(eligible), 1)
         under = eligible & (counts <= self.k_of_t(t1, z))
-        return {"ucb_width": jnp.sum(jnp.where(eligible, width, 0.0))
-                / n_el,
-                "underexplored": jnp.sum(under).astype(jnp.float32)}
+        return {"width_sum": jnp.sum(jnp.where(eligible, width, 0.0)),
+                "eligible": jnp.sum(eligible),
+                "under": jnp.sum(under)}
+
+    def telemetry_tap(self, state: COCSState, rd) -> dict:
+        """CC-MAB confidence profile at select time (repro.obs): the
+        eligible-pair mean of the UCB width the solver saw — the exact
+        ``bonus_scale * sqrt(2 log t / count)`` term of
+        ``select_with_params``, optimistic 1.0 for unvisited cubes — and
+        the count of under-explored eligible pairs (the Theorem-2
+        ``k(t)`` threshold). Pure gathers on existing state: no draw,
+        no state change."""
+        sums = self.telemetry_sums(state, rd)
+        n_el = jnp.maximum(sums["eligible"], 1)
+        return {"ucb_width": sums["width_sum"] / n_el,
+                "underexplored": sums["under"].astype(jnp.float32)}
 
     def update(self, state: COCSState, rd, assign, aux=None) -> COCSState:
         _, h = self._params()

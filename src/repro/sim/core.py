@@ -112,21 +112,31 @@ def _latency(spec: SimSpec, bandwidth, compute, fad_dt, fad_ut, g0):
                    update_bits=spec.update_bits, workload=spec.workload)
 
 
-def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
+def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t,
+              dr: Optional[draws.RoundDraws] = None,
+              fd: Optional[draws.FaultDraws] = None,
               ) -> Tuple[jax.Array, SimRound]:
     """One round of the network simulator: ``(pos, t) -> (pos', round)``.
 
     Pure and shape-static: the only carried state is the (N, 2) mobility
     positions; all randomness is re-derived from ``(seed, t)``.
+
+    ``dr``/``fd`` override the internally derived draws: the sharded
+    cohort engine (``repro.mesh``) passes shard-local slices
+    (``draws.shard_round_draws``) together with shard-local ``statics``/
+    ``pos`` rows, and every stage below is row-local, so the shard output
+    is a bitwise row-slice of the dense round. The client count is taken
+    from ``pos`` (local rows), never ``spec.num_clients`` (global).
     """
-    n, m = spec.num_clients, spec.num_edge_servers
+    n, m = pos.shape[0], spec.num_edge_servers
     t = jnp.asarray(t, jnp.int32)
     analytic = spec.true_p == "analytic"
-    # analytic mode draws zero MC fading pairs: the (K, N, M) tensors are
-    # the round generator's dominant cost, and the tags are counter-based
-    # so skipping them never shifts any other stream
-    dr = draws.round_draws(seed, t, n, m,
-                           0 if analytic else spec.mc_true_p)
+    if dr is None:
+        # analytic mode draws zero MC fading pairs: the (K, N, M) tensors
+        # are the round generator's dominant cost, and the tags are
+        # counter-based so skipping them never shifts any other stream
+        dr = draws.round_draws(seed, t, n, m,
+                               0 if analytic else spec.mc_true_p)
     pos = jnp.clip(pos + spec.mobility * dr.move, -spec.area, spec.area)
     es = _es_pos(spec)
     bandwidth = jnp.clip(statics.base_bw * (1 + spec.jitter * dr.bw_n),
@@ -158,7 +168,8 @@ def sim_round(spec: SimSpec, seed, statics: SimStatics, pos, t
         # identical fault events as the host oracle: shared counter-based
         # draws, float32 thresholds on both sides (repro.sim.faults)
         from repro.sim.faults import apply_latency_faults, apply_outage
-        fd = draws.fault_draws(seed, t, n, m)
+        if fd is None:
+            fd = draws.fault_draws(seed, t, n, m)
         tau = apply_latency_faults(spec.faults, tau, fd.strag_u,
                                    fd.strag_e, fd.drop_u, jnp)
         eligible = apply_outage(spec.faults, eligible, fd.out_u, jnp)

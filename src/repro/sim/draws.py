@@ -28,6 +28,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax._src.prng import threefry2x32_p
 
 # the randomness contract, stamped into RunResult provenance (repro.api):
 # bump the suffix if tags, key derivation or draw shapes ever change
@@ -123,6 +125,113 @@ def fault_draws(seed, t, n: int, m: int) -> FaultDraws:
         strag_e=jax.random.exponential(sub(_FSTRAG_E), (n,)),
         out_u=jax.random.uniform(sub(_FOUT), (m,)),
         corr_u=jax.random.uniform(sub(_FCORR), (n,)),
+    )
+
+
+# -- shard-addressable slices of the dense streams --------------------------
+#
+# ``jax.random.uniform(key, shape)`` hashes the flat counters
+# ``0 .. prod(shape)`` through threefry2x32 (two counters per invocation:
+# ``i`` and ``i + ceil(total/2)``). Because the schedule is counter-based,
+# a client shard can evaluate the hash at exactly *its* flat indices and
+# recover a bitwise-identical slice of the dense draw tensor without ever
+# materializing the full ``(N, ...)`` array. These helpers replicate the
+# (non-partitionable) threefry lowering of ``jax.random`` bit-for-bit;
+# ``tests/test_mesh_select.py`` pins the parity.
+
+def _bits_at(key, flat, total: int):
+    """threefry2x32 bits at flat counter positions ``flat`` of a dense
+    ``random_bits(key, 32, total)`` stream (uint32)."""
+    k1 = lax.convert_element_type(key[0], jnp.uint32)
+    k2 = lax.convert_element_type(key[1], jnp.uint32)
+    half = (total + 1) // 2
+    f = jnp.asarray(flat, jnp.uint32)
+    lo_half = jnp.asarray(flat) < half
+    # dense stream pairs counter i with i + half (odd totals drop the
+    # final odd counter's second half-word, mirroring threefry_2x32)
+    c2_lo = jnp.where(jnp.asarray(flat) + half < total,
+                      f + np.uint32(half), np.uint32(0))
+    c1 = jnp.where(lo_half, f, f - np.uint32(half))
+    c2 = jnp.where(lo_half, c2_lo, f)
+    o1, o2 = threefry2x32_p.bind(k1, k2, c1.ravel(), c2.ravel())
+    return jnp.where(lo_half, o1.reshape(f.shape), o2.reshape(f.shape))
+
+
+def uniform_at(key, flat, total: int, lo=0.0, hi=1.0):
+    """Slice of ``jax.random.uniform(key, shape, minval=lo, maxval=hi)``
+    (f32, ``total = prod(shape)``) at flat positions ``flat``."""
+    bits = _bits_at(key, flat, total)
+    fbits = (bits >> np.uint32(9)) | np.uint32(0x3F800000)
+    fl = lax.bitcast_convert_type(fbits, jnp.float32) - np.float32(1.0)
+    return lax.max(np.float32(lo),
+                   fl * (np.float32(hi) - np.float32(lo)) + np.float32(lo))
+
+
+def normal_at(key, flat, total: int):
+    """Slice of ``jax.random.normal(key, shape)`` (f32)."""
+    lo = np.nextafter(np.float32(-1.0), np.float32(0.0), dtype=np.float32)
+    u = uniform_at(key, flat, total, lo=lo, hi=1.0)
+    return np.float32(np.sqrt(2)) * lax.erf_inv(u)
+
+
+def exponential_at(key, flat, total: int):
+    """Slice of ``jax.random.exponential(key, shape)`` (f32)."""
+    return -jnp.log1p(-uniform_at(key, flat, total))
+
+
+def _row_block(lo, n_local: int, cols: int, n: int):
+    """Flat counters for rows ``lo .. lo+n_local`` of a dense ``(n, cols)``
+    tensor (contiguous in the flat stream)."""
+    del n  # rows are contiguous regardless of total row count
+    start = jnp.asarray(lo, jnp.int32) * cols
+    return start + jnp.arange(n_local * cols,
+                              dtype=jnp.int32).reshape(n_local, cols)
+
+
+def shard_round_draws(seed, t, n: int, m: int, k_mc: int,
+                      lo, n_local: int) -> RoundDraws:
+    """Rows ``lo .. lo+n_local`` of ``round_draws(seed, t, n, m, k_mc)``,
+    bitwise, without materializing any dense ``(n, ...)`` tensor.
+
+    ``lo`` may be traced (e.g. ``axis_index("clients") * n_local`` inside
+    ``shard_map``); ``n_local`` must be static.
+    """
+    k = round_key(seed, t)
+    sub = functools.partial(jax.random.fold_in, k)
+    row1 = _row_block(lo, n_local, 1, n)[:, 0]
+    # (k_mc, n, m) slices along axis 1 are strided in the flat stream
+    mc_idx = (jnp.arange(max(k_mc, 1), dtype=jnp.int32)[:, None, None] * (n * m)
+              + _row_block(lo, n_local, m, n)[None])
+    def mc(tag):
+        if k_mc == 0:
+            return jnp.zeros((0, n_local, m), jnp.float32)
+        return exponential_at(sub(tag), mc_idx, k_mc * n * m)
+    return RoundDraws(
+        move=normal_at(sub(_MOVE), _row_block(lo, n_local, 2, n), n * 2),
+        bw_n=normal_at(sub(_BWJ), row1, n),
+        comp_n=normal_at(sub(_COMPJ), row1, n),
+        fad_dt=exponential_at(sub(_FDT), _row_block(lo, n_local, m, n), n * m),
+        fad_ut=exponential_at(sub(_FUT), _row_block(lo, n_local, m, n), n * m),
+        mc_dt=mc(_MCDT),
+        mc_ut=mc(_MCUT),
+    )
+
+
+def shard_fault_draws(seed, t, n: int, m: int, lo, n_local: int) -> FaultDraws:
+    """Rows ``lo .. lo+n_local`` of ``fault_draws(seed, t, n, m)``, bitwise.
+
+    ``out_u`` is an ES-axis (M,) stream, small and identical on every
+    shard, so it is drawn dense (replicated) rather than sliced.
+    """
+    k = round_key(seed, t)
+    sub = functools.partial(jax.random.fold_in, k)
+    row1 = _row_block(lo, n_local, 1, n)[:, 0]
+    return FaultDraws(
+        drop_u=uniform_at(sub(_FDROP), row1, n),
+        strag_u=uniform_at(sub(_FSTRAG_U), row1, n),
+        strag_e=exponential_at(sub(_FSTRAG_E), row1, n),
+        out_u=jax.random.uniform(sub(_FOUT), (m,)),
+        corr_u=uniform_at(sub(_FCORR), row1, n),
     )
 
 

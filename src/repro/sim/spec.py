@@ -29,8 +29,9 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Dict, Optional, Tuple
 
-from repro.configs.paper_hfl import (BURSTY_1K, METROPOLIS_1K, MNIST_CONVEX,
-                                     HFLExperimentConfig)
+from repro.configs.paper_hfl import (BURSTY_1K, METROPOLIS_100K,
+                                     METROPOLIS_1K, METROPOLIS_1M,
+                                     MNIST_CONVEX, HFLExperimentConfig)
 from repro.envs.scenarios import SCENARIOS, ScenarioSpec, tier_edges
 from repro.sim.faults import FaultSpec
 
@@ -147,11 +148,24 @@ METROPOLIS_SCEN = ScenarioSpec(name="metropolis-1k", mobility=0.3,
 BURSTY_SCEN = ScenarioSpec(name="bursty-arrival", mobility=0.2, jitter=0.3,
                            arrival_period=40, arrival_duty=0.35)
 
+# mesh-scale cohorts (10^5-10^6 clients, ``repro.mesh``): duty-cycled
+# arrival waves so only a fraction of the metropolis is reachable per
+# round — the regime where budgeted selection over a sharded client
+# axis actually matters
+METROPOLIS_100K_SCEN = ScenarioSpec(name="metropolis-100k", mobility=0.3,
+                                    jitter=0.4, arrival_period=50,
+                                    arrival_duty=0.3)
+METROPOLIS_1M_SCEN = ScenarioSpec(name="metropolis-1m", mobility=0.3,
+                                  jitter=0.4, arrival_period=80,
+                                  arrival_duty=0.25)
+
 # name -> (default experiment config, scenario knobs)
 PRESETS: Dict[str, Tuple[HFLExperimentConfig, ScenarioSpec]] = {
     **{name: (MNIST_CONVEX, scen) for name, scen in SCENARIOS.items()},
     "metropolis-1k": (METROPOLIS_1K, METROPOLIS_SCEN),
     "bursty-arrival": (BURSTY_1K, BURSTY_SCEN),
+    "metropolis-100k": (METROPOLIS_100K, METROPOLIS_100K_SCEN),
+    "metropolis-1m": (METROPOLIS_1M, METROPOLIS_1M_SCEN),
 }
 
 

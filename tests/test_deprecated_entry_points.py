@@ -97,3 +97,64 @@ def test_allowlist_is_not_stale():
         mentions = set(_mentions(name))
         stale = [f for f in allowed if f not in mentions]
         assert not stale, f"{name}: allowlisted but unreferenced: {stale}"
+
+
+# -- orphaned-module quarantine ----------------------------------------------
+# Modules with no production importer: kept for their own tests and
+# reports only. Importing one anywhere else fails here — dead surface
+# must not accrete silently. Graduation out of this list requires real
+# wiring: ``launch.mesh``/``launch.sharding`` left it when ``repro.mesh``
+# built the sharded tier-4 engine on top of them (``repro.mesh.topology``).
+
+QUARANTINED = {
+    "repro.serving": {
+        "src/repro/serving/engine.py",      # the module itself
+        "src/repro/serving/__init__.py",
+        "tests/test_serving_router.py",     # its own test
+    },
+    "repro.roofline": {
+        "src/repro/roofline/analysis.py",
+        "src/repro/roofline/__init__.py",
+        "src/repro/launch/dryrun.py",       # dry-run report plumbing
+        "tests/test_sharding_roofline.py",
+        "benchmarks/roofline_report.py",    # offline report generator
+    },
+    "repro.launch.dryrun": {
+        "src/repro/launch/dryrun.py",       # python -m entry point only
+    },
+}
+
+
+def _imports_module(tree, module: str) -> bool:
+    prefix = module + "."
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and (
+                node.module == module or node.module.startswith(prefix)):
+            return True
+        if isinstance(node, ast.Import) and any(
+                a.name == module or a.name.startswith(prefix)
+                for a in node.names):
+            return True
+    return False
+
+
+def test_quarantined_modules_gain_no_importers():
+    violations = {}
+    for module, allowed in QUARANTINED.items():
+        hits = []
+        for d in SCAN_DIRS:
+            for path in sorted((ROOT / d).rglob("*.py")):
+                rel = str(path.relative_to(ROOT))
+                if rel.startswith("src/" +
+                                  module.replace(".", "/") + "/"):
+                    continue                 # the module's own files
+                tree = ast.parse(path.read_text(errors="replace"))
+                if _imports_module(tree, module):
+                    hits.append(rel)
+        extra = [f for f in hits if f not in allowed]
+        if extra:
+            violations[module] = extra
+    assert not violations, (
+        "quarantined (orphaned) module gained an importer — wire it "
+        "into a production path and graduate it out of QUARANTINED, or "
+        f"drop the import: {violations}")
